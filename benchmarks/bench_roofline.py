@@ -1,0 +1,51 @@
+"""§Roofline harness: aggregate the dry-run JSONs into the roofline table.
+
+Reads experiments/dryrun/*.json (produced by ``repro.launch.dryrun``; see
+scripts/dryrun_sweep.sh) and prints the per-(arch x shape x mesh) three-term
+roofline with dominant-term and useful-flops columns — the source of
+EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from .common import csv_row
+
+
+def load_records(out_dir: str = "experiments/dryrun"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def run(out_dir: str = "experiments/dryrun", verbose=True):
+    recs = load_records(out_dir)
+    if verbose:
+        print(csv_row("arch", "shape", "mesh", "strategy", "compute_ms",
+                      "memory_ms", "collective_ms", "dominant", "useful_ratio",
+                      "roofline_frac", "fits_hbm", "args_GiB"))
+        for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+            print(csv_row(
+                r["arch"], r["shape"], r["mesh"], r["strategy"],
+                round(r["compute_s"] * 1e3, 2), round(r["memory_s"] * 1e3, 2),
+                round(r["collective_s"] * 1e3, 2), r["dominant"],
+                round(r["useful_ratio"], 3), round(r["roofline_frac"], 4),
+                r["fits_hbm"], round(r["arg_bytes_per_dev"] / 2**30, 2)))
+    return recs
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="experiments/dryrun")
+    ap.add_argument("--quick", action="store_true")  # same either way
+    args = ap.parse_args()
+    run(args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

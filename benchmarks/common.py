@@ -1,0 +1,46 @@
+"""Shared benchmark utilities: timing, dataset stand-ins, CSV output.
+
+The paper's datasets (SUSY, SKIN, IJCNN, ADULT, WEB, PHISHING) are not
+downloadable in this offline container; each is represented by a synthetic
+generator with the same feature dimensionality and qualitatively similar
+class structure.  Sizes are scaled to CPU-feasible n (recorded per row) —
+relative timings between solvers are the quantity of interest, matching the
+paper's methodology of comparing methods on identical streams.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.data.synthetic import make_blobs, make_susy_like, make_two_moons
+
+# name -> (n_features, generator, gamma, C-style lambda)
+DATASETS = {
+    # dims follow paper Table 1
+    "SUSY": (18, lambda k, n: make_susy_like(k, n, 18), 2.0**-7, 1e-5),
+    "SKIN": (3, lambda k, n: make_blobs(k, n, 3, sep=3.0, noise=0.8), 2.0**-7, 1e-5),
+    "IJCNN": (22, lambda k, n: make_two_moons(k, n, noise=0.2, dim=22), 2.0**1, 1e-5),
+    "ADULT": (123, lambda k, n: make_blobs(k, n, 123, sep=0.6, noise=1.3), 2.0**-7, 1e-5),
+    "WEB": (300, lambda k, n: make_blobs(k, n, 300, sep=2.0, noise=1.0), 2.0**-5, 1e-4),
+    "PHISHING": (68, lambda k, n: make_blobs(k, n, 68, sep=1.5, noise=1.0), 2.0**3, 1e-4),
+}
+
+
+def time_fn(fn, *args, warmup: int = 1, repeats: int = 3):
+    """Median wall-clock seconds of fn(*args) (block_until_ready-aware)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2], out
+
+
+def csv_row(*cols) -> str:
+    return ",".join(str(c) for c in cols)

@@ -1,0 +1,65 @@
+"""Benchmark runner: one function per paper table/figure.
+
+``python -m benchmarks.run``          — quick pass over every benchmark
+``python -m benchmarks.run --full``   — paper-scale settings (slow on CPU)
+
+Prints ``name,us_per_call,derived`` CSV summary lines per benchmark plus the
+benchmark's own CSV.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    quick = not args.full
+
+    from . import (bench_fig3_breakdown, bench_roofline, bench_table2_accuracy,
+                   bench_table3_speedup)
+
+    summary = []
+
+    print("== Table 2: accuracy parity (GSS vs lookups) ==", flush=True)
+    t0 = time.perf_counter()
+    rows = (bench_table2_accuracy.run(n=1200, budgets=(50,), epochs=1,
+                                      seeds=(0,), datasets=["SUSY", "IJCNN"])
+            if quick else bench_table2_accuracy.run())
+    accs = [r[3] for r in rows]
+    summary.append(("table2_accuracy", (time.perf_counter() - t0) * 1e6,
+                    f"min_acc={min(accs):.3f}"))
+
+    print("\n== Table 3: training-time speedup + decision stats ==", flush=True)
+    t0 = time.perf_counter()
+    rows = (bench_table3_speedup.run(n=1500, budgets=(50,), epochs=1,
+                                     datasets=["SUSY", "ADULT"],
+                                     stats_steps=400)
+            if quick else bench_table3_speedup.run())
+    imps = [r[6] for r in rows if isinstance(r[6], (int, float))]
+    summary.append(("table3_speedup", (time.perf_counter() - t0) * 1e6,
+                    f"improv_wd_pct={imps}"))
+
+    print("\n== Fig 3: merge-time breakdown ==", flush=True)
+    t0 = time.perf_counter()
+    rows = bench_fig3_breakdown.run(budget=100 if quick else 500)
+    lookup_us = [r[1] for r in rows if r[0] == "lookup-wd"][0]
+    gss_us = [r[1] for r in rows if r[0] == "gss"][0]
+    summary.append(("fig3_breakdown", lookup_us,
+                    f"solverA_gss/lookup={gss_us / max(lookup_us, 1e-9):.2f}x"))
+
+    print("\n== Roofline table (from dry-run artifacts) ==", flush=True)
+    t0 = time.perf_counter()
+    recs = bench_roofline.run()
+    summary.append(("roofline_cells", (time.perf_counter() - t0) * 1e6,
+                    f"n_cells={len(recs)}"))
+
+    print("\nname,us_per_call,derived")
+    for name, us, derived in summary:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

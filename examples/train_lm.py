@@ -1,0 +1,50 @@
+"""End-to-end LM training driver on the repro substrate.
+
+Default (CPU-feasible here): a ~27M-param llama-family model, 300 steps on
+the synthetic bigram stream — loss must approach the stream's bigram
+entropy floor.  ``--full`` trains the real smollm_360m config (TPU-scale;
+the step function is identical, only the config changes).
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300] [--full]
+"""
+import argparse
+import dataclasses
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.configs import get
+from repro.launch.train import train_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch-size", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_ckpt")
+    args = ap.parse_args()
+
+    cfg = get("smollm_360m")
+    if not args.full:
+        # ~27M params: same family, CPU-trainable in minutes
+        cfg = dataclasses.replace(
+            cfg, n_layers=6, d_model=384, n_heads=6, n_kv_heads=2, d_ff=1024,
+            head_dim=64, vocab_size=2048, dtype="float32", attn_chunk=4096)
+    print(f"training {cfg.name}: {cfg.param_count()/1e6:.1f}M params, "
+          f"{args.steps} steps, batch {args.batch_size} x {args.seq_len}")
+
+    metrics = train_loop(cfg, steps=args.steps, batch_size=args.batch_size,
+                         seq_len=args.seq_len, ckpt_dir=args.ckpt_dir,
+                         ckpt_every=100, lr=3e-3, log_every=20)
+    first = sum(metrics["losses"][:10]) / 10
+    last = sum(metrics["losses"][-10:]) / 10
+    print(f"loss: first10={first:.4f} last10={last:.4f} "
+          f"bigram floor={metrics['bigram_floor']:.4f}")
+    assert last < first - 0.5, "loss did not drop"
+    print("OK: loss dropped toward the bigram floor")
+
+
+if __name__ == "__main__":
+    main()

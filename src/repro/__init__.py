@@ -1,0 +1,3 @@
+"""repro: Budgeted SGD SVM training with precomputed golden section search,
+built as a multi-pod JAX framework (see DESIGN.md)."""
+__version__ = "0.1.0"

@@ -1,0 +1,1 @@
+from .checkpointer import all_steps, latest_step, load, restore_latest, save, save_async

@@ -1,0 +1,6 @@
+"""Architecture configs: one module per assigned arch + the registry."""
+from .base import ArchConfig, MLACfg, MoECfg, SSMCfg
+from .registry import ARCH_NAMES, SHAPES, all_cells, cell_applicable, get, get_smoke
+
+__all__ = ["ArchConfig", "MLACfg", "MoECfg", "SSMCfg", "ARCH_NAMES", "SHAPES",
+           "all_cells", "cell_applicable", "get", "get_smoke"]

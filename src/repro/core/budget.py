@@ -1,0 +1,133 @@
+"""Budget maintenance by merging (paper Alg. 1), with four selectable solvers.
+
+Methods (paper §4):
+  * ``gss``         — golden section search at runtime precision eps = 0.01
+  * ``gss-precise`` — golden section search at eps = 1e-10 (reference)
+  * ``lookup-h``    — bilinear table lookup of h(m, kappa), WD computed exactly
+  * ``lookup-wd``   — bilinear table lookup of WD_norm(m, kappa) for scoring;
+                      h looked up only for the winning pair (fewest flops)
+
+The SV set lives in fixed-size arrays (``slots = budget + batch``) with an
+``count`` watermark; inactive slots are masked.  One maintenance event:
+
+  1. fix x_a := the active SV with minimal |alpha|  (paper's O(B) heuristic)
+  2. score every active same-sign candidate x_b via the selected solver
+  3. merge the winning pair into z = h x_a + (1-h) x_b, compact the slots
+
+All steps are jit-safe (masked argmin / scatter, no dynamic shapes).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import merge_math
+from .lookup import MergeLookupTable
+from ..kernels import ops as kops
+
+METHODS = ("gss", "gss-precise", "lookup-h", "lookup-wd")
+_BIG = jnp.inf
+
+
+class MaintenanceInfo(NamedTuple):
+    """Diagnostics for tests / paper Table 3 statistics."""
+
+    i_min: jax.Array      # slot of the fixed (min-|alpha|) partner
+    j_star: jax.Array     # slot of the chosen merge partner
+    h_star: jax.Array     # merge coefficient used
+    wd_star: jax.Array    # weight degradation of the executed merge
+    merged: jax.Array     # bool: True = merged, False = removal fallback
+
+
+def candidate_scores(alpha, kappa_row, i_min, valid, method: str,
+                     table: MergeLookupTable | None):
+    """Per-candidate (WD, h) for merging slot ``i_min`` with each slot j.
+
+    ``kappa_row[j] = k(x_{i_min}, x_j)``.  Invalid candidates get WD = +inf.
+    ``method`` is static, so exactly one solver is traced.
+    """
+    a_min = alpha[i_min]
+    denom = a_min + alpha
+    # Same-sign pairs have m strictly inside (0, 1); clip keeps masked-out
+    # entries finite so they cannot poison the argmin with NaNs.
+    m = jnp.clip(a_min / jnp.where(denom == 0, 1.0, denom), 0.0, 1.0)
+    kap = jnp.clip(kappa_row, 0.0, 1.0)
+
+    if method == "lookup-wd":
+        wd = (a_min + alpha) ** 2 * table.lookup_wd_norm(m, kap)
+        h = table.lookup_h(m, kap)
+    elif method == "lookup-h":
+        h = table.lookup_h(m, kap)
+        a_z = merge_math.merge_alpha_z(a_min, alpha, kap, h)
+        wd = merge_math.weight_degradation(a_min, alpha, kap, a_z)
+    elif method in ("gss", "gss-precise"):
+        eps = merge_math.EPS_STANDARD if method == "gss" else merge_math.EPS_PRECISE
+        h = merge_math.golden_section_search(m, kap, eps=eps)
+        a_z = merge_math.merge_alpha_z(a_min, alpha, kap, h)
+        wd = merge_math.weight_degradation(a_min, alpha, kap, a_z)
+    else:  # pragma: no cover - guarded by METHODS
+        raise ValueError(f"unknown method {method!r}; expected one of {METHODS}")
+
+    wd = jnp.where(valid, wd, _BIG)
+    return wd, h
+
+
+@partial(jax.jit, static_argnames=("method",))
+def maintenance_step(sv_x, alpha, count, gamma, method: str = "lookup-wd",
+                     table: MergeLookupTable | None = None):
+    """One budget-maintenance event: merge two SVs (or remove one), count -= 1.
+
+    Returns ``(sv_x, alpha, count, MaintenanceInfo)``.
+    """
+    slots = alpha.shape[0]
+    idx = jnp.arange(slots)
+    active = idx < count
+
+    # 1. fixed partner: active SV with minimal |alpha| (paper Alg. 1 line 2).
+    abs_a = jnp.where(active, jnp.abs(alpha), _BIG)
+    i_min = jnp.argmin(abs_a)
+    a_min = alpha[i_min]
+
+    # 2. kappa row k(x_{i_min}, x_j) — the rbf kernel hot spot.
+    kappa_row = kops.rbf_row(sv_x, sv_x[i_min], gamma)
+
+    same_sign = alpha * a_min > 0
+    valid = active & same_sign & (idx != i_min)
+    wd, h = candidate_scores(alpha, kappa_row, i_min, valid, method, table)
+
+    j_star = jnp.argmin(wd)
+    has_partner = jnp.isfinite(wd[j_star])
+
+    last = count - 1
+
+    def do_merge(args):
+        sv_x, alpha = args
+        h_star = h[j_star]
+        kap = jnp.clip(kappa_row[j_star], 0.0, 1.0)
+        z = merge_math.merge_point(h_star, sv_x[i_min], sv_x[j_star])
+        a_z = merge_math.merge_alpha_z(a_min, alpha[j_star], kap, h_star)
+        lo = jnp.minimum(i_min, j_star)   # lo <= count-2, safe to overwrite
+        hi = jnp.maximum(i_min, j_star)
+        sv_x = sv_x.at[lo].set(z)
+        sv_x = sv_x.at[hi].set(sv_x[last])        # compact: move last into hole
+        alpha = alpha.at[lo].set(a_z)
+        alpha = alpha.at[hi].set(alpha[last])
+        alpha = alpha.at[last].set(0.0)
+        return sv_x, alpha, h_star, wd[j_star]
+
+    def do_remove(args):
+        # No same-sign partner exists: fall back to removing the min-|alpha| SV.
+        sv_x, alpha = args
+        sv_x = sv_x.at[i_min].set(sv_x[last])
+        alpha = alpha.at[i_min].set(alpha[last])
+        alpha = alpha.at[last].set(0.0)
+        return sv_x, alpha, jnp.asarray(1.0, alpha.dtype), a_min**2
+
+    sv_x, alpha, h_star, wd_star = jax.lax.cond(has_partner, do_merge, do_remove,
+                                                (sv_x, alpha))
+    info = MaintenanceInfo(i_min=i_min, j_star=j_star, h_star=h_star,
+                           wd_star=wd_star, merged=has_partner)
+    return sv_x, alpha, count - 1, info

@@ -1,0 +1,145 @@
+"""Precomputed merge tables with bilinear interpolation (the paper's contribution).
+
+``h(m, kappa)`` and ``WD_norm(m, kappa)`` are precomputed once on a regular
+``G x G`` grid over the unit square with high-precision golden section search
+(eps = 1e-10, paper §3), then evaluated at runtime by a bilinearly-interpolated
+lookup — a plug-in replacement for the per-candidate iterative search.
+
+The table is tiny (400x400 fp32 = 640 KB per function) and lives comfortably in
+TPU VMEM; see ``repro.kernels.merge_lookup`` for the fused Pallas kernel that
+scores all budget-maintenance candidates against the table in one pass.
+
+``build_lookup_table`` is generic over the solved function so the pattern
+"replace an inner iterative solver with an interpolated table" is reusable
+beyond the SVM merge problem (e.g. ``core.budgeted_kv``).
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import merge_math
+
+DEFAULT_GRID = 400  # paper: "in our experiments we use a grid of size 400x400"
+
+
+def build_merge_tables(grid_size: int = DEFAULT_GRID, eps: float = merge_math.EPS_PRECISE):
+    """Precompute h(m, kappa) and WD_norm(m, kappa) on a grid.
+
+    Returns ``(h_table, wd_table)`` of shape ``(grid_size, grid_size)`` indexed
+    ``[i_m, j_kappa]`` with grid points ``linspace(0, 1, grid_size)`` on both
+    axes.  One-time *offline* cost (exactly as in the paper): grid_size^2
+    golden section searches at eps=1e-10, run vectorized in float64 numpy —
+    fp32 GSS cannot localize a smooth argmax beyond ~3e-4 (see
+    ``merge_math.gss_numpy``), and the paper's table build used C++ doubles.
+    """
+    g = np.linspace(0.0, 1.0, grid_size)
+    mm, kk = np.meshgrid(g, g, indexing="ij")
+    h = merge_math.gss_numpy(mm, kk, eps=eps)
+    kk_safe = np.clip(kk, merge_math.KAPPA_MIN, 1.0)
+    s = mm * kk_safe ** ((1.0 - h) ** 2) + (1.0 - mm) * kk_safe ** (h**2)
+    wd = mm**2 + (1.0 - mm) ** 2 + 2.0 * mm * (1.0 - mm) * kk - s**2
+    # Analytic boundary columns where the objective degenerates:
+    #  kappa = 1 (coincident points): s(h) == 1 for all h, GSS sees a flat
+    #  function; the kappa -> 1 limit is h = m with zero degradation.
+    h[:, -1] = g
+    wd[:, -1] = 0.0
+    #  kappa = 0 (infinitely distant points): the optimum is removal of the
+    #  smaller-coefficient point: h -> {0, 1}, WD_norm -> min(m, 1-m)^2.
+    h[:, 0] = np.where(g >= 0.5, 1.0, 0.0)
+    wd[:, 0] = np.minimum(g, 1.0 - g) ** 2
+    return jnp.asarray(h), jnp.asarray(wd)
+
+
+def bilinear_lookup(table, u, v):
+    """Bilinearly interpolate ``table`` at unit-square coordinates ``(u, v)``.
+
+    ``table[i, j]`` holds the function value at ``(i/(G-1), j/(G-1))``.
+    Vectorized over the broadcasted shape of ``u`` and ``v``.
+    """
+    g = table.shape[0]
+    u = jnp.clip(u, 0.0, 1.0) * (g - 1)
+    v = jnp.clip(v, 0.0, 1.0) * (table.shape[1] - 1)
+    i0 = jnp.clip(jnp.floor(u).astype(jnp.int32), 0, g - 2)
+    j0 = jnp.clip(jnp.floor(v).astype(jnp.int32), 0, table.shape[1] - 2)
+    du = u - i0
+    dv = v - j0
+    t00 = table[i0, j0]
+    t01 = table[i0, j0 + 1]
+    t10 = table[i0 + 1, j0]
+    t11 = table[i0 + 1, j0 + 1]
+    top = t00 * (1.0 - dv) + t01 * dv
+    bot = t10 * (1.0 - dv) + t11 * dv
+    return top * (1.0 - du) + bot * du
+
+
+def build_lookup_table(fn, grid_size: int = DEFAULT_GRID):
+    """Generic 2-D tabulation of ``fn(u, v)`` over the unit square.
+
+    ``fn`` must accept broadcasted arrays.  Returns a ``(G, G)`` table usable
+    with :func:`bilinear_lookup` — the reusable "precompute the inner solver"
+    pattern.
+    """
+    g = jnp.linspace(0.0, 1.0, grid_size)
+    uu, vv = jnp.meshgrid(g, g, indexing="ij")
+    return fn(uu, vv)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class MergeLookupTable:
+    """Precomputed h / WD_norm tables (paper's Lookup-h / Lookup-WD)."""
+
+    h_table: jax.Array
+    wd_table: jax.Array
+
+    @classmethod
+    def create(cls, grid_size: int = DEFAULT_GRID, eps: float = merge_math.EPS_PRECISE,
+               dtype=jnp.float32) -> "MergeLookupTable":
+        h, wd = build_merge_tables(grid_size=grid_size, eps=eps)
+        return cls(h_table=h.astype(dtype), wd_table=wd.astype(dtype))
+
+    def lookup_h(self, m, kappa):
+        return bilinear_lookup(self.h_table, m, kappa)
+
+    def lookup_wd_norm(self, m, kappa):
+        return bilinear_lookup(self.wd_table, m, kappa)
+
+    def lookup_wd(self, alpha_a, alpha_b, m, kappa):
+        """Denormalized weight degradation (alpha_a + alpha_b)^2 * WD_norm."""
+        return (alpha_a + alpha_b) ** 2 * self.lookup_wd_norm(m, kappa)
+
+    # --- persistence -----------------------------------------------------
+    def save(self, path: str) -> None:
+        tmp = path + ".tmp.npz"  # .npz suffix stops np.savez appending another
+        np.savez(tmp, h_table=np.asarray(self.h_table), wd_table=np.asarray(self.wd_table))
+        os.replace(tmp, path)
+
+    @classmethod
+    def load(cls, path: str) -> "MergeLookupTable":
+        with np.load(path) as z:
+            return cls(h_table=jnp.asarray(z["h_table"]), wd_table=jnp.asarray(z["wd_table"]))
+
+    # --- pytree protocol (so the table threads through jit/pjit as data) --
+    def tree_flatten(self):
+        return (self.h_table, self.wd_table), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+_DEFAULT_TABLE: MergeLookupTable | None = None
+
+
+def default_table(grid_size: int = DEFAULT_GRID) -> MergeLookupTable:
+    """Process-wide cached table (built once, ~160k GSS solves, <1s)."""
+    global _DEFAULT_TABLE
+    if _DEFAULT_TABLE is None or _DEFAULT_TABLE.h_table.shape[0] != grid_size:
+        _DEFAULT_TABLE = MergeLookupTable.create(grid_size=grid_size)
+    return _DEFAULT_TABLE

@@ -1,0 +1,4 @@
+"""Data pipelines: synthetic classification sets, LIBSVM parsing, LM tokens."""
+from .synthetic import make_blobs, make_susy_like, make_two_moons, train_test_split
+
+__all__ = ["make_blobs", "make_susy_like", "make_two_moons", "train_test_split"]

@@ -1,0 +1,41 @@
+"""LIBSVM text format parser (the paper's datasets ship in this format)."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def parse_libsvm(path_or_lines, n_features: int | None = None):
+    """Returns (x (n, d) float32, y (n,) float32 in {-1, +1})."""
+    if isinstance(path_or_lines, str):
+        with open(path_or_lines) as f:
+            lines = f.readlines()
+    else:
+        lines = list(path_or_lines)
+    rows, ys = [], []
+    max_idx = 0
+    for line in lines:
+        parts = line.strip().split()
+        if not parts:
+            continue
+        label = float(parts[0])
+        ys.append(1.0 if label > 0 else -1.0)
+        feats = {}
+        for tok in parts[1:]:
+            idx, val = tok.split(":")
+            idx = int(idx)
+            feats[idx] = float(val)
+            max_idx = max(max_idx, idx)
+        rows.append(feats)
+    d = n_features or max_idx
+    x = np.zeros((len(rows), d), np.float32)
+    for i, feats in enumerate(rows):
+        for idx, val in feats.items():
+            x[i, idx - 1] = val  # libsvm is 1-indexed
+    return x, np.asarray(ys, np.float32)
+
+
+def dump_libsvm(path: str, x, y) -> None:
+    with open(path, "w") as f:
+        for xi, yi in zip(x, y):
+            feats = " ".join(f"{j+1}:{v:.6g}" for j, v in enumerate(xi) if v != 0)
+            f.write(f"{int(yi):+d} {feats}\n")

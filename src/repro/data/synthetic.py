@@ -1,0 +1,61 @@
+"""Synthetic binary-classification generators standing in for the paper's sets.
+
+The container has no network access, so SUSY/ADULT/IJCNN/... are represented
+by synthetic generators with matching dimensionality and qualitative structure
+(overlapping Gaussians / nonlinear boundaries).  Benchmarks name their
+workloads after the paper's datasets but record the generator used.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def make_blobs(key, n: int, dim: int, *, sep: float = 2.0, noise: float = 1.0):
+    """Two Gaussian blobs, labels in {-1, +1}."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    y = jnp.where(jax.random.bernoulli(k1, 0.5, (n,)), 1.0, -1.0)
+    centers = jnp.stack([jnp.full((dim,), -sep / 2), jnp.full((dim,), sep / 2)])
+    mu = centers[((y + 1) // 2).astype(jnp.int32)]
+    x = mu + noise * jax.random.normal(k2, (n, dim))
+    perm = jax.random.permutation(k3, n)
+    return x[perm], y[perm]
+
+
+def make_two_moons(key, n: int, *, noise: float = 0.15, dim: int = 2):
+    """Classic non-linearly-separable benchmark (kernel methods shine here).
+
+    If dim > 2, the extra dimensions are pure noise (tests robustness of
+    gamma selection).
+    """
+    k1, k2, k3 = jax.random.split(key, 3)
+    n_half = n // 2
+    t = jnp.linspace(0, jnp.pi, n_half)
+    x_a = jnp.stack([jnp.cos(t), jnp.sin(t)], axis=1)
+    x_b = jnp.stack([1.0 - jnp.cos(t), 0.5 - jnp.sin(t)], axis=1)
+    x = jnp.concatenate([x_a, x_b]) + noise * jax.random.normal(k1, (2 * n_half, 2))
+    y = jnp.concatenate([jnp.ones(n_half), -jnp.ones(n_half)])
+    if dim > 2:
+        x = jnp.concatenate([x, 0.5 * jax.random.normal(k2, (2 * n_half, dim - 2))], axis=1)
+    perm = jax.random.permutation(k3, 2 * n_half)
+    return x[perm], y[perm]
+
+
+def make_susy_like(key, n: int, dim: int = 18, *, flip: float = 0.2):
+    """SUSY-ish: overlapping classes (exact SVM accuracy ~80%), 18 features.
+
+    A quadratic boundary in a random subspace plus label noise gives the
+    ~20% Bayes-error feel of the physics set.
+    """
+    k1, k2, k3 = jax.random.split(key, 3)
+    x = jax.random.normal(k1, (n, dim))
+    w = jax.random.normal(k2, (dim,))
+    score = x @ w + 0.5 * jnp.sum(x[:, : dim // 2] ** 2, axis=1) - dim // 4
+    y = jnp.where(score > 0, 1.0, -1.0)
+    do_flip = jax.random.bernoulli(k3, flip, (n,))
+    return x, jnp.where(do_flip, -y, y)
+
+
+def train_test_split(x, y, *, test_frac: float = 0.2):
+    n_test = int(x.shape[0] * test_frac)
+    return (x[n_test:], y[n_test:]), (x[:n_test], y[:n_test])

@@ -1,0 +1,64 @@
+"""Batched golden-section-search Pallas kernel (baseline solver + table builder).
+
+Runs ALL candidate searches in lockstep: the bracket state (a, b) lives in
+vector registers, every iteration evaluates the merge objective at the two
+golden probes for the whole block, and `jnp.where` selects the surviving
+bracket per lane.  Iteration count is static (ceil(log eps / log (1/phi))),
+so the loop unrolls into a fixed-depth chain — this IS the cost the paper's
+lookup removes: ~10 (eps=.01) / ~48 (eps=1e-10) sequential VPU steps, each
+with two exp() transcendentals, vs. one MXU matmul for the lookup kernel.
+
+Used both as the runtime baseline ("GSS", "GSS-precise") and to precompute
+the lookup tables at high precision.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INVPHI = (5.0**0.5 - 1.0) / 2.0
+
+
+def _gss_kernel(m_ref, kappa_ref, h_ref, *, n_iters: int):
+    m = m_ref[...].astype(jnp.float32)
+    kappa = jnp.clip(kappa_ref[...].astype(jnp.float32), 1e-30, 1.0)
+    lk = jnp.log(kappa)
+
+    def s(h):
+        # s_{m,kappa}(h) = m kappa^{(1-h)^2} + (1-m) kappa^{h^2}
+        return m * jnp.exp((1.0 - h) ** 2 * lk) + (1.0 - m) * jnp.exp(h**2 * lk)
+
+    def body(_, ab):
+        a, b = ab
+        span = b - a
+        c = b - span * INVPHI
+        d = a + span * INVPHI
+        go_left = s(c) > s(d)
+        return jnp.where(go_left, a, c), jnp.where(go_left, d, b)
+
+    a, b = jax.lax.fori_loop(0, n_iters,
+                             body, (jnp.zeros_like(m), jnp.ones_like(m)))
+    h_ref[...] = 0.5 * (a + b)
+
+
+@functools.partial(jax.jit, static_argnames=("n_iters", "block", "interpret"))
+def gss_pallas(m, kappa, *, n_iters: int, block: tuple[int, int] = (8, 512),
+               interpret: bool = False):
+    """Golden section search for 2-D arrays of (m, kappa) problems.
+
+    m, kappa: (r, c) with r % block[0] == 0 and c % block[1] == 0 (ops pads).
+    """
+    r, c = m.shape
+    br, bc = block
+    assert r % br == 0 and c % bc == 0, "pad to block multiples (see kernels.ops)"
+    return pl.pallas_call(
+        functools.partial(_gss_kernel, n_iters=n_iters),
+        grid=(r // br, c // bc),
+        in_specs=[pl.BlockSpec((br, bc), lambda i, j: (i, j))] * 2,
+        out_specs=pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, c), jnp.float32),
+        interpret=interpret,
+    )(m, kappa)

@@ -1,0 +1,118 @@
+"""Public jit'd wrappers for the Pallas kernels, with implementation dispatch.
+
+``impl`` semantics (every op takes it):
+  * ``"auto"``             — Pallas on TPU, pure-jnp reference elsewhere (XLA
+                             compiles the reference well on CPU/GPU).
+  * ``"pallas"``           — compiled Pallas (TPU).
+  * ``"pallas_interpret"`` — Pallas in interpret mode (CPU correctness runs;
+                             this is how the kernel bodies are validated here).
+  * ``"ref"``              — the pure-jnp oracle from ``kernels.ref``.
+
+Wrappers own all shape plumbing the kernels refuse to do: padding to block
+multiples, re-slicing, and scalar/1-D massaging.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import gss as gss_kernel
+from . import merge_lookup as merge_lookup_kernel
+from . import rbf_kernel
+from . import ref
+
+IMPLS = ("auto", "pallas", "pallas_interpret", "ref")
+
+
+def _resolve(impl: str) -> str:
+    if impl == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl not in IMPLS:
+        raise ValueError(f"impl={impl!r} not in {IMPLS}")
+    return impl
+
+
+def _pad_to(x, axis: int, multiple: int, value=0.0):
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+# --------------------------------------------------------------------------
+# RBF kernel matrix / row
+# --------------------------------------------------------------------------
+@partial(jax.jit, static_argnames=("impl", "block_n", "block_m", "block_d"))
+def rbf_matrix(x, y, gamma, *, impl: str = "auto", block_n: int = 128,
+               block_m: int = 128, block_d: int = 512):
+    """K[i, j] = exp(-gamma ||x_i - y_j||^2); x: (n, d), y: (m, d) -> (n, m)."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        return ref.rbf_matrix(x, y, gamma)
+    n, m = x.shape[0], y.shape[0]
+    bd = min(block_d, max(128, x.shape[1]))
+    xp = _pad_to(_pad_to(x, 0, block_n), 1, bd)
+    yp = _pad_to(_pad_to(y, 0, block_m), 1, bd)
+    out = rbf_kernel.rbf_matrix_pallas(
+        xp, yp, gamma, block_n=block_n, block_m=block_m, block_d=bd,
+        interpret=(impl == "pallas_interpret"))
+    return out[:n, :m]
+
+
+@partial(jax.jit, static_argnames=("impl",))
+def rbf_row(sv_x, x, gamma, *, impl: str = "auto"):
+    """kappa_row[j] = k(x, sv_x[j]); sv_x: (s, d), x: (d,) -> (s,)."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        return ref.rbf_row(sv_x, x, gamma)
+    return rbf_matrix(x[None, :], sv_x, gamma, impl=impl)[0]
+
+
+# --------------------------------------------------------------------------
+# Merge-candidate scoring against a precomputed table (Lookup-WD / Lookup-h)
+# --------------------------------------------------------------------------
+@partial(jax.jit, static_argnames=("impl", "block_s"))
+def merge_scores(alpha, kappa_row, valid, a_min, table, *, impl: str = "auto",
+                 block_s: int = 512):
+    """(wd, interp) per candidate; invalid slots get a large finite WD."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        wd = ref.merge_scores(alpha, kappa_row, valid, a_min, table)
+        denom = a_min + alpha
+        m = jnp.clip(a_min / jnp.where(denom == 0, 1.0, denom), 0.0, 1.0)
+        interp = ref.bilinear_lookup(table, m, jnp.clip(kappa_row, 0.0, 1.0))
+        return wd, interp
+    s = alpha.shape[0]
+    bs = min(block_s, max(128, s))
+    pad = lambda a: _pad_to(a, 0, bs)
+    wd, interp = merge_lookup_kernel.merge_scores_pallas(
+        pad(alpha), pad(kappa_row), pad(valid.astype(jnp.float32)), a_min,
+        table, block_s=bs, interpret=(impl == "pallas_interpret"))
+    wd = jnp.where(jnp.arange(wd.shape[0]) < s, wd, jnp.inf)[:s]
+    return wd, interp[:s]
+
+
+# --------------------------------------------------------------------------
+# Batched golden section search
+# --------------------------------------------------------------------------
+@partial(jax.jit, static_argnames=("impl", "n_iters"))
+def gss_solve(m, kappa, *, n_iters: int, impl: str = "auto"):
+    """argmax_h of the merge objective for arrays of (m, kappa); any shape."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        return ref.gss(m, kappa, n_iters)
+    shape = m.shape
+    flat_m = m.reshape(1, -1).astype(jnp.float32)
+    flat_k = kappa.reshape(1, -1).astype(jnp.float32)
+    br, bc = 1, min(512, max(128, flat_m.shape[1]))
+    flat_m = _pad_to(flat_m, 1, bc)
+    flat_k = _pad_to(flat_k, 1, bc, value=1.0)  # kappa=1 is a benign problem
+    h = gss_kernel.gss_pallas(flat_m, flat_k, n_iters=n_iters, block=(br, bc),
+                              interpret=(impl == "pallas_interpret"))
+    import math
+    return h[0, : math.prod(shape)].reshape(shape)

@@ -1,0 +1,88 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantics of record: each kernel's test sweeps shapes/dtypes and
+asserts allclose against the function here.  They are also the production CPU
+fallback (XLA compiles them well); the Pallas kernels target TPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rbf_matrix(x, y, gamma):
+    """Gaussian kernel matrix K[i, j] = exp(-gamma ||x_i - y_j||^2).
+
+    x: (n, d), y: (m, d)  ->  (n, m), computed via the matmul decomposition
+    ||x - y||^2 = ||x||^2 + ||y||^2 - 2 x.y  (clamped at 0 for fp safety).
+    """
+    xn = jnp.sum(x * x, axis=-1)[:, None]
+    yn = jnp.sum(y * y, axis=-1)[None, :]
+    d2 = xn + yn - 2.0 * x @ y.T
+    return jnp.exp(-gamma * jnp.maximum(d2, 0.0))
+
+
+def rbf_row(sv_x, x, gamma):
+    """kappa_row[j] = k(x, sv_x[j]).  sv_x: (s, d), x: (d,)  ->  (s,)."""
+    d2 = jnp.sum((sv_x - x[None, :]) ** 2, axis=-1)
+    return jnp.exp(-gamma * d2)
+
+
+def bilinear_lookup(table, u, v):
+    """Bilinear interpolation of ``table`` at unit-square coords (u, v).
+
+    Identical semantics to ``repro.core.lookup.bilinear_lookup``; duplicated
+    here (3 lines of gather math) so the kernels package stays import-clean.
+    """
+    g0, g1 = table.shape
+    uu = jnp.clip(u, 0.0, 1.0) * (g0 - 1)
+    vv = jnp.clip(v, 0.0, 1.0) * (g1 - 1)
+    i0 = jnp.clip(jnp.floor(uu).astype(jnp.int32), 0, g0 - 2)
+    j0 = jnp.clip(jnp.floor(vv).astype(jnp.int32), 0, g1 - 2)
+    du = uu - i0
+    dv = vv - j0
+    top = table[i0, j0] * (1 - dv) + table[i0, j0 + 1] * dv
+    bot = table[i0 + 1, j0] * (1 - dv) + table[i0 + 1, j0 + 1] * dv
+    return top * (1 - du) + bot * du
+
+
+def merge_scores(alpha, kappa_row, valid, a_min, wd_table):
+    """Lookup-WD candidate scoring (paper Alg. 1 with the lookup solver).
+
+    alpha, kappa_row, valid: (s,); a_min: scalar; wd_table: (G, G).
+    Returns WD per candidate with +inf at invalid slots.
+    """
+    denom = a_min + alpha
+    m = jnp.clip(a_min / jnp.where(denom == 0, 1.0, denom), 0.0, 1.0)
+    kap = jnp.clip(kappa_row, 0.0, 1.0)
+    wd = denom**2 * bilinear_lookup(wd_table, m, kap)
+    return jnp.where(valid, wd, jnp.inf)
+
+
+def gss(m, kappa, n_iters: int):
+    """Vectorized golden section search maximizing the merge objective.
+
+    Mirrors ``repro.core.merge_math.golden_section_search`` but parameterized
+    by iteration count (the kernel's static parameter).
+    """
+    invphi = (5.0**0.5 - 1.0) / 2.0
+    m = jnp.asarray(m, jnp.float32)
+    kappa = jnp.clip(jnp.asarray(kappa, jnp.float32), 1e-30, 1.0)
+    lk = jnp.log(kappa)
+
+    def s(h):
+        return m * jnp.exp((1.0 - h) ** 2 * lk) + (1.0 - m) * jnp.exp(h**2 * lk)
+
+    a = jnp.zeros_like(m)
+    b = jnp.ones_like(m)
+
+    def body(_, ab):
+        a, b = ab
+        span = b - a
+        c = b - span * invphi
+        d = a + span * invphi
+        go_left = s(c) > s(d)
+        return jnp.where(go_left, a, c), jnp.where(go_left, d, b)
+
+    a, b = jax.lax.fori_loop(0, n_iters, body, (a, b))
+    return 0.5 * (a + b)

@@ -1,0 +1,7 @@
+"""Launch layer: meshes, input specs, step plans, dry-run, drivers.
+
+NOTE: do NOT import ``repro.launch.dryrun`` from here — it must own its
+process (it forces 512 host devices before any jax import).
+"""
+from . import mesh, roofline
+from .mesh import make_host_mesh, make_mesh, make_production_mesh

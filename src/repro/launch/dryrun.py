@@ -1,0 +1,202 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: AOT lower + compile every (arch x shape x mesh) cell.
+
+MUST be executed as its own process (``python -m repro.launch.dryrun ...``):
+the first two lines force 512 host-platform devices BEFORE any jax import so
+``jax.make_mesh((2,16,16))`` can build the production mesh.  Never import
+this module from tests/benchmarks — they must see 1 device.
+
+Per cell it prints/records:
+  * ``compiled.memory_analysis()``  — bytes per device (does it fit HBM)
+  * ``compiled.cost_analysis()``    — FLOPs / bytes for §Roofline
+  * parsed collective-bytes breakdown + the three roofline terms.
+
+Usage:
+  python -m repro.launch.dryrun --arch deepseek_v3_671b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--strategy fsdp]
+  python -m repro.launch.dryrun --all --out experiments/dryrun
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from ..configs import SHAPES, all_cells, get, registry
+from . import roofline as rl
+from .mesh import make_production_mesh
+from .steps import lower_cell
+
+
+def choose_strategy(cfg, shape_name: str, strategy: str) -> str:
+    if strategy != "auto":
+        return strategy
+    n = cfg.param_count()
+    if SHAPES[shape_name]["step"] == "train":
+        # ZeRO-3/FSDP once params+grads+Adam can't fit under pure TP
+        return "fsdp" if n > 8e9 else "tp"
+    # inference: 16-way TP leaves 2N/16 bytes of weights per device; beyond
+    # ~60B params that alone blows the 16 GiB HBM -> 2-D (256-way) sharding
+    return "fsdp" if n > 60e9 else "tp"
+
+
+def run_svm_cell(*, multi_pod: bool, method: str = "lookup-wd",
+                 out_dir: str | None = None, budget: int = 16384,
+                 dim: int = 1024, batch: int = 8192, verbose=True,
+                 layout: str = "replicated") -> dict:
+    """The paper-technique cell: distributed minibatch BSGD on the mesh."""
+    from ..core.distributed import lower_svm_cell
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    lowered, cfg = lower_svm_cell(mesh, budget=budget, dim=dim, batch=batch,
+                                  method=method, layout=layout)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    mem = compiled.memory_analysis()
+    # model flops: the useful work is the (batch x slots x dim) kernel matrix
+    model_flops = 2.0 * batch * (budget + batch) * dim
+    rec = rl.analyze(compiled, arch=f"svm_bsgd_{method}", shape=f"b{budget}",
+                     mesh=mesh, strategy=layout, model_flops_global=model_flops)
+    result = rec.to_json()
+    result.update(lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+                  multi_pod=multi_pod)
+    if verbose:
+        print(f"[dryrun] svm_bsgd({method}) budget={budget} dim={dim} "
+              f"batch={batch} mesh={rec.mesh}")
+        print(f"  mem: args={mem.argument_size_in_bytes/2**30:.2f}GiB "
+              f"temp={mem.temp_size_in_bytes/2**30:.2f}GiB/dev")
+        print(f"  roofline: compute={rec.compute_s*1e3:.2f}ms "
+              f"memory={rec.memory_s*1e3:.2f}ms "
+              f"collective={rec.collective_s*1e3:.2f}ms dominant={rec.dominant} "
+              f"useful={rec.useful_ratio:.2f} frac={rec.roofline_frac:.3f}")
+        print(f"  lower={t_lower:.1f}s compile={t_compile:.1f}s")
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        tag = f"svm_bsgd_{method}.b{budget}.{'pod2' if multi_pod else 'pod1'}.{layout}"
+        with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+            json.dump(result, f, indent=2)
+    return result
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool, strategy: str,
+             out_dir: str | None = None, verbose: bool = True,
+             cfg_overrides: dict | None = None, tag_suffix: str = "") -> dict:
+    import dataclasses
+    cfg = get(arch)
+    # Single-pod runs unroll layer groups so cost_analysis counts every layer
+    # (XLA counts while bodies once — see lm.forward).  The multi-pod pass
+    # proves the pod-axis sharding compiles and keeps the scan (fast compile).
+    overrides = {"scan_unroll": not multi_pod}
+    overrides.update(cfg_overrides or {})
+    cfg = dataclasses.replace(cfg, **overrides)
+    strat = choose_strategy(cfg, shape_name, strategy)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    lowered, plan = lower_cell(cfg, shape_name, mesh, strategy=strat)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    rec = rl.analyze(compiled, arch=arch, shape=shape_name, mesh=mesh,
+                     strategy=strat,
+                     model_flops_global=rl.model_flops(cfg, shape_name, SHAPES),
+                     act_bytes=rl.act_bytes_estimate(
+                         cfg, shape_name, SHAPES, mesh.shape["data"]))
+    result = rec.to_json()
+    result.update(lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+                  multi_pod=multi_pod)
+    if verbose:
+        print(f"[dryrun] {arch} x {shape_name} mesh={rec.mesh} strat={strat}")
+        print(f"  memory_analysis: args={mem.argument_size_in_bytes/2**30:.2f}GiB "
+              f"temp={mem.temp_size_in_bytes/2**30:.2f}GiB "
+              f"out={mem.output_size_in_bytes/2**30:.2f}GiB per device "
+              f"(fits 16GiB HBM: {rec.fits_hbm})")
+        print(f"  cost_analysis: flops/dev={rec.flops_per_dev:.3e} "
+              f"bytes/dev={rec.bytes_per_dev:.3e}")
+        print(f"  collectives/dev: {rec.coll_breakdown}")
+        print(f"  roofline: compute={rec.compute_s*1e3:.2f}ms "
+              f"memory={rec.memory_s*1e3:.2f}ms "
+              f"collective={rec.collective_s*1e3:.2f}ms "
+              f"dominant={rec.dominant} useful={rec.useful_ratio:.2f} "
+              f"frac={rec.roofline_frac:.3f}")
+        print(f"  lower={t_lower:.1f}s compile={t_compile:.1f}s")
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        tag = f"{arch}.{shape_name}.{'pod2' if multi_pod else 'pod1'}.{strat}{tag_suffix}"
+        with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+            json.dump(result, f, indent=2)
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--strategy", default="auto",
+                    choices=["auto", "tp", "fsdp"])
+    ap.add_argument("--svm-method", default="lookup-wd",
+                    help="solver for the svm_bsgd cell")
+    ap.add_argument("--svm-layout", default="replicated",
+                    choices=["replicated", "slots"])
+    ap.add_argument("--seq-shard-attn", action="store_true",
+                    help="context-parallel attention (hillclimb variant)")
+    ap.add_argument("--keep-scan", action="store_true",
+                    help="lower the scanned form even single-pod (fast "
+                         "compile proof; cost_analysis undercounts scan "
+                         "bodies — roofline flops derived analytically)")
+    ap.add_argument("--tag-suffix", default="",
+                    help="suffix for the output json tag")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    overrides = {}
+    if args.seq_shard_attn:
+        overrides["seq_shard_attn"] = ("pod", "data") if args.multi_pod else ("data",)
+    if args.keep_scan:
+        overrides["scan_unroll"] = False
+
+    assert len(jax.devices()) == 512, "dryrun must own the 512-device env"
+
+    if args.arch == "svm_bsgd":
+        run_svm_cell(multi_pod=args.multi_pod, method=args.svm_method,
+                     out_dir=args.out, layout=args.svm_layout)
+        return
+
+    failures = []
+    if args.all:
+        for arch, shape, ok, reason in all_cells():
+            if args.arch and arch != args.arch:
+                continue
+            if not ok:
+                print(f"[dryrun] SKIP {arch} x {shape}: {reason}")
+                continue
+            try:
+                run_cell(arch, shape, multi_pod=args.multi_pod,
+                         strategy=args.strategy, out_dir=args.out)
+            except Exception as e:  # noqa: BLE001 — report, keep sweeping
+                traceback.print_exc()
+                failures.append((arch, shape, str(e)))
+        if failures:
+            print(f"[dryrun] {len(failures)} FAILURES: {failures}")
+            raise SystemExit(1)
+        print("[dryrun] all cells compiled OK")
+    else:
+        cfg_ok, reason = registry.cell_applicable(get(args.arch), args.shape)
+        if not cfg_ok:
+            print(f"[dryrun] cell not applicable: {reason}")
+            return
+        run_cell(args.arch, args.shape, multi_pod=args.multi_pod,
+                 strategy=args.strategy, out_dir=args.out,
+                 cfg_overrides=overrides, tag_suffix=args.tag_suffix)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Restart supervisor: run the training driver, re-admit on failure.
+
+Simulates the cluster-level control loop: a child training process that dies
+(node failure, injected fault, straggler exit code 75) is restarted and
+resumes from the newest atomic checkpoint.  Combined with the mesh-free
+checkpoint layout this also covers *elastic scaling*: the restart may use a
+different device count (``--devices``) and the state reshard happens at load.
+
+Usage:
+  python -m repro.launch.elastic --arch smollm_360m --steps 60 \
+      --ckpt-dir /tmp/ck --fault-at 30
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+import time
+
+
+def supervise(cmd: list[str], *, max_restarts: int = 5, env_extra=None,
+              verbose: bool = True) -> int:
+    """Run ``cmd``; restart on any nonzero exit, up to ``max_restarts``."""
+    restarts = 0
+    while True:
+        env = dict(os.environ)
+        if env_extra:
+            env.update(env_extra)
+            env_extra = None  # fault injections fire only on the first run
+        t0 = time.time()
+        proc = subprocess.run(cmd, env=env)
+        if proc.returncode == 0:
+            if verbose:
+                print(f"[elastic] child finished OK after {restarts} restarts")
+            return restarts
+        restarts += 1
+        if restarts > max_restarts:
+            raise RuntimeError(f"child kept failing ({restarts} restarts)")
+        if verbose:
+            print(f"[elastic] child exited rc={proc.returncode} "
+                  f"after {time.time()-t0:.1f}s; restart {restarts}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--ckpt-dir", required=True)
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--fault-at", type=int, default=None)
+    ap.add_argument("--devices", type=int, default=None,
+                    help="restart with this many host devices (elastic)")
+    ap.add_argument("--max-restarts", type=int, default=5)
+    args = ap.parse_args()
+
+    cmd = [sys.executable, "-m", "repro.launch.train", "--arch", args.arch,
+           "--smoke", "--steps", str(args.steps), "--ckpt-dir", args.ckpt_dir,
+           "--ckpt-every", str(args.ckpt_every)]
+    env_extra = {}
+    if args.fault_at is not None:
+        env_extra["FAULT_AT_STEP"] = str(args.fault_at)
+    if args.devices:
+        env_extra["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices}")
+    supervise(cmd, max_restarts=args.max_restarts, env_extra=env_extra or None)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""ShapeDtypeStruct stand-ins for every (arch x shape) dry-run cell.
+
+No device allocation ever happens here: shapes/dtypes only, weak-type-correct
+and shardable.  ``abstract_state`` builds the params / optimizer / cache
+abstract trees the dry-run lowers against.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import SHAPES
+from ..models import init_cache, init_lm
+from ..train.optimizer import AdamW
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def batch_specs(cfg, shape_name: str):
+    """Abstract training/serving batch for one shape cell."""
+    sh = SHAPES[shape_name]
+    b, s = sh["global_batch"], sh["seq_len"]
+    step = sh["step"]
+    if step == "decode":
+        return {"tokens": sds((b, 1), jnp.int32)}
+    if cfg.input_kind == "frames":
+        spec = {"frames": sds((b, s, cfg.frame_dim), jnp.dtype(cfg.dtype))}
+        if step == "train":
+            spec["labels"] = sds((b, s), jnp.int32)
+            spec["mask"] = sds((b, s), jnp.bool_)
+        return spec
+    spec = {"tokens": sds((b, s), jnp.int32)}
+    if step == "train":
+        spec["labels"] = sds((b, s), jnp.int32)
+        spec["mask"] = sds((b, s), jnp.float32)
+    return spec
+
+
+def abstract_params(cfg):
+    """(params, axes) with ShapeDtypeStruct leaves (axes tree is concrete —
+    ``Axes`` markers are static objects created during tracing)."""
+    key = jax.random.PRNGKey(0)
+    shapes = jax.eval_shape(lambda k: init_lm(k, cfg)[0], key)
+    return shapes, _axes_only(cfg)
+
+
+def _axes_only(cfg):
+    holder = {}
+
+    def grab(k):
+        params, axes = init_lm(k, cfg)
+        holder["axes"] = axes
+        return params
+
+    jax.eval_shape(grab, jax.random.PRNGKey(0))
+    return holder["axes"]
+
+
+def abstract_opt_state(cfg, params_shapes):
+    opt = AdamW()
+    return jax.eval_shape(opt.init, params_shapes)
+
+
+def abstract_cache(cfg, shape_name: str):
+    sh = SHAPES[shape_name]
+    b, s = sh["global_batch"], sh["seq_len"]
+    return jax.eval_shape(lambda: init_cache(cfg, b, s))

@@ -1,0 +1,129 @@
+"""Jittable step functions + their sharding plans for train / prefill / decode.
+
+``plan_cell`` is the single source of truth the dry-run, the trainer and the
+server all use: given (cfg, shape, mesh, strategy) it returns the step
+callable, abstract arguments, and in/out shardings — so what we dry-run is
+exactly what would launch on hardware.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import SHAPES
+from ..models import decode_step, encode_step, loss_fn, prefill
+from ..sharding import specs as sh
+from ..train.optimizer import AdamW
+from . import inputs as inp
+
+
+@dataclasses.dataclass
+class CellPlan:
+    step_fn: Callable
+    args: tuple                 # abstract args (ShapeDtypeStructs)
+    in_shardings: Any
+    out_shardings: Any
+    donate_argnums: tuple = ()
+    kind: str = "train"
+
+
+def make_train_step(cfg, optimizer=None):
+    optimizer = optimizer or AdamW()
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(lambda p: loss_fn(cfg, p, batch))(params)
+        new_params, new_opt = optimizer.update(grads, opt_state, params)
+        return new_params, new_opt, loss
+
+    return train_step
+
+
+def make_decode_fn(cfg):
+    def serve_step(params, cache, tokens, cache_pos):
+        return decode_step(cfg, params, cache, tokens, cache_pos)
+    return serve_step
+
+
+def make_prefill_fn(cfg):
+    if cfg.is_encoder:
+        def encode(params, batch):
+            return encode_step(cfg, params, batch)
+        return encode
+
+    def prefill_fn(params, batch):
+        return prefill(cfg, params, batch["tokens"])
+    return prefill_fn
+
+
+def plan_cell(cfg, shape_name: str, mesh, *, strategy: str = "tp",
+              optimizer=None) -> CellPlan:
+    step = SHAPES[shape_name]["step"]
+    params_s, axes = inp.abstract_params(cfg)
+    p_shard = sh.param_shardings(axes, params_s, mesh, strategy)
+    batch_s = inp.batch_specs(cfg, shape_name)
+    b_shard = sh.to_shardings(sh.batch_spec(mesh, batch_s), mesh)
+    repl = NamedSharding(mesh, P())
+
+    if step == "train":
+        optimizer = optimizer or AdamW()
+        opt_s = inp.abstract_opt_state(cfg, params_s)
+        # moments mirror param shardings; step counter replicated
+        opt_shard = type(opt_s)(
+            step=repl,
+            m=jax.tree.map(lambda _, s: s, opt_s.m, p_shard),
+            v=jax.tree.map(lambda _, s: s, opt_s.v, p_shard))
+        fn = make_train_step(cfg, optimizer)
+        return CellPlan(
+            step_fn=fn, args=(params_s, opt_s, batch_s),
+            in_shardings=(p_shard, opt_shard, b_shard),
+            out_shardings=(p_shard, opt_shard, repl),
+            donate_argnums=(0, 1), kind="train")
+
+    if step == "prefill":
+        fn = make_prefill_fn(cfg)
+        if cfg.is_encoder:
+            # encoder output: logits (B, S, V) batch-sharded
+            out = NamedSharding(mesh, P(sh.dp_axes(mesh), None, None))
+        else:
+            cache_s = jax.eval_shape(
+                lambda p, b: fn(p, b)[1], params_s, batch_s)
+            cache_shard = sh.to_shardings(
+                sh.cache_specs(cache_s, mesh, policy="batch"), mesh)
+            logits_shard = NamedSharding(mesh, P(sh.dp_axes(mesh), None))
+            out = (logits_shard, cache_shard)
+        return CellPlan(step_fn=fn, args=(params_s, batch_s),
+                        in_shardings=(p_shard, b_shard),
+                        out_shardings=out, kind="prefill")
+
+    # decode: batch=1 long-context shards the cache over sequence instead
+    policy = "sequence" if SHAPES[shape_name]["global_batch"] < mesh.shape["data"] \
+        else "batch"
+    cache_s = inp.abstract_cache(cfg, shape_name)
+    cache_shard = sh.to_shardings(sh.cache_specs(cache_s, mesh, policy=policy),
+                                  mesh)
+    tok_shard = (NamedSharding(mesh, P(sh.dp_axes(mesh), None))
+                 if policy == "batch" else repl)
+    fn = make_decode_fn(cfg)
+    logits_shard = tok_shard
+    return CellPlan(
+        step_fn=fn,
+        args=(params_s, cache_s, inp.batch_specs(cfg, shape_name)["tokens"],
+              jax.ShapeDtypeStruct((), jax.numpy.int32)),
+        in_shardings=(p_shard, cache_shard, tok_shard, repl),
+        out_shardings=(logits_shard, cache_shard),
+        donate_argnums=(1,), kind="decode")
+
+
+def lower_cell(cfg, shape_name: str, mesh, *, strategy: str = "tp"):
+    """AOT-lower one cell on ``mesh``; returns (lowered, plan)."""
+    plan = plan_cell(cfg, shape_name, mesh, strategy=strategy)
+    with mesh:
+        jitted = jax.jit(plan.step_fn, in_shardings=plan.in_shardings,
+                         out_shardings=plan.out_shardings,
+                         donate_argnums=plan.donate_argnums)
+        lowered = jitted.lower(*plan.args)
+    return lowered, plan

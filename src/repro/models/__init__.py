@@ -1,0 +1,6 @@
+"""Pure-JAX model zoo for the assigned architectures."""
+from . import attention, common, lm, mamba2, mla, moe
+from .lm import decode_step, encode_step, forward, init_cache, init_lm, loss_fn, prefill
+
+__all__ = ["attention", "common", "lm", "mamba2", "mla", "moe", "decode_step",
+           "encode_step", "forward", "init_cache", "init_lm", "loss_fn", "prefill"]

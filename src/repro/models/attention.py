@@ -1,0 +1,177 @@
+"""GQA attention: RoPE, sliding window, bidirectional, qk-norm, KV cache.
+
+Three entry modes:
+  * ``full``   — training / encoder forward over the whole sequence.
+  * ``prefill``— like full, but also returns the populated KV cache.
+  * ``decode`` — one new token against the cache (ring buffer for SWA).
+
+Long sequences use KV-chunked online-softmax attention (``lax.scan`` over key
+chunks with running max/denominator) so activation memory scales with the
+chunk size rather than S^2 — the pure-JAX equivalent of flash attention,
+chosen over a Pallas kernel because this paper's kernels budget belongs to
+the SVM merge path (see DESIGN.md); XLA fuses this form well on TPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import apply_rope, ones_param, param, rms_norm
+
+NEG = -1e30
+
+
+def init_attention(key, cfg, dtype):
+    d, h, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": param(ks[0], (d, h, hd), ("embed", "q_heads", "head"), dtype),
+        "wk": param(ks[1], (d, hkv, hd), ("embed", "kv_heads", "head"), dtype),
+        "wv": param(ks[2], (d, hkv, hd), ("embed", "kv_heads", "head"), dtype),
+        "wo": param(ks[3], (h, hd, d), ("q_heads", "head", "embed"), dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = ones_param((hd,), ("head",), dtype)
+        p["k_norm"] = ones_param((hd,), ("head",), dtype)
+    return p
+
+
+def _sdpa(q5, k, v, bias, scale):
+    """q5: (B,Sq,Hkv,G,hd); k/v: (B,Sk,Hkv,hd); bias: (B|1, 1, Sq, Sk)."""
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", q5, k).astype(jnp.float32) * scale
+    scores = scores + bias[:, :, None, :, :]
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+
+
+def _chunked_sdpa(q5, k, v, positions, *, causal, window, scale, chunk):
+    """Online-softmax attention, scanning key/value chunks of length ``chunk``.
+
+    Self-attention layout: q positions == k positions == ``positions`` (S,).
+    Peak activation is O(S * chunk) per head instead of O(S^2).
+    """
+    b, sq, hkv, g, hd = q5.shape
+    sk = k.shape[1]
+    hd_v = v.shape[-1]          # MLA: value head dim != qk head dim
+    n_chunks = sk // chunk
+    q32 = q5.astype(jnp.float32)
+
+    k_c = k.reshape(b, n_chunks, chunk, hkv, hd).transpose(1, 0, 2, 3, 4)
+    v_c = v.reshape(b, n_chunks, chunk, hkv, hd_v).transpose(1, 0, 2, 3, 4)
+    kp_c = positions.reshape(n_chunks, chunk)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kc, vc, kpc = xs
+        ok = jnp.ones((sq, chunk), bool)
+        if causal:
+            ok &= kpc[None, :] <= positions[:, None]
+        if window is not None:
+            ok &= kpc[None, :] > positions[:, None] - window
+        bias = jnp.where(ok, 0.0, NEG)                     # (Sq, chunk)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", q32, kc.astype(jnp.float32)) * scale
+        s = s + bias[None, None, None, :, :]
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p, vc.astype(jnp.float32))
+        return (m_new, l, acc), None
+
+    init = (jnp.full((b, hkv, g, sq), NEG, jnp.float32),
+            jnp.zeros((b, hkv, g, sq), jnp.float32),
+            jnp.zeros((b, hkv, g, sq, hd_v), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(body, init, (k_c, v_c, kp_c))
+    ctx = acc / jnp.maximum(l, 1e-30)[..., None]           # (B,Hkv,G,Sq,hd)
+    return ctx.transpose(0, 3, 1, 2, 4).astype(q5.dtype)   # (B,Sq,Hkv,G,hd)
+
+
+def attention(cfg, p, x, positions, *, mode: str = "full", cache=None,
+              cache_pos=None):
+    """Returns (y, new_cache).  x: (B, S, D); positions: (S,) absolute.
+
+    decode: S == 1, ``cache`` = {"k","v","pos"} ring buffers, ``cache_pos`` =
+    number of tokens already in the cache (scalar int32).
+    """
+    b, s, d = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    g = h // hkv
+    scale = 1.0 / float(hd) ** 0.5
+    causal = cfg.causal and not cfg.is_encoder
+    window = cfg.sliding_window
+
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"])
+    k = jnp.einsum("bsd,dhe->bshe", x, p["wk"])
+    v = jnp.einsum("bsd,dhe->bshe", x, p["wv"])
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+
+    if mode == "decode":
+        pos = cache_pos
+        w = cache["k"].shape[1]
+        slot = pos % w                                     # ring buffer (SWA)
+        abs_pos = pos + jnp.arange(s, dtype=jnp.int32)
+        q = apply_rope(q, abs_pos, cfg.rope_theta)
+        k = apply_rope(k, abs_pos, cfg.rope_theta)
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                          (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                          (0, slot, 0, 0))
+        cp = jax.lax.dynamic_update_slice(
+            cache["pos"], jnp.broadcast_to(abs_pos[None, :], (b, s)), (0, slot))
+        ok = (cp >= 0) & (cp <= pos)                       # (B, W)
+        if window is not None:
+            ok &= cp > pos - window
+        bias = jnp.where(ok, 0.0, NEG)[:, None, None, :]   # (B,1,Sq=1,W)
+        q5 = q.reshape(b, s, hkv, g, hd)
+        ctx = _sdpa(q5, ck.astype(q.dtype), cv.astype(q.dtype), bias, scale)
+        new_cache = {"k": ck, "v": cv, "pos": cp}
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        q5 = q.reshape(b, s, hkv, g, hd)
+        if cfg.seq_shard_attn is not None:
+            # context parallelism: queries sharded over `model` along S,
+            # keys/values replicated along S — removes the 16x attention
+            # replication when head counts don't divide the model axis.
+            from jax.sharding import PartitionSpec as P
+            dp = cfg.seq_shard_attn
+            q5 = jax.lax.with_sharding_constraint(
+                q5, P(dp, "model", None, None, None))
+            k = jax.lax.with_sharding_constraint(k, P(dp, None, None, None))
+            v = jax.lax.with_sharding_constraint(v, P(dp, None, None, None))
+        if s > cfg.attn_chunk and s % cfg.attn_chunk == 0:
+            ctx = _chunked_sdpa(q5, k, v, positions, causal=causal,
+                                window=window, scale=scale, chunk=cfg.attn_chunk)
+            if cfg.seq_shard_attn is not None:
+                from jax.sharding import PartitionSpec as P
+                ctx = jax.lax.with_sharding_constraint(
+                    ctx, P(cfg.seq_shard_attn, "model", None, None, None))
+        else:
+            ok = jnp.ones((s, s), bool)
+            if causal:
+                ok &= positions[None, :] <= positions[:, None]
+            if window is not None:
+                ok &= positions[None, :] > positions[:, None] - window
+            bias = jnp.where(ok, 0.0, NEG)[None, None]     # (1,1,S,S)
+            ctx = _sdpa(q5, k, v, bias, scale)
+        new_cache = None
+        if mode == "prefill":
+            new_cache = {
+                "k": k, "v": v,
+                "pos": jnp.broadcast_to(positions[None, :], (b, s)).astype(jnp.int32)}
+
+    y = jnp.einsum("bshgd,hgdo->bso", ctx, p["wo"].reshape(hkv, g, hd, d))
+    return y, new_cache
+
+
+def init_attn_cache(cfg, batch: int, max_len: int, dtype):
+    w = max_len if cfg.sliding_window is None else min(cfg.sliding_window, max_len)
+    hkv, hd = cfg.n_kv_heads, cfg.head_dim_
+    return {
+        "k": jnp.zeros((batch, w, hkv, hd), dtype),
+        "v": jnp.zeros((batch, w, hkv, hd), dtype),
+        "pos": jnp.full((batch, w), -1, jnp.int32),
+    }

@@ -1,0 +1,94 @@
+"""Shared model utilities: axis-annotated params, norms, RoPE, activations.
+
+Params are plain pytrees of arrays.  At init we build a *parallel* tree of
+logical-axis tuples (one name per array dim) that ``repro.sharding.specs``
+resolves to ``PartitionSpec``s for a concrete mesh — flax-style logical
+partitioning without the flax dependency.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Axes:
+    """Leaf wrapper marking logical axes; kept OUT of jax pytrees on purpose."""
+
+    __slots__ = ("names",)
+
+    def __init__(self, *names):
+        self.names = tuple(names)
+
+    def __repr__(self):
+        return f"Axes{self.names}"
+
+
+def param(key, shape, axes: tuple, dtype, *, scale: float | None = None):
+    """Truncated-normal init with fan-in scaling; returns (array, Axes)."""
+    if scale is None:
+        fan_in = shape[0] if len(shape) > 1 else shape[-1]
+        scale = 1.0 / np.sqrt(max(1, fan_in))
+    arr = scale * jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+    return arr.astype(dtype), Axes(*axes)
+
+
+def zeros_param(shape, axes: tuple, dtype):
+    return jnp.zeros(shape, dtype), Axes(*axes)
+
+
+def ones_param(shape, axes: tuple, dtype):
+    return jnp.ones(shape, dtype), Axes(*axes)
+
+
+def split_params_axes(tree):
+    """Split a tree of (array, Axes) pairs into (params, axes) trees."""
+    is_pair = lambda x: isinstance(x, tuple) and len(x) == 2 and isinstance(x[1], Axes)
+    params = jax.tree.map(lambda p: p[0], tree, is_leaf=is_pair)
+    axes = jax.tree.map(lambda p: p[1], tree, is_leaf=is_pair)
+    return params, axes
+
+
+def rms_norm(x, gamma, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(dt) * gamma
+
+
+def rope_angles(positions, dim: int, theta: float):
+    """positions: (...,) -> cos/sin of shape (..., dim//2)."""
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv_freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, positions, theta: float):
+    """Rotary embedding. x: (B, S, H, D), positions: (B, S) or (S,)."""
+    b, s, h, d = x.shape
+    if positions.ndim == 1:
+        positions = jnp.broadcast_to(positions[None, :], (b, s))
+    cos, sin = rope_angles(positions, d, theta)          # (B, S, D/2)
+    cos = cos[:, :, None, :]
+    sin = sin[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    """SwiGLU MLP: (x) -> silu(x Wg) * (x Wu) Wd."""
+    g = jax.nn.silu(x @ w_gate)
+    return (g * (x @ w_up)) @ w_down
+
+
+def softmax_xent(logits, labels, weight=None):
+    """Mean cross-entropy in fp32.  logits: (..., V), labels: (...) int."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if weight is None:
+        return jnp.mean(nll)
+    w = weight.astype(jnp.float32)
+    return jnp.sum(nll * w) / jnp.maximum(jnp.sum(w), 1.0)

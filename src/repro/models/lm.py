@@ -1,0 +1,327 @@
+"""Model assembly: embedding -> (prefix + scanned layer groups) -> head.
+
+Layers are grouped into an unrolled *prefix* (e.g. deepseek-v3's first three
+dense layers) and a repeating *unit* scanned with ``lax.scan`` (jamba's unit
+is 8 layers: 7 mamba + 1 attention, alternating dense/MoE FFNs).  Scanning
+keeps compile time flat in depth and gives remat a natural boundary.
+
+Entry points:
+  * ``init_lm``     -> (params, axes) — axes feed ``repro.sharding.specs``.
+  * ``loss_fn``     -> scalar LM loss (causal shift, optional MTP head).
+  * ``forward``     -> logits (+ caches for prefill).
+  * ``decode_step`` -> one-token serving step against a cache.
+  * ``init_cache``  -> zeroed cache pytree for (batch, max_len).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .attention import attention, init_attention, init_attn_cache
+from .common import Axes, ones_param, param, rms_norm, softmax_xent, split_params_axes, swiglu
+from .mamba2 import init_mamba, init_mamba_cache, mamba2
+from .mla import init_mla, init_mla_cache, mla_attention
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+def _init_dense_ffn(key, cfg, width, dtype):
+    d = cfg.d_model
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "w_up": param(k2, (d, width), ("embed", "ffn"), dtype),
+        "w_down": param(k3, (width, d), ("ffn", "embed"), dtype),
+    }
+    if cfg.mlp_act == "swiglu":
+        p["w_gate"] = param(k1, (d, width), ("embed", "ffn"), dtype)
+    return p
+
+
+def _init_layer(key, cfg, layer_idx: int, dtype):
+    from .moe import init_moe  # local import to keep module graph acyclic
+
+    kind, ffn_kind = cfg.mixer_kind(layer_idx), cfg.ffn_kind(layer_idx)
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": ones_param((cfg.d_model,), ("embed",), dtype),
+        "ln2": ones_param((cfg.d_model,), ("embed",), dtype),
+    }
+    if kind == "attn":
+        p["mixer"] = (init_mla(k1, cfg, dtype) if cfg.attn_kind == "mla"
+                      else init_attention(k1, cfg, dtype))
+    else:
+        p["mixer"] = init_mamba(k1, cfg, dtype)
+    if ffn_kind == "dense":
+        width = cfg.moe_dense_ff() if cfg.moe is not None else cfg.d_ff
+        p["ffn"] = _init_dense_ffn(k2, cfg, width, dtype)
+    elif ffn_kind == "moe":
+        p["ffn"] = init_moe(k2, cfg, dtype)
+    else:                      # "none": mixer-only layer (mamba2)
+        del p["ln2"]
+    return p
+
+
+def init_lm(key, cfg):
+    """Returns (params, axes): parallel pytrees of arrays / Axes."""
+    dtype = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, 8)
+    tree = {}
+    if cfg.input_kind == "frames":
+        tree["frame_proj"] = param(keys[0], (cfg.frame_dim, cfg.d_model),
+                                   ("frame", "embed"), dtype)
+        tree["mask_embed"] = param(keys[5], (cfg.d_model,), ("embed",), dtype,
+                                   scale=0.02)
+    tree["embed"] = param(keys[1], (cfg.vocab_padded, cfg.d_model),
+                          ("vocab", "embed"), dtype, scale=cfg.d_model**-0.5)
+    tree["final_norm"] = ones_param((cfg.d_model,), ("embed",), dtype)
+    if not cfg.tie_embeddings:
+        tree["lm_head"] = param(keys[2], (cfg.d_model, cfg.vocab_padded),
+                                ("embed", "vocab"), dtype)
+
+    # prefix layers (unrolled)
+    pref = cfg.prefix_layers
+    if pref:
+        pkeys = jax.random.split(keys[3], pref)
+        tree["prefix"] = [_init_layer(pkeys[i], cfg, i, dtype) for i in range(pref)]
+
+    # scanned body: vmap the unit init over group keys, prepend "layers" axis
+    unit = cfg.scan_unit
+    n_groups = cfg.n_scan_groups
+
+    def init_unit(k):
+        uks = jax.random.split(k, unit)
+        pairs = {f"l{j}": _init_layer(uks[j], cfg, pref + j, dtype)
+                 for j in range(unit)}
+        return split_params_axes(pairs)[0]
+
+    template = {f"l{j}": _init_layer(jax.random.split(keys[4], unit)[j], cfg,
+                                     pref + j, dtype) for j in range(unit)}
+    _, unit_axes = split_params_axes(template)
+    body = jax.vmap(init_unit)(jax.random.split(keys[4], n_groups))
+    body_axes = jax.tree.map(lambda a: Axes("layers", *a.names), unit_axes,
+                             is_leaf=lambda x: isinstance(x, Axes))
+    if cfg.mtp_depth:
+        mk1, mk2, mk3 = jax.random.split(keys[6], 3)
+        tree["mtp"] = {
+            "proj": param(mk1, (2 * cfg.d_model, cfg.d_model),
+                          ("embed", "embed_out"), dtype),
+            "block": _init_layer(mk2, cfg, cfg.n_layers - 1, dtype),
+            "norm": ones_param((cfg.d_model,), ("embed",), dtype),
+        }
+
+    params, axes = split_params_axes(tree)
+    params["body"] = body
+    axes["body"] = body_axes
+    return params, axes
+
+
+# --------------------------------------------------------------------------
+# apply
+# --------------------------------------------------------------------------
+def _apply_layer(cfg, lp, x, positions, kind, ffn_kind, *, mode, cache,
+                 cache_pos):
+    from .moe import moe_ffn
+
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    if kind == "attn":
+        fn = mla_attention if cfg.attn_kind == "mla" else attention
+        y, new_c = fn(cfg, lp["mixer"], h, positions, mode=mode,
+                      cache=None if cache is None else cache["mixer"],
+                      cache_pos=cache_pos)
+    else:
+        y, new_c = mamba2(cfg, lp["mixer"], h, mode=mode,
+                          cache=None if cache is None else cache["mixer"])
+    x = x + y
+    if cfg.seq_shard_attn is not None and kind == "attn" and mode == "full":
+        # sequence-parallel residual (§Perf cell B iter 2): keep the stream
+        # S-sharded so the FFN entry all-gather + exit reduce-scatter replace
+        # the attention-exit gather + FFN all-reduce (fewer bytes, and norms
+        # run on 1/16th of the tokens per shard)
+        from jax.sharding import PartitionSpec as P
+        x = jax.lax.with_sharding_constraint(
+            x, P(cfg.seq_shard_attn, "model", None))
+    new_cache = None if new_c is None else {"mixer": new_c}
+    if ffn_kind == "none":
+        return x, new_cache
+    h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    if ffn_kind == "dense":
+        if cfg.mlp_act == "swiglu":
+            y = swiglu(h, lp["ffn"]["w_gate"], lp["ffn"]["w_up"],
+                       lp["ffn"]["w_down"])
+        else:
+            y = jax.nn.gelu(h @ lp["ffn"]["w_up"]) @ lp["ffn"]["w_down"]
+    else:
+        y = moe_ffn(cfg, lp["ffn"], h)
+    return x + y, new_cache
+
+
+def _embed_inputs(cfg, params, batch, mode):
+    if cfg.input_kind == "frames":
+        x = batch["frames"].astype(params["frame_proj"].dtype) @ params["frame_proj"]
+        if "mask" in batch:  # hubert-style masked prediction: replace frames
+            x = jnp.where(batch["mask"][..., None], params["mask_embed"], x)
+        return x
+    tok = batch["tokens"] if isinstance(batch, dict) else batch
+    return jnp.take(params["embed"], tok, axis=0)
+
+
+def forward(cfg, params, batch, *, mode: str = "full", cache=None,
+            cache_pos=None, return_hidden: bool = False):
+    """Returns (logits, new_cache[, hidden]).
+
+    batch: {"tokens": (B, S)} or {"frames","mask"} for encoders; for decode,
+    tokens is (B, 1) and cache/cache_pos must be given.
+    """
+    x = _embed_inputs(cfg, params, batch, mode)
+    b, s, _ = x.shape
+    positions = jnp.arange(s, dtype=jnp.int32)
+
+    plan = cfg.layer_plan()
+    pref = cfg.prefix_layers
+    new_prefix_caches = []
+    for i in range(pref):
+        c = None if cache is None else cache["prefix"][i]
+        x, nc = _apply_layer(cfg, params["prefix"][i], x, positions, plan[i][0],
+                             plan[i][1], mode=mode, cache=c, cache_pos=cache_pos)
+        new_prefix_caches.append(nc)
+
+    unit = cfg.scan_unit
+
+    def unit_body(x, xs):
+        up, uc = xs
+        new_caches = {}
+        for j in range(unit):
+            kind, ffn_kind = plan[pref + j]
+            c = None if uc is None else uc[f"l{j}"]
+            x, nc = _apply_layer(cfg, up[f"l{j}"], x, positions, kind, ffn_kind,
+                                 mode=mode, cache=c, cache_pos=cache_pos)
+            new_caches[f"l{j}"] = nc
+        return x, (new_caches if mode != "full" else None)
+
+    body_fn = unit_body
+    if cfg.remat and mode == "full":
+        body_fn = jax.checkpoint(unit_body)
+
+    body_cache = None if cache is None else cache["body"]
+    if cfg.scan_unroll:
+        # Straight-line form: identical math, but every layer appears in the
+        # HLO so cost_analysis / collective parsing see true totals (XLA
+        # counts while-loop bodies once).  Dry-run / roofline only.
+        emitted = []
+        for gi in range(cfg.n_scan_groups):
+            up = jax.tree.map(lambda a: a[gi], params["body"])
+            uc = (None if body_cache is None
+                  else jax.tree.map(lambda a: a[gi], body_cache))
+            x, out = body_fn(x, (up, uc))
+            emitted.append(out)
+        body_caches = (None if emitted[0] is None else
+                       jax.tree.map(lambda *xs: jnp.stack(xs), *emitted))
+    else:
+        x, body_caches = jax.lax.scan(
+            body_fn, x,
+            (params["body"], body_cache) if body_cache is not None
+            else (params["body"], None))
+
+    hidden = x
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = x @ head
+
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        new_cache = {"body": body_caches}
+        if pref:
+            new_cache["prefix"] = new_prefix_caches
+    if return_hidden:
+        return logits, new_cache, hidden
+    return logits, new_cache
+
+
+# --------------------------------------------------------------------------
+# losses / steps
+# --------------------------------------------------------------------------
+def loss_fn(cfg, params, batch):
+    """Causal-LM (or masked-encoder) cross-entropy; adds MTP loss if enabled."""
+    if cfg.is_encoder:
+        logits, _ = forward(cfg, params, batch, mode="full")
+        return softmax_xent(logits, batch["labels"], batch.get("mask"))
+
+    tokens = batch["tokens"]
+    labels = batch["labels"]                      # next-token ids, (B, S)
+    weight = batch.get("mask")
+    if cfg.mtp_depth:
+        logits, _, hidden = forward(cfg, params, batch, mode="full",
+                                    return_hidden=True)
+    else:
+        logits, _ = forward(cfg, params, batch, mode="full")
+    loss = softmax_xent(logits, labels, weight)
+
+    if cfg.mtp_depth:
+        # Multi-token prediction (deepseek-v3, depth 1): combine the hidden
+        # state with the embedding of the *next* token and predict t+2.
+        mtp = params["mtp"]
+        emb_next = jnp.take(params["embed"], labels, axis=0)
+        h = jnp.concatenate([rms_norm(hidden, mtp["norm"], cfg.norm_eps),
+                             emb_next], axis=-1) @ mtp["proj"]
+        positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+        plan_kind = ("attn", "dense") if cfg.moe is None else ("attn", "moe")
+        h, _ = _apply_layer(cfg, mtp["block"], h, positions, plan_kind[0],
+                            cfg.ffn_kind(cfg.n_layers - 1), mode="full",
+                            cache=None, cache_pos=None)
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+        logits2 = h @ head
+        labels2 = jnp.roll(labels, -1, axis=1)
+        w2 = jnp.ones_like(labels2, jnp.float32).at[:, -1].set(0.0)
+        if weight is not None:
+            w2 = w2 * weight
+        loss = loss + 0.3 * softmax_xent(logits2, labels2, w2)
+    return loss
+
+
+def decode_step(cfg, params, cache, tokens, cache_pos):
+    """One serving step: tokens (B, 1) -> (logits (B, V), new_cache)."""
+    logits, new_cache = forward(cfg, params, {"tokens": tokens}, mode="decode",
+                                cache=cache, cache_pos=cache_pos)
+    return logits[:, -1, :], new_cache
+
+
+def prefill(cfg, params, tokens):
+    """Full-sequence prefill: returns (last-position logits, cache)."""
+    logits, cache = forward(cfg, params, {"tokens": tokens}, mode="prefill")
+    return logits[:, -1, :], cache
+
+
+def encode_step(cfg, params, batch):
+    """Encoder inference (hubert): frames -> logits over cluster vocab."""
+    logits, _ = forward(cfg, params, batch, mode="full")
+    return logits
+
+
+# --------------------------------------------------------------------------
+# caches
+# --------------------------------------------------------------------------
+def _layer_cache(cfg, layer_idx: int, batch: int, max_len: int, dtype):
+    kind = cfg.mixer_kind(layer_idx)
+    if kind == "attn":
+        if cfg.attn_kind == "mla":
+            return {"mixer": init_mla_cache(cfg, batch, max_len, dtype)}
+        return {"mixer": init_attn_cache(cfg, batch, max_len, dtype)}
+    return {"mixer": init_mamba_cache(cfg, batch, dtype)}
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=None):
+    dtype = jnp.dtype(cfg.dtype) if dtype is None else dtype
+    pref = cfg.prefix_layers
+    unit = cfg.scan_unit
+    n_groups = cfg.n_scan_groups
+    cache = {}
+    if pref:
+        cache["prefix"] = [_layer_cache(cfg, i, batch, max_len, dtype)
+                           for i in range(pref)]
+    unit_cache = {f"l{j}": _layer_cache(cfg, pref + j, batch, max_len, dtype)
+                  for j in range(unit)}
+    cache["body"] = jax.tree.map(
+        lambda a: jnp.tile(a[None], (n_groups,) + (1,) * a.ndim), unit_cache)
+    return cache

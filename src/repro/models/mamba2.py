@@ -1,0 +1,192 @@
+"""Mamba-2 (SSD — state-space duality) mixer: chunked dual form + O(1) decode.
+
+Train/prefill use the chunked SSD algorithm (arXiv:2405.21060 §6): the
+sequence is split into chunks of length Q; within a chunk the computation is
+an attention-like (Q x Q) masked product (MXU-friendly), across chunks a
+single ``lax.scan`` carries the (H, N, P) recurrent state.  Decode is the
+plain SSM recurrence on one token.
+
+Projections are kept separate (z/x, B/C, dt) instead of one fused in_proj so
+each can carry its own sharding axis (d_inner shards over the model axis;
+B/C/dt are small and stay replicated) — see DESIGN.md §3.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ones_param, param, rms_norm, zeros_param
+
+
+def _dims(cfg):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    n_heads = d_in // s.head_dim
+    conv_ch = d_in + 2 * s.n_groups * s.d_state
+    return s, d_in, n_heads, conv_ch
+
+
+def init_mamba(key, cfg, dtype):
+    s, d_in, n_heads, conv_ch = _dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    # dt bias initialized so softplus(dt_bias) spans ~[1e-3, 1e-1]
+    dt0 = jnp.exp(jax.random.uniform(ks[6], (n_heads,), jnp.float32,
+                                     jnp.log(1e-3), jnp.log(1e-1)))
+    dt_bias = dt0 + jnp.log(-jnp.expm1(-dt0))  # inverse softplus
+    return {
+        "in_zx": param(ks[0], (d, 2 * d_in), ("embed", "inner"), dtype),
+        "in_bc": param(ks[1], (d, 2 * s.n_groups * s.d_state), ("embed", None), dtype),
+        "in_dt": param(ks[2], (d, n_heads), ("embed", None), dtype),
+        # depthwise conv split into consistently-sharded segments: fusing the
+        # model-sharded x channels with the replicated B/C channels into one
+        # conv forced GSPMD into 24 GB/dev of halo permutes (§Perf)
+        "conv_wx": param(ks[3], (s.d_conv, d_in), (None, "inner"), dtype, scale=0.5),
+        "conv_bx": zeros_param((d_in,), ("inner",), dtype),
+        "conv_wbc": param(ks[7], (s.d_conv, 2 * s.n_groups * s.d_state),
+                          (None, None), dtype, scale=0.5),
+        "conv_bbc": zeros_param((2 * s.n_groups * s.d_state,), (None,), dtype),
+        "A_log": (jnp.log(jnp.arange(1, n_heads + 1, dtype=jnp.float32)),
+                  ones_param((n_heads,), (None,), dtype)[1]),
+        "dt_bias": (dt_bias, ones_param((n_heads,), (None,), dtype)[1]),
+        "D_skip": ones_param((n_heads,), (None,), dtype),
+        "gate_norm": ones_param((d_in,), ("inner",), dtype),
+        "out": param(ks[5], (d_in, d), ("inner", "embed"), dtype),
+    }
+
+
+def _causal_conv(u, conv_w, conv_b, conv_state=None):
+    """Depthwise causal conv.  u: (B,S,C); conv_w: (K,C).  Returns (y, tail).
+
+    ``conv_state``: (B, K-1, C) carried context for decode/prefill-chaining.
+    """
+    k = conv_w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((u.shape[0], k - 1, u.shape[2]), u.dtype)
+    else:
+        pad = conv_state.astype(u.dtype)
+    ext = jnp.concatenate([pad, u], axis=1)               # (B, S+K-1, C)
+    # y[t] = sum_j w[j] * ext[t+j]
+    y = sum(ext[:, j: j + u.shape[1], :] * conv_w[j][None, None, :]
+            for j in range(k))
+    tail = ext[:, -(k - 1):, :] if k > 1 else jnp.zeros_like(pad)
+    return jax.nn.silu(y + conv_b[None, None, :]), tail
+
+
+def _ssd_chunked(xh, b_mat, c_mat, dt, a_h, chunk: int, state0=None):
+    """Chunked SSD.  xh: (B,S,H,P); b/c: (B,S,H,N) (group-expanded);
+    dt: (B,S,H) (>=0); a_h: (H,) negative.  Returns (y, final_state)."""
+    bsz, s, h, p = xh.shape
+    n = b_mat.shape[-1]
+    nc = s // chunk
+    f32 = jnp.float32
+
+    xc = xh.reshape(bsz, nc, chunk, h, p).astype(f32)
+    bc = b_mat.reshape(bsz, nc, chunk, h, n).astype(f32)
+    cc = c_mat.reshape(bsz, nc, chunk, h, n).astype(f32)
+    dtc = dt.reshape(bsz, nc, chunk, h).astype(f32)
+    da = dtc * a_h.astype(f32)[None, None, None, :]       # (B,nc,Q,H) <= 0
+    cum = jnp.cumsum(da, axis=2)                          # within-chunk cumsum
+
+    # intra-chunk: scores[i,j] = (C_i . B_j) exp(cum_i - cum_j) dt_j, j <= i
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,nc,Q,K,H)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.where(tri[None, None, :, :, None], jnp.exp(seg), 0.0)
+    cb = jnp.einsum("bnqhc,bnkhc->bnqkh", cc, bc)         # (B,nc,Q,K,H)
+    w_att = cb * decay * dtc[:, :, None, :, :]            # weight on x_k
+    y_intra = jnp.einsum("bnqkh,bnkhp->bnqhp", w_att, xc)
+
+    # chunk summary states: S_n = sum_j exp(cum_end - cum_j) dt_j B_j x_j^T
+    decay_end = jnp.exp(cum[:, :, -1:, :] - cum)          # (B,nc,Q,H)
+    s_chunk = jnp.einsum("bnqh,bnqhc,bnqhp->bnhcp",
+                         decay_end * dtc, bc, xc)         # (B,nc,H,N,P)
+    chunk_gain = jnp.exp(cum[:, :, -1, :])                # (B,nc,H)
+
+    def scan_body(state, inp):
+        s_n, gain = inp
+        new = state * gain[:, :, None, None] + s_n
+        return new, state                                  # emit state BEFORE chunk
+
+    init = (jnp.zeros((bsz, h, n, p), f32) if state0 is None
+            else state0.astype(f32))
+    final_state, prev_states = jax.lax.scan(
+        scan_body, init,
+        (s_chunk.transpose(1, 0, 2, 3, 4), chunk_gain.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)    # (B,nc,H,N,P)
+
+    # inter-chunk: y_i += C_i . (exp(cum_i) * state_prev)
+    y_inter = jnp.einsum("bnqhc,bnhcp,bnqh->bnqhp", cc, prev_states,
+                         jnp.exp(cum))
+    y = (y_intra + y_inter).reshape(bsz, s, h, p)
+    return y, final_state
+
+
+def mamba2(cfg, p, x, *, mode: str = "full", cache=None):
+    """Returns (y, new_cache).  cache = {"conv": (B,K-1,C), "ssm": (B,H,N,P)}."""
+    s_cfg, d_in, n_heads, conv_ch = _dims(cfg)
+    bsz, s, _ = x.shape
+    hp = s_cfg.head_dim
+    g, n = s_cfg.n_groups, s_cfg.d_state
+    heads_per_group = n_heads // g
+
+    zx = x @ p["in_zx"]
+    z, xin = zx[..., :d_in], zx[..., d_in:]
+    bc = x @ p["in_bc"]
+    dt = jax.nn.softplus((x @ p["in_dt"]).astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))  # (B,S,H)
+    a_h = -jnp.exp(p["A_log"].astype(jnp.float32))            # (H,) < 0
+
+    state_x = cache["conv_x"] if cache is not None else None
+    state_bc = cache["conv_bc"] if cache is not None else None
+
+    if mode == "decode":
+        xin_c, tail_x = _causal_conv(xin, p["conv_wx"], p["conv_bx"], state_x)
+        y_bc, tail_bc = _causal_conv(bc, p["conv_wbc"], p["conv_bbc"], state_bc)
+        b_raw = y_bc[..., : g * n]
+        c_raw = y_bc[..., g * n:]
+        xh = xin_c.reshape(bsz, s, n_heads, hp).astype(jnp.float32)
+        b_h = jnp.repeat(b_raw.reshape(bsz, s, g, n), heads_per_group,
+                         axis=2).astype(jnp.float32)
+        c_h = jnp.repeat(c_raw.reshape(bsz, s, g, n), heads_per_group,
+                         axis=2).astype(jnp.float32)
+        # one-step recurrence (s == 1)
+        da = jnp.exp(dt[:, 0] * a_h[None, :])                 # (B,H)
+        state = cache["ssm"].astype(jnp.float32)
+        state = (state * da[:, :, None, None]
+                 + jnp.einsum("bh,bhc,bhp->bhcp", dt[:, 0], b_h[:, 0], xh[:, 0]))
+        y = jnp.einsum("bhc,bhcp->bhp", c_h[:, 0], state)[:, None]  # (B,1,H,P)
+        new_cache = {"conv_x": tail_x, "conv_bc": tail_bc,
+                     "ssm": state.astype(cache["ssm"].dtype)}
+    else:
+        xin_c, tail_x = _causal_conv(xin, p["conv_wx"], p["conv_bx"], state_x)
+        y_bc, tail_bc = _causal_conv(bc, p["conv_wbc"], p["conv_bbc"], state_bc)
+        b_raw = y_bc[..., : g * n]
+        c_raw = y_bc[..., g * n:]
+        xh = xin_c.reshape(bsz, s, n_heads, hp)
+        b_h = jnp.repeat(b_raw.reshape(bsz, s, g, n), heads_per_group, axis=2)
+        c_h = jnp.repeat(c_raw.reshape(bsz, s, g, n), heads_per_group, axis=2)
+        chunk = min(s_cfg.chunk, s)
+        assert s % chunk == 0, (s, chunk)
+        y, final_state = _ssd_chunked(xh, b_h, c_h, dt, a_h, chunk)
+        new_cache = None
+        if mode == "prefill":
+            new_cache = {"conv_x": tail_x.astype(x.dtype),
+                         "conv_bc": tail_bc.astype(x.dtype),
+                         "ssm": final_state.astype(x.dtype)}
+        y = y.reshape(bsz, s, n_heads, hp)
+
+    y = y.astype(jnp.float32) + p["D_skip"].astype(jnp.float32)[None, None, :, None] \
+        * (xin_c if mode != "decode" else xh).reshape(bsz, s, n_heads, hp).astype(jnp.float32)
+    y = y.reshape(bsz, s, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    return y @ p["out"], new_cache
+
+
+def init_mamba_cache(cfg, batch: int, dtype):
+    s, d_in, n_heads, conv_ch = _dims(cfg)
+    return {
+        "conv_x": jnp.zeros((batch, s.d_conv - 1, d_in), dtype),
+        "conv_bc": jnp.zeros((batch, s.d_conv - 1, 2 * s.n_groups * s.d_state),
+                             dtype),
+        "ssm": jnp.zeros((batch, n_heads, s.d_state, s.head_dim), dtype),
+    }

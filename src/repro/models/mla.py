@@ -1,0 +1,142 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3) with decoupled RoPE.
+
+Cache stores only the compressed latent per token: ``c_kv`` (kv_lora_rank) +
+the shared rotary key ``k_rope`` (qk_rope_dim) — the memory win of MLA.
+
+Decode uses the *absorbed* formulation by default: instead of expanding the
+cached latents into per-head K/V (which would cost S x kv_lora x H x (nope+v)
+matmuls per step), the query is pushed through W_kv_b once:
+
+    q'_nope = q_nope @ W_kvb_k            (B, 1, H, kv_lora)
+    scores  = q'_nope . c_kv + q_rope . k_rope
+    ctx_lat = softmax(scores) @ c_kv      (B, 1, H, kv_lora)
+    ctx     = ctx_lat @ W_kvb_v           (B, 1, H, v_dim)
+
+which is O(H * S * kv_lora) per token — the form DeepSeek serves with.
+Train/prefill use the expanded form (standard for sequence-parallel matmuls).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import apply_rope, ones_param, param, rms_norm
+
+NEG = -1e30
+
+
+def init_mla(key, cfg, dtype):
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    qk_dim = m.qk_nope_dim + m.qk_rope_dim
+    ks = jax.random.split(key, 6)
+    p = {}
+    if m.q_lora_rank:
+        p["wq_a"] = param(ks[0], (d, m.q_lora_rank), ("embed", "q_lora"), dtype)
+        p["q_norm"] = ones_param((m.q_lora_rank,), ("q_lora",), dtype)
+        p["wq_b"] = param(ks[1], (m.q_lora_rank, h, qk_dim),
+                          ("q_lora", "q_heads", "head"), dtype)
+    else:
+        p["wq"] = param(ks[1], (d, h, qk_dim), ("embed", "q_heads", "head"), dtype)
+    p["wkv_a"] = param(ks[2], (d, m.kv_lora_rank + m.qk_rope_dim),
+                       ("embed", "kv_lora"), dtype)
+    p["kv_norm"] = ones_param((m.kv_lora_rank,), ("kv_lora",), dtype)
+    p["wkv_b"] = param(ks[3], (m.kv_lora_rank, h, m.qk_nope_dim + m.v_head_dim),
+                       ("kv_lora", "q_heads", "head"), dtype)
+    p["wo"] = param(ks[4], (h, m.v_head_dim, d), ("q_heads", "head", "embed"), dtype)
+    return p
+
+
+def _project_q(cfg, p, x):
+    m = cfg.mla
+    if m.q_lora_rank:
+        q_lat = rms_norm(x @ p["wq_a"], p["q_norm"], cfg.norm_eps)
+        q = jnp.einsum("bsr,rhe->bshe", q_lat, p["wq_b"])
+    else:
+        q = jnp.einsum("bsd,dhe->bshe", x, p["wq"])
+    return q[..., : m.qk_nope_dim], q[..., m.qk_nope_dim:]
+
+
+def mla_attention(cfg, p, x, positions, *, mode: str = "full", cache=None,
+                  cache_pos=None):
+    """Returns (y, new_cache).  Cache = {"ckv": (B,S,r), "krope": (B,S,rd)}."""
+    m = cfg.mla
+    b, s, d = x.shape
+    h = cfg.n_heads
+    scale = 1.0 / float(m.qk_nope_dim + m.qk_rope_dim) ** 0.5
+
+    q_nope, q_rope = _project_q(cfg, p, x)                 # (B,S,H,*)
+    kv_a = x @ p["wkv_a"]                                  # (B,S,r+rd)
+    c_kv = rms_norm(kv_a[..., : m.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+    k_rope = kv_a[..., m.kv_lora_rank:]                    # (B,S,rd) shared/heads
+
+    if mode == "decode":
+        pos = cache_pos
+        abs_pos = pos + jnp.arange(s, dtype=jnp.int32)
+        q_rope = apply_rope(q_rope, abs_pos, cfg.rope_theta)
+        k_rope = apply_rope(k_rope[:, :, None, :], abs_pos, cfg.rope_theta)[:, :, 0]
+        ckv = jax.lax.dynamic_update_slice(
+            cache["ckv"], c_kv.astype(cache["ckv"].dtype), (0, pos, 0))
+        krope = jax.lax.dynamic_update_slice(
+            cache["krope"], k_rope.astype(cache["krope"].dtype), (0, pos, 0))
+        w = ckv.shape[1]
+        valid = jnp.arange(w) <= pos                       # (W,)
+        bias = jnp.where(valid, 0.0, NEG)[None, None, None, :]
+
+        wkvb_k = p["wkv_b"][..., : m.qk_nope_dim]          # (r, H, nope)
+        wkvb_v = p["wkv_b"][..., m.qk_nope_dim:]           # (r, H, v)
+        # absorbed decode
+        q_lat = jnp.einsum("bshe,rhe->bshr", q_nope, wkvb_k)     # (B,1,H,r)
+        s_lat = jnp.einsum("bshr,bwr->bhsw", q_lat.astype(jnp.float32),
+                           ckv.astype(jnp.float32))
+        s_rope = jnp.einsum("bshe,bwe->bhsw", q_rope.astype(jnp.float32),
+                            krope.astype(jnp.float32))
+        scores = (s_lat + s_rope) * scale + bias
+        probs = jax.nn.softmax(scores, axis=-1)
+        ctx_lat = jnp.einsum("bhsw,bwr->bshr", probs, ckv.astype(jnp.float32))
+        ctx = jnp.einsum("bshr,rhe->bshe", ctx_lat.astype(x.dtype), wkvb_v)
+        new_cache = {"ckv": ckv, "krope": krope}
+    else:
+        from .attention import _chunked_sdpa  # shared online-softmax core
+
+        q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+        k_rope_r = apply_rope(k_rope[:, :, None, :], positions,
+                              cfg.rope_theta)[:, :, 0]
+        kv = jnp.einsum("bsr,rhe->bshe", c_kv, p["wkv_b"])
+        k_nope = kv[..., : m.qk_nope_dim]
+        v = kv[..., m.qk_nope_dim:]
+        if s > cfg.attn_chunk and s % cfg.attn_chunk == 0:
+            # Fold the shared rotary key into per-head K and reuse the
+            # KV-chunked core (MHA layout: hkv = H, group = 1).
+            k_full = jnp.concatenate(
+                [k_nope, jnp.broadcast_to(k_rope_r[:, :, None, :],
+                                          (b, s, h, m.qk_rope_dim))], axis=-1)
+            q_full = jnp.concatenate([q_nope, q_rope], axis=-1)[:, :, :, None, :]
+            ctx = _chunked_sdpa(q_full.reshape(b, s, h, 1, -1), k_full, v,
+                                positions, causal=cfg.causal and not cfg.is_encoder,
+                                window=None, scale=scale,
+                                chunk=cfg.attn_chunk)[:, :, :, 0, :]
+        else:
+            ok = jnp.ones((s, s), bool)
+            if cfg.causal and not cfg.is_encoder:
+                ok &= positions[None, :] <= positions[:, None]
+            bias = jnp.where(ok, 0.0, NEG)[None, None]
+            s_nope = jnp.einsum("bqhe,bkhe->bhqk", q_nope, k_nope).astype(jnp.float32)
+            s_rope = jnp.einsum("bqhe,bke->bhqk", q_rope, k_rope_r).astype(jnp.float32)
+            scores = (s_nope + s_rope) * scale + bias
+            probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+            ctx = jnp.einsum("bhqk,bkhe->bqhe", probs, v)
+        new_cache = None
+        if mode == "prefill":
+            new_cache = {"ckv": c_kv.astype(x.dtype), "krope": k_rope_r.astype(x.dtype)}
+
+    y = jnp.einsum("bshe,hed->bsd", ctx, p["wo"])
+    return y, new_cache
+
+
+def init_mla_cache(cfg, batch: int, max_len: int, dtype):
+    m = cfg.mla
+    return {
+        "ckv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+        "krope": jnp.zeros((batch, max_len, m.qk_rope_dim), dtype),
+    }

@@ -1,0 +1,97 @@
+"""Mixture-of-Experts FFN: shared + routed top-k, capacity dispatch, EP-ready.
+
+Dispatch is the FLOPs-clean scatter/gather formulation: tokens are assigned
+positions inside each expert's capacity buffer via a cumulative-sum over the
+routing one-hot (GShard-style), then *scattered* into an (E, C, D) buffer —
+data movement, not matmul FLOPs — so ``cost_analysis`` FLOPs stay ~= the
+active-parameter model FLOPs (capacity factor overhead only).  The expert
+matmuls are a single grouped einsum, sharded over the ``experts`` axis (EP).
+
+The deliberate baseline/beyond split (see EXPERIMENTS.md §Perf): this GSPMD
+formulation lets XLA choose the collectives; the hillclimbed variant uses an
+explicit shard_map all-to-all dispatch.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import param
+
+
+def init_moe(key, cfg, dtype):
+    m = cfg.moe
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": param(ks[0], (d, m.num_experts), ("embed", None), jnp.float32),
+        "w_gate": param(ks[1], (m.num_experts, d, m.d_expert),
+                        ("experts", "embed", "expert_ffn"), dtype),
+        "w_up": param(ks[2], (m.num_experts, d, m.d_expert),
+                      ("experts", "embed", "expert_ffn"), dtype),
+        "w_down": param(ks[3], (m.num_experts, m.d_expert, d),
+                        ("experts", "expert_ffn", "embed"), dtype),
+    }
+    if m.n_shared:
+        f = m.n_shared * m.d_expert
+        kss = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_gate": param(kss[0], (d, f), ("embed", "ffn"), dtype),
+            "w_up": param(kss[1], (d, f), ("embed", "ffn"), dtype),
+            "w_down": param(kss[2], (f, d), ("ffn", "embed"), dtype),
+        }
+    return p
+
+
+def capacity(m, n_tokens: int) -> int:
+    return max(m.min_capacity,
+               int(n_tokens * m.top_k * m.capacity_factor) // m.num_experts)
+
+
+def moe_ffn(cfg, p, x):
+    """x: (B, S, D) -> (B, S, D).  Static shapes throughout."""
+    m = cfg.moe
+    bsz, s, d = x.shape
+    t = bsz * s
+    k = m.top_k
+    e = m.num_experts
+    c = capacity(m, t)
+    xf = x.reshape(t, d)
+
+    logits = (xf.astype(jnp.float32) @ p["router"]).astype(jnp.float32)
+    if m.router == "sigmoid":                      # deepseek-v3 aux-free style
+        scores = jax.nn.sigmoid(logits)
+    else:
+        scores = jax.nn.softmax(logits, axis=-1)
+    gate, sel = jax.lax.top_k(scores, k)                     # (T, k)
+    gate = gate / jnp.maximum(jnp.sum(gate, -1, keepdims=True), 1e-9)
+    gate = gate * m.routed_scale
+
+    # position of each (token, choice) inside its expert's capacity buffer
+    onehot = jax.nn.one_hot(sel.reshape(-1), e, dtype=jnp.int32)   # (T*k, E)
+    pos_all = jnp.cumsum(onehot, axis=0) - onehot                  # preceding count
+    pos = jnp.take_along_axis(pos_all, sel.reshape(-1, 1), axis=1)[:, 0]
+    keep = pos < c
+    slot = jnp.where(keep, sel.reshape(-1) * c + pos, e * c)       # OOB -> drop
+
+    # dispatch: scatter token copies into the (E*C, D) buffer
+    tok_idx = jnp.arange(t * k) // k
+    x_rep = jnp.take(xf, tok_idx, axis=0)                          # (T*k, D)
+    buf = jnp.zeros((e * c, d), x.dtype).at[slot].set(x_rep, mode="drop")
+    buf = buf.reshape(e, c, d)
+
+    # grouped expert SwiGLU (EP: all three tensors shard over `experts`)
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"]))
+    u = jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    out = jnp.einsum("ecf,efd->ecd", g * u, p["w_down"])           # (E, C, D)
+
+    # combine: gather each choice's output back, weight, sum over k
+    y_rep = out.reshape(e * c, d).at[jnp.where(keep, slot, 0)].get(
+        mode="clip") * keep[:, None].astype(x.dtype)
+    y = (y_rep.reshape(t, k, d)
+         * gate.reshape(t, k, 1).astype(x.dtype)).sum(axis=1)
+
+    if m.n_shared:
+        sp = p["shared"]
+        y = y + (jax.nn.silu(xf @ sp["w_gate"]) * (xf @ sp["w_up"])) @ sp["w_down"]
+    return y.reshape(bsz, s, d)

@@ -1,0 +1,1 @@
+from .specs import batch_spec, cache_specs, dp_axes, param_shardings, param_specs, resolve_spec, rules_for, to_shardings

@@ -1,0 +1,139 @@
+"""Logical-axis -> PartitionSpec resolution for params, batches and caches.
+
+Rules map logical axis names (attached at init via ``models.common.Axes``) to
+mesh axes.  Resolution is size-aware: a dim that does not divide its mesh axis
+falls back to replication (e.g. smollm's 15 heads, yi's 4 KV heads), and a
+mesh axis is never used twice in one spec.
+
+Strategies:
+  * tp    — tensor parallelism over ``model`` (heads/ffn/vocab/experts/inner).
+  * fsdp  — adds ZeRO-3-style sharding of the ``embed`` dim over ``data``
+            (params, grads and Adam state all inherit it).
+Batch dims shard over ``("pod", "data")`` when the pod axis exists.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..models.common import Axes
+
+TP_RULES = {
+    "vocab": "model", "q_heads": "model", "kv_heads": "model", "ffn": "model",
+    "experts": "model", "inner": "model",
+    "expert_ffn": None, "embed": None, "head": None, "layers": None,
+    "q_lora": None, "kv_lora": None, "frame": None, "embed_out": None,
+    None: None,
+}
+
+
+def rules_for(strategy: str) -> dict:
+    rules = dict(TP_RULES)
+    if strategy == "fsdp":
+        rules["embed"] = "data"
+    elif strategy != "tp":
+        raise ValueError(f"unknown sharding strategy {strategy!r}")
+    return rules
+
+
+def dp_axes(mesh) -> tuple:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def resolve_spec(axes: Axes, shape, mesh, rules) -> P:
+    entries, used = [], set()
+    for name, dim in zip(axes.names, shape):
+        ax = rules.get(name)
+        if ax is not None and ax not in mesh.shape:
+            ax = None  # mesh without this axis (e.g. 1-D host mesh)
+        if ax is not None and ax not in used and dim % mesh.shape[ax] == 0:
+            entries.append(ax)
+            used.add(ax)
+        else:
+            entries.append(None)
+    return P(*entries)
+
+
+def param_specs(axes_tree, shape_tree, mesh, strategy: str = "tp"):
+    """PartitionSpec tree for params (shape_tree from jax.eval_shape)."""
+    rules = rules_for(strategy)
+    return jax.tree.map(
+        lambda a, s: resolve_spec(a, s.shape, mesh, rules),
+        axes_tree, shape_tree, is_leaf=lambda x: isinstance(x, Axes))
+
+
+def param_shardings(axes_tree, shape_tree, mesh, strategy: str = "tp"):
+    return jax.tree.map(lambda spec: NamedSharding(mesh, spec),
+                        param_specs(axes_tree, shape_tree, mesh, strategy))
+
+
+def batch_spec(mesh, batch_shape_tree):
+    """Shard the leading (batch) dim of every batch leaf over (pod, data)."""
+    dp = dp_axes(mesh)
+    return jax.tree.map(
+        lambda s: P(dp, *([None] * (len(s.shape) - 1))), batch_shape_tree)
+
+
+def cache_specs(cache_shape_tree, mesh, *, policy: str = "batch"):
+    """PartitionSpec tree for a decode cache.
+
+    policy="batch"   : shard the batch dim over (pod, data); shard head-ish
+                       dims over model when they divide.
+    policy="sequence": batch too small to shard (long-context decode) — shard
+                       the cache *sequence* dim over data instead (distributed
+                       attention with softmax partial-reduction collectives).
+    """
+    dp = dp_axes(mesh)
+    model = mesh.shape["model"]
+    # base ranks of each cache leaf kind (body caches carry an extra leading
+    # stacked `layers` dim, detected by ndim and spec'd None)
+    base_rank = {"k": 4, "v": 4, "pos": 2, "ckv": 3, "krope": 3,
+                 "conv_x": 3, "conv_bc": 3, "ssm": 4}
+
+    def leaf_spec(path, leaf):
+        name = None
+        for p in reversed(path):
+            if hasattr(p, "key"):
+                name = p.key
+                break
+        shape = leaf.shape
+        rank = base_rank.get(name)
+        stacked = rank is not None and len(shape) == rank + 1
+        core = shape[1:] if stacked else shape
+
+        if name in ("k", "v"):           # (B, W, Hkv, hd)
+            head = "model" if core[2] % model == 0 else None
+            spec = (None, "data", head, None) if policy == "sequence" \
+                else (dp, None, head, None)
+        elif name == "pos":              # (B, W)
+            spec = (None, "data") if policy == "sequence" else (dp, None)
+        elif name in ("ckv", "krope"):   # (B, S, r)
+            spec = (None, "data", None) if policy == "sequence" else (dp, None, None)
+        elif name in ("conv_x", "conv_bc"):   # (B, K-1, C)
+            spec = (None, None, "model" if core[2] % model == 0 else None) \
+                if policy == "sequence" else (dp, None, None)
+        elif name == "ssm":              # (B, H, N, P)
+            hspec = "model" if core[1] % model == 0 else None
+            spec = (None, hspec, None, None) if policy == "sequence" \
+                else (dp, hspec, None, None)
+        else:
+            return P(*([None] * len(shape)))
+
+        # divisibility guard on the batch/data entries too
+        fixed = []
+        for entry, dim in zip(spec, core):
+            size = 1
+            for ax in (entry if isinstance(entry, tuple) else (entry,)):
+                if ax is not None:
+                    size *= mesh.shape[ax]
+            fixed.append(entry if dim % size == 0 else None)
+        if stacked:
+            fixed = [None] + fixed
+        return P(*fixed)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache_shape_tree)
+
+
+def to_shardings(spec_tree, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,1 @@
+from .optimizer import AdamW, SGD, OptState, cosine_schedule, global_norm

@@ -1,0 +1,84 @@
+"""GPipe-style pipeline parallelism over a mesh axis via shard_map + ppermute.
+
+The layer-group dimension maps onto a ``pipe`` mesh axis: each device owns
+``n_groups / pipe`` consecutive groups and microbatches flow through stages
+with ``jax.lax.ppermute``.  The schedule below is the classic GPipe fill/
+drain loop expressed as a single ``lax.scan`` over ``n_micro + n_stages - 1``
+ticks — every tick each stage processes one in-flight microbatch and permutes
+activations to its neighbour, so compute and the permute collective overlap
+across stages.
+
+This is the optional pod-axis deployment (``pod`` axis as ``pipe`` instead
+of pure DP) — cross-pod traffic becomes point-to-point activation passing
+(DCN-friendly) instead of gradient all-reduce.  Correctness is asserted
+against the single-device forward in tests/distributed/.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+
+def pipeline_forward(body_fn, n_stages: int, params_stacked, x_micro,
+                     mesh, axis: str = "pipe"):
+    """Run ``body_fn(unit_params, x) -> x`` over stages on ``axis``.
+
+    params_stacked: leaves with leading dim ``n_groups`` (consecutive groups
+    per stage); x_micro: (n_micro, micro_batch, ...) activations already
+    embedded.  Returns final-stage activations in the same layout.
+    """
+    n_micro = x_micro.shape[0]
+
+    def stage_fn(local_params, xs):
+        # local_params: leading dim n_groups/n_stages (this stage's groups)
+        stage = jax.lax.axis_index(axis)
+        ticks = n_micro + n_stages - 1
+
+        def apply_stage(x):
+            def step(c, up):
+                return body_fn(up, c), None
+            out, _ = jax.lax.scan(step, x, local_params)
+            return out
+
+        def tick(carry, t):
+            buf, outs = carry                     # buf: (micro_batch, ...)
+            # stage s works on microbatch (t - s) when 0 <= t-s < n_micro
+            mb_idx = t - stage
+            active = (mb_idx >= 0) & (mb_idx < n_micro)
+            # stage 0 ingests a fresh microbatch at each fill tick
+            fresh = jax.lax.dynamic_index_in_dim(
+                xs, jnp.clip(t, 0, n_micro - 1), axis=0, keepdims=False)
+            x_in = jnp.where((stage == 0) & active, fresh, buf)
+            y = apply_stage(x_in)
+            y = jnp.where(active, y, buf)
+            # last stage records its finished microbatch
+            done_idx = jnp.clip(t - (n_stages - 1), 0, n_micro - 1)
+            record = (stage == n_stages - 1) & active
+            outs = jax.lax.dynamic_update_index_in_dim(
+                outs, jnp.where(record, y,
+                                jax.lax.dynamic_index_in_dim(outs, done_idx, 0,
+                                                             keepdims=False)),
+                done_idx, axis=0)
+            # pass activations downstream (ring permute; wrap is ignored)
+            y_next = jax.lax.ppermute(
+                y, axis, [(i, (i + 1) % n_stages) for i in range(n_stages)])
+            return (y_next, outs), None
+
+        buf0 = jnp.zeros_like(xs[0])
+        outs0 = jnp.zeros_like(xs)
+        (_, outs), _ = jax.lax.scan(tick, (buf0, outs0), jnp.arange(ticks))
+        # finished microbatches live on the LAST stage; broadcast them so the
+        # replicated out_specs sees the real results on every shard
+        outs = jax.lax.psum(
+            jnp.where(stage == n_stages - 1, outs, jnp.zeros_like(outs)), axis)
+        return outs
+
+    spec_params = jax.tree.map(lambda _: P(axis), params_stacked)
+    fn = shard_map(stage_fn, mesh=mesh,
+                   in_specs=(spec_params, P()), out_specs=P(),
+                   check_rep=False)
+    return fn(params_stacked, x_micro)

@@ -1,0 +1,9 @@
+import os
+import sys
+
+# Tests import the package from src/ (works with or without PYTHONPATH=src).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Tests must see the single real CPU device (the 512-device env is exclusive
+# to repro.launch.dryrun subprocesses).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

@@ -1,0 +1,72 @@
+"""BSGD training: budget enforcement, learning, all four methods."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import BSGDConfig, METHODS, accuracy, fit, init_state, train_step
+from repro.data import make_blobs, make_two_moons, train_test_split
+
+
+def test_budget_never_exceeded():
+    key = jax.random.PRNGKey(0)
+    x, y = make_blobs(key, 400, 6, sep=1.0)
+    cfg = BSGDConfig(budget=20, lambda_=1e-3, gamma=0.5, method="lookup-wd",
+                     batch_size=4)
+    table = cfg.table()
+    state = init_state(cfg, 6)
+    for i in range(0, 200, 4):
+        state = train_step(cfg, table, state, x[i:i+4], y[i:i+4])
+        assert int(state.count) <= cfg.budget
+
+
+def test_insert_only_on_margin_violation():
+    cfg = BSGDConfig(budget=50, lambda_=1e-3, gamma=1.0, method="gss")
+    state = init_state(cfg, 2)
+    x = jnp.asarray([[1.0, 0.0]])
+    y = jnp.asarray([1.0])
+    # empty model: margin = 0 < 1 -> insert
+    state = train_step(cfg, None, state, x, y)
+    assert int(state.count) == 1 and int(state.n_inserts) == 1
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_learns_two_moons(method):
+    key = jax.random.PRNGKey(42)
+    x, y = make_two_moons(key, 1200, noise=0.15)
+    (xtr, ytr), (xte, yte) = train_test_split(x, y)
+    cfg = BSGDConfig(budget=40, lambda_=1e-4, gamma=2.0, method=method)
+    st = fit(cfg, xtr, ytr, epochs=2, seed=0)
+    acc = float(accuracy(st, xte, yte, cfg.gamma))
+    assert acc > 0.95, (method, acc)
+    assert int(st.count) <= cfg.budget
+    assert int(st.n_merges) > 0  # the budget actually bit
+
+
+def test_methods_reach_equivalent_accuracy():
+    """Paper Table 2: lookup variants match GSS accuracy."""
+    key = jax.random.PRNGKey(7)
+    x, y = make_blobs(key, 1500, 10, sep=2.5)
+    (xtr, ytr), (xte, yte) = train_test_split(x, y)
+    accs = {}
+    for method in METHODS:
+        cfg = BSGDConfig(budget=30, lambda_=1e-4, gamma=0.3, method=method,
+                         batch_size=2)
+        st = fit(cfg, xtr, ytr, epochs=2, seed=1)
+        accs[method] = float(accuracy(st, xte, yte, cfg.gamma))
+    spread = max(accs.values()) - min(accs.values())
+    assert spread < 0.05, accs
+    assert min(accs.values()) > 0.9, accs
+
+
+def test_minibatch_matches_single_roughly():
+    key = jax.random.PRNGKey(3)
+    x, y = make_blobs(key, 800, 4, sep=2.0)
+    (xtr, ytr), (xte, yte) = train_test_split(x, y)
+    acc = {}
+    for bs in (1, 8):
+        cfg = BSGDConfig(budget=25, lambda_=1e-4, gamma=0.5, method="lookup-wd",
+                         batch_size=bs)
+        st = fit(cfg, xtr, ytr, epochs=2, seed=0)
+        acc[bs] = float(accuracy(st, xte, yte, cfg.gamma))
+    assert abs(acc[1] - acc[8]) < 0.08, acc

@@ -1,0 +1,94 @@
+"""Budget maintenance: pair choice vs exhaustive oracle, compaction, methods."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import METHODS, default_table, maintenance_step, merge_math
+from repro.kernels import ref
+
+
+def _random_sv_set(key, n_active, slots, dim, *, same_sign=False):
+    k1, k2 = jax.random.split(key)
+    sv_x = jax.random.normal(k1, (slots, dim))
+    alpha = 0.1 * jax.random.normal(k2, (slots,))
+    if same_sign:
+        alpha = jnp.abs(alpha) + 0.01
+    alpha = alpha.at[n_active:].set(0.0)
+    return sv_x, alpha
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_count_decrements_and_compacts(method):
+    key = jax.random.PRNGKey(0)
+    slots, count, dim, gamma = 16, 12, 5, 0.5
+    sv_x, alpha = _random_sv_set(key, count, slots, dim, same_sign=True)
+    table = default_table() if method.startswith("lookup") else None
+    new_x, new_a, new_count, info = maintenance_step(
+        sv_x, alpha, jnp.int32(count), gamma, method=method, table=table)
+    assert int(new_count) == count - 1
+    # compaction: slots >= new_count have zero alpha, active all non-zero
+    assert np.all(np.asarray(new_a[int(new_count):]) == 0.0)
+    assert np.all(np.asarray(jnp.abs(new_a[: int(new_count)])) > 0.0)
+    assert bool(info.merged)
+
+
+def test_min_alpha_partner_is_fixed():
+    key = jax.random.PRNGKey(1)
+    sv_x, alpha = _random_sv_set(key, 10, 12, 4, same_sign=True)
+    alpha = alpha.at[7].set(1e-4)  # force the min slot
+    _, _, _, info = maintenance_step(sv_x, alpha, jnp.int32(10), 1.0,
+                                     method="gss-precise")
+    assert int(info.i_min) == 7
+
+
+def test_partner_choice_matches_exhaustive_oracle():
+    """The chosen partner minimizes true WD among same-sign candidates."""
+    key = jax.random.PRNGKey(2)
+    count, slots, dim, gamma = 14, 16, 3, 0.7
+    sv_x, alpha = _random_sv_set(key, count, slots, dim, same_sign=True)
+    _, _, _, info = maintenance_step(sv_x, alpha, jnp.int32(count), gamma,
+                                     method="gss-precise")
+    i = int(info.i_min)
+    kappa = np.asarray(ref.rbf_row(sv_x, sv_x[i], gamma))
+    a = np.asarray(alpha)
+    best_wd, best_j = np.inf, -1
+    for j in range(count):
+        if j == i:
+            continue
+        h = merge_math.gss_numpy(a[i] / (a[i] + a[j]), kappa[j])
+        az = a[i] * kappa[j] ** ((1 - h) ** 2) + a[j] * kappa[j] ** (h**2)
+        wd = a[i]**2 + a[j]**2 + 2 * a[i] * a[j] * kappa[j] - az**2
+        if wd < best_wd:
+            best_wd, best_j = wd, j
+    assert int(info.j_star) == best_j
+    assert np.isclose(float(info.wd_star), best_wd, rtol=1e-3, atol=1e-6)
+
+
+def test_opposite_sign_fallback_removal():
+    """All-different-sign candidates -> removal of the min-|alpha| SV."""
+    key = jax.random.PRNGKey(3)
+    sv_x, _ = _random_sv_set(key, 6, 8, 3)
+    alpha = jnp.asarray([0.01, -0.5, -0.3, -0.7, -0.2, -0.9, 0.0, 0.0])
+    new_x, new_a, new_count, info = maintenance_step(
+        sv_x, alpha, jnp.int32(6), 1.0, method="gss")
+    assert not bool(info.merged)
+    assert int(new_count) == 5
+    assert np.all(np.asarray(new_a[:5]) < 0)  # the lone positive SV was removed
+
+
+@pytest.mark.parametrize("method", ["lookup-h", "lookup-wd"])
+def test_lookup_agrees_with_gss_decisions(method):
+    """Paper Table 3: lookup picks the same partner as GSS nearly always."""
+    table = default_table()
+    agree = 0
+    trials = 40
+    for t in range(trials):
+        key = jax.random.PRNGKey(100 + t)
+        sv_x, alpha = _random_sv_set(key, 20, 24, 4, same_sign=True)
+        _, _, _, info_g = maintenance_step(sv_x, alpha, jnp.int32(20), 0.5,
+                                           method="gss")
+        _, _, _, info_l = maintenance_step(sv_x, alpha, jnp.int32(20), 0.5,
+                                           method=method, table=table)
+        agree += int(info_g.j_star) == int(info_l.j_star)
+    assert agree / trials >= 0.85

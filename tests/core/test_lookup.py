@@ -1,0 +1,77 @@
+"""Lookup tables: precompute accuracy, interpolation, persistence."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import MergeLookupTable, merge_math
+from repro.core.lookup import bilinear_lookup, build_lookup_table
+
+
+def test_bilinear_exact_at_grid_nodes():
+    tbl = jnp.arange(25.0).reshape(5, 5)
+    g = jnp.linspace(0, 1, 5)
+    for i in range(5):
+        for j in range(5):
+            assert float(bilinear_lookup(tbl, g[i], g[j])) == float(tbl[i, j])
+
+
+def test_bilinear_linear_function_is_exact():
+    f = lambda u, v: 2.0 * u - 3.0 * v + 0.5
+    tbl = build_lookup_table(f, grid_size=11)
+    rng = np.random.default_rng(0)
+    u, v = rng.uniform(0, 1, (2, 100)).astype(np.float32)
+    got = bilinear_lookup(tbl, jnp.asarray(u), jnp.asarray(v))
+    np.testing.assert_allclose(np.asarray(got), f(u, v), rtol=2e-5, atol=2e-5)
+
+
+def test_table_matches_precise_gss_off_grid():
+    """Paper §4: lookup at 400x400 is *more* precise than eps=.01 GSS."""
+    tbl = MergeLookupTable.create()
+    rng = np.random.default_rng(1)
+    m = rng.uniform(0.05, 0.95, 500)
+    k = rng.uniform(np.exp(-2) + 0.02, 0.995, 500)
+    h_ref = merge_math.gss_numpy(m, k)
+    wd_ref = np.asarray(merge_math.wd_norm_at(
+        jnp.asarray(h_ref, jnp.float32), jnp.asarray(m, jnp.float32),
+        jnp.asarray(k, jnp.float32)))
+    wd_tbl = np.asarray(tbl.lookup_wd_norm(jnp.asarray(m, jnp.float32),
+                                           jnp.asarray(k, jnp.float32)))
+    assert np.max(np.abs(wd_tbl - wd_ref)) < 2e-5
+
+    # and indeed tighter than the eps=.01 runtime GSS the paper replaces:
+    h_std = np.asarray(merge_math.golden_section_search(
+        jnp.asarray(m, jnp.float32), jnp.asarray(k, jnp.float32), eps=1e-2))
+    wd_std = np.asarray(merge_math.wd_norm_at(
+        jnp.asarray(h_std), jnp.asarray(m, jnp.float32), jnp.asarray(k, jnp.float32)))
+    assert np.mean(np.abs(wd_tbl - wd_ref)) <= np.mean(np.abs(wd_std - wd_ref))
+
+
+def test_boundary_columns_analytic():
+    tbl = MergeLookupTable.create(grid_size=101)
+    g = np.linspace(0, 1, 101)
+    np.testing.assert_allclose(np.asarray(tbl.h_table[:, -1]), g, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(tbl.wd_table[:, -1]), 0.0, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(tbl.wd_table[:, 0]),
+                               np.minimum(g, 1 - g) ** 2, atol=1e-6)
+
+
+def test_save_load_roundtrip(tmp_path):
+    tbl = MergeLookupTable.create(grid_size=64)
+    path = os.path.join(tmp_path, "tables.npz")
+    tbl.save(path)
+    tbl2 = MergeLookupTable.load(path)
+    np.testing.assert_array_equal(np.asarray(tbl.h_table), np.asarray(tbl2.h_table))
+    np.testing.assert_array_equal(np.asarray(tbl.wd_table), np.asarray(tbl2.wd_table))
+
+
+def test_table_threads_through_jit():
+    tbl = MergeLookupTable.create(grid_size=64)
+
+    @jax.jit
+    def f(t: MergeLookupTable, m, k):
+        return t.lookup_wd_norm(m, k)
+
+    out = f(tbl, jnp.float32(0.4), jnp.float32(0.8))
+    assert jnp.isfinite(out)

@@ -1,0 +1,94 @@
+"""Merge-problem math: GSS optimality, closed forms, paper Lemma 1."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import merge_math as mm
+
+GRID_POINTS = [(m, k) for m in (0.01, 0.2, 0.45, 0.5, 0.55, 0.8, 0.99)
+               for k in (0.01, 0.1, float(np.exp(-2)), 0.2, 0.5, 0.9, 0.999)]
+
+
+def s_np(h, m, k):
+    k = max(k, 1e-30)
+    return m * k ** ((1.0 - h) ** 2) + (1.0 - m) * k ** (h**2)
+
+
+@pytest.mark.parametrize("m,k", GRID_POINTS)
+def test_gss_reaches_brute_force_max(m, k):
+    """Objective VALUE at the GSS solution matches the dense-grid max.
+
+    (argmax may differ on the bimodal set Z where two maxima tie — Lemma 1.)
+    """
+    h_bf = mm.brute_force_h(m, k, n_grid=100_001)
+    best = s_np(h_bf, m, k)
+    h64 = float(mm.gss_numpy(m, k))
+    assert s_np(h64, m, k) >= best - 1e-9
+    h32 = float(mm.golden_section_search(m, k, eps=1e-10))
+    assert s_np(h32, m, k) >= best - 1e-5
+
+
+def test_gss_iteration_counts_match_paper():
+    assert mm.gss_num_iters(1e-2) == 10     # paper's runtime precision
+    assert mm.gss_num_iters(1e-10) == 48    # paper's table-build precision
+
+
+def test_closed_forms_consistent():
+    """alpha_z / WD closed forms vs direct RKHS computation on explicit
+    2-point geometry: phi(x).phi(x') = kappa."""
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        a_a, a_b = rng.uniform(0.1, 2.0, 2)
+        kap = rng.uniform(0.01, 0.999)
+        h = rng.uniform(0, 1)
+        a_z = float(mm.merge_alpha_z(a_a, a_b, kap, h))
+        # Gram matrix of [phi(x_a), phi(x_b), phi(z)]
+        kaz = kap ** ((1 - h) ** 2)
+        kbz = kap ** (h**2)
+        # || a_a phi_a + a_b phi_b - a_z phi_z ||^2 expanded via the Gram matrix
+        wd_direct = (a_a**2 + a_b**2 + a_z**2 + 2 * a_a * a_b * kap
+                     - 2 * a_a * a_z * kaz - 2 * a_b * a_z * kbz)
+        wd_formula = float(mm.weight_degradation(a_a, a_b, kap, a_z))
+        assert np.isclose(wd_direct, wd_formula, rtol=1e-5, atol=1e-6)
+
+
+def test_optimal_alpha_z_minimizes_wd():
+    """alpha_z = a_a k(x_a,z) + a_b k(x_b,z) is the exact minimizer over
+    alpha for fixed z (projection), so perturbing it can only increase WD."""
+    for (a_a, a_b, kap, h) in [(1.0, 0.5, 0.7, 0.4), (0.2, 0.9, 0.3, 0.8)]:
+        a_z = float(mm.merge_alpha_z(a_a, a_b, kap, h))
+        kaz = kap ** ((1 - h) ** 2)
+        kbz = kap ** (h**2)
+        def wd_at(az):
+            return (a_a**2 + a_b**2 + az**2 + 2 * a_a * a_b * kap
+                    - 2 * a_a * az * kaz - 2 * a_b * az * kbz)
+        assert wd_at(a_z) <= wd_at(a_z + 0.01) + 1e-9
+        assert wd_at(a_z) <= wd_at(a_z - 0.01) + 1e-9
+
+
+def test_lemma1_mode_structure():
+    """s''_{1/2,kappa}(1/2) > 0  <=>  kappa < e^{-2} (two modes)."""
+    for k in (0.05, 0.10, 0.13):
+        assert float(mm.s_second_derivative_at_half(k)) > 0, k
+    for k in (0.14, 0.3, 0.9):
+        assert float(mm.s_second_derivative_at_half(k)) < 0, k
+
+
+def test_lemma1_h_discontinuity_wd_continuity():
+    """Crossing m = 1/2 at kappa < e^-2: h jumps, WD stays continuous."""
+    k = 0.05
+    h_lo = float(mm.gss_numpy(0.499, k))
+    h_hi = float(mm.gss_numpy(0.501, k))
+    assert abs(h_hi - h_lo) > 0.5          # the jump across Z
+    wd_lo = float(mm.wd_norm_at(h_lo, 0.499, k))
+    wd_hi = float(mm.wd_norm_at(h_hi, 0.501, k))
+    assert abs(wd_hi - wd_lo) < 1e-3       # WD continuous (Lemma 1)
+
+
+def test_h_symmetry():
+    """h(m, kappa) = 1 - h(1-m, kappa) by the merge symmetry."""
+    for m in (0.1, 0.3, 0.45):
+        for k in (0.2, 0.5, 0.9):
+            h1 = float(mm.gss_numpy(m, k))
+            h2 = float(mm.gss_numpy(1.0 - m, k))
+            assert abs((1.0 - h2) - h1) < 1e-4

@@ -1,0 +1,81 @@
+"""Hypothesis property tests on the merge-problem invariants."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import default_table, merge_math as mm
+
+UNIT = st.floats(0.001, 0.999)
+POS = st.floats(0.01, 5.0)
+H = st.floats(0.0, 1.0)
+
+COMMON = dict(deadline=None, max_examples=60)
+
+
+@given(m=UNIT, k=UNIT)
+@settings(**COMMON)
+def test_wd_nonnegative_at_optimum(m, k):
+    h = float(mm.gss_numpy(m, k))
+    wd = float(mm.wd_norm_at(h, m, k))
+    assert wd >= -1e-5
+
+
+@given(m=UNIT, k=UNIT)
+@settings(**COMMON)
+def test_optimum_beats_endpoints(m, k):
+    """Merging at h* is never worse than removing either point (h=0/1)."""
+    h = float(mm.gss_numpy(m, k))
+    wd_star = float(mm.wd_norm_at(h, m, k))
+    assert wd_star <= float(mm.wd_norm_at(0.0, m, k)) + 1e-5
+    assert wd_star <= float(mm.wd_norm_at(1.0, m, k)) + 1e-5
+
+
+@given(m=UNIT, k=UNIT, h=H)
+@settings(**COMMON)
+def test_optimum_beats_random_h(m, k, h):
+    h_star = float(mm.gss_numpy(m, k))
+    assert float(mm.wd_norm_at(h_star, m, k)) <= float(mm.wd_norm_at(h, m, k)) + 1e-5
+
+
+@given(m=UNIT, k=UNIT)
+@settings(**COMMON)
+def test_wd_symmetry_in_m(m, k):
+    h1 = float(mm.gss_numpy(m, k))
+    h2 = float(mm.gss_numpy(1 - m, k))
+    assert abs(float(mm.wd_norm_at(h1, m, k))
+               - float(mm.wd_norm_at(h2, 1 - m, k))) < 1e-5
+
+
+@given(a=POS, b=POS, k=UNIT, h=H)
+@settings(**COMMON)
+def test_alpha_z_scale_equivariance(a, b, k, h):
+    """alpha_z(c*a, c*b) = c * alpha_z(a, b) — justifies the (m, kappa)
+    normalization that makes the 2-D lookup possible."""
+    c = 3.7
+    z1 = float(mm.merge_alpha_z(a, b, k, h))
+    z2 = float(mm.merge_alpha_z(c * a, c * b, k, h))
+    assert np.isclose(z2, c * z1, rtol=1e-4)
+
+
+@given(a=POS, b=POS, k=UNIT)
+@settings(**COMMON)
+def test_wd_scale_quadratic(a, b, k):
+    """WD scales as (a+b)^2 * WD_norm(m, kappa) — the Lookup-WD identity."""
+    m = a / (a + b)
+    h = float(mm.gss_numpy(m, k))
+    az = mm.merge_alpha_z(jnp.float32(a), jnp.float32(b), jnp.float32(k),
+                          jnp.float32(h))
+    wd = float(mm.weight_degradation(jnp.float32(a), jnp.float32(b),
+                                     jnp.float32(k), az))
+    wd_norm = float(mm.wd_norm_at(h, m, k))
+    assert np.isclose(wd, (a + b) ** 2 * wd_norm, rtol=5e-3, atol=1e-5)
+
+
+@given(m=st.floats(0.05, 0.95), k=st.floats(float(np.exp(-2)) + 0.02, 0.995))
+@settings(**COMMON)
+def test_lookup_wd_close_to_precise(m, k):
+    tbl = default_table()
+    wd_tbl = float(tbl.lookup_wd_norm(jnp.float32(m), jnp.float32(k)))
+    h = float(mm.gss_numpy(m, k))
+    wd_ref = float(mm.wd_norm_at(h, m, k))
+    assert abs(wd_tbl - wd_ref) < 5e-5

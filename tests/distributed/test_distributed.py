@@ -1,0 +1,204 @@
+"""Distributed correctness, run in subprocesses with 8 host devices.
+
+Smoke tests must see 1 device, so every multi-device scenario is an isolated
+``python -c`` child with its own ``--xla_force_host_platform_device_count=8``.
+"""
+import os
+import subprocess
+import sys
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+
+
+def run_py(code: str, n_devices: int = 8, timeout: int = 600, env_extra=None):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("JAX_PLATFORMS", None)
+    if env_extra:
+        env.update(env_extra)
+    proc = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                          text=True, timeout=timeout, env=env)
+    assert proc.returncode == 0, f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
+    return proc.stdout
+
+
+def test_dp_tp_train_step_matches_single_device():
+    """The pjit'd train step on a 2x4 mesh reproduces single-device math."""
+    run_py(r"""
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import get_smoke
+from repro.launch.mesh import make_mesh
+from repro.launch.steps import make_train_step
+from repro.launch import inputs as inp
+from repro.sharding import specs as sh
+from repro.models import init_lm
+from repro.train.optimizer import AdamW
+
+cfg = get_smoke("yi_9b")
+key = jax.random.PRNGKey(0)
+params, axes = init_lm(key, cfg)
+opt = AdamW(lr=1e-3)
+opt_state = opt.init(params)
+toks = jax.random.randint(key, (8, 16), 0, cfg.vocab_size)
+batch = {"tokens": toks, "labels": jnp.roll(toks, -1, 1),
+         "mask": jnp.ones((8, 16), jnp.float32)}
+step = make_train_step(cfg, opt)
+
+# single device reference
+p1, o1, loss1 = jax.jit(step)(params, opt_state, batch)
+
+# 2x4 mesh
+mesh = make_mesh((2, 4), ("data", "model"))
+params_s = jax.eval_shape(lambda: params)
+p_shard = sh.param_shardings(axes, params_s, mesh, "tp")
+b_shard = sh.to_shardings(sh.batch_spec(mesh, jax.eval_shape(lambda: batch)), mesh)
+with mesh:
+    p8, o8, loss8 = jax.jit(step, in_shardings=(p_shard, None, b_shard))(
+        params, opt_state, batch)
+assert abs(float(loss1) - float(loss8)) < 1e-3, (float(loss1), float(loss8))
+err = max(float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
+          for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p8)))
+assert err < 5e-2, err
+print("OK dp+tp parity", float(loss1), err)
+""")
+
+
+def test_fsdp_strategy_matches_tp():
+    run_py(r"""
+import jax, jax.numpy as jnp
+from repro.configs import get_smoke
+from repro.launch.mesh import make_mesh
+from repro.launch.steps import make_train_step
+from repro.sharding import specs as sh
+from repro.models import init_lm
+from repro.train.optimizer import AdamW
+
+cfg = get_smoke("deepseek_coder_33b")
+key = jax.random.PRNGKey(1)
+params, axes = init_lm(key, cfg)
+opt = AdamW(lr=1e-3)
+opt_state = opt.init(params)
+toks = jax.random.randint(key, (8, 16), 0, cfg.vocab_size)
+batch = {"tokens": toks, "labels": jnp.roll(toks, -1, 1),
+         "mask": jnp.ones((8, 16), jnp.float32)}
+step = make_train_step(cfg, opt)
+mesh = make_mesh((2, 4), ("data", "model"))
+params_s = jax.eval_shape(lambda: params)
+losses = {}
+for strat in ("tp", "fsdp"):
+    p_shard = sh.param_shardings(axes, params_s, mesh, strat)
+    with mesh:
+        _, _, loss = jax.jit(step, in_shardings=(p_shard, None, None))(
+            params, opt_state, batch)
+    losses[strat] = float(loss)
+assert abs(losses["tp"] - losses["fsdp"]) < 1e-3, losses
+print("OK fsdp parity", losses)
+""")
+
+
+def test_compressed_psum_within_quantization_error():
+    run_py(r"""
+import jax, jax.numpy as jnp, numpy as np
+from functools import partial
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+from repro.launch.mesh import make_mesh
+from repro.train.grad_compress import compressed_psum
+
+mesh = make_mesh((8,), ("data",))
+g = jax.random.normal(jax.random.PRNGKey(0), (8, 64))
+
+@partial(shard_map, mesh=mesh, in_specs=P("data"), out_specs=P("data"),
+         check_rep=False)
+def compressed_mean(gs):
+    mean, resid = compressed_psum({"g": gs}, None, "data")
+    return mean["g"]
+
+got = compressed_mean(g)[0]
+want = jnp.mean(g, axis=0)
+scale = float(jnp.max(jnp.abs(g)) / 127.0)
+err = float(jnp.max(jnp.abs(got - want)))
+assert err <= scale, (err, scale)
+print("OK compressed psum", err, scale)
+""")
+
+
+def test_pipeline_forward_matches_sequential():
+    run_py(r"""
+import jax, jax.numpy as jnp, numpy as np
+from repro.launch.mesh import make_mesh
+from repro.train.pipeline import pipeline_forward
+
+mesh = make_mesh((4,), ("pipe",))
+n_groups, d = 8, 16
+ws = jax.random.normal(jax.random.PRNGKey(0), (n_groups, d, d)) * 0.3
+
+def body(w, x):
+    return jnp.tanh(x @ w)
+
+x_micro = jax.random.normal(jax.random.PRNGKey(1), (6, 4, d))  # 6 microbatches
+
+# sequential reference
+def seq(x):
+    for i in range(n_groups):
+        x = body(ws[i], x)
+    return x
+want = jax.vmap(seq)(x_micro)
+
+got = pipeline_forward(body, 4, ws, x_micro, mesh, axis="pipe")
+err = float(jnp.max(jnp.abs(got - want)))
+assert err < 1e-4, err
+print("OK pipeline parity", err)
+""")
+
+
+def test_elastic_restart_with_fault_injection(tmp_path):
+    """Child crashes at step 12 (hard exit), supervisor restarts, training
+    resumes from the atomic checkpoint and completes."""
+    ckdir = str(tmp_path / "ck")
+    out = run_py(rf"""
+import sys
+from repro.launch.elastic import supervise
+restarts = supervise(
+    [sys.executable, "-m", "repro.launch.train", "--arch", "smollm_360m",
+     "--smoke", "--steps", "24", "--ckpt-dir", r"{ckdir}",
+     "--ckpt-every", "8", "--batch-size", "2", "--seq-len", "32"],
+    env_extra={{"FAULT_AT_STEP": "12"}})
+assert restarts == 1, restarts
+print("OK elastic restart", restarts)
+""", n_devices=1, timeout=900)
+    assert "OK elastic restart" in out
+
+
+def test_elastic_reshard_across_device_counts(tmp_path):
+    """Save params sharded on 8 devices, restore on 2 (different mesh)."""
+    ckdir = str(tmp_path / "ck")
+    run_py(rf"""
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro import checkpoint as ckpt
+from repro.launch.mesh import make_mesh
+
+mesh = make_mesh((8,), ("model",))
+w = jax.device_put(jnp.arange(64.0).reshape(8, 8),
+                   NamedSharding(mesh, P("model", None)))
+ckpt.save(r"{ckdir}", 5, {{"w": w}})
+print("saved")
+""", n_devices=8)
+    out = run_py(rf"""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro import checkpoint as ckpt
+from repro.launch.mesh import make_mesh
+
+mesh = make_mesh((2,), ("model",))
+target = {{"w": jnp.zeros((8, 8))}}
+shardings = {{"w": NamedSharding(mesh, P("model", None))}}
+step, tree = ckpt.restore_latest(r"{ckdir}", target, shardings=shardings)
+assert step == 5
+np.testing.assert_array_equal(np.asarray(tree["w"]),
+                               np.arange(64.0).reshape(8, 8))
+print("OK reshard", tree["w"].sharding)
+""", n_devices=2)
+    assert "OK reshard" in out

@@ -1,0 +1,97 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs the ref oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import default_table
+from repro.kernels import ops, ref
+
+RBF_SHAPES = [(8, 8, 4), (100, 73, 37), (128, 128, 128), (130, 257, 512),
+              (1, 300, 3), (513, 5, 700)]
+
+
+@pytest.mark.parametrize("n,m,d", RBF_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rbf_matrix_matches_ref(n, m, d, dtype):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(n * 31 + m))
+    x = jax.random.normal(k1, (n, d), dtype)
+    y = jax.random.normal(k2, (m, d), dtype)
+    got = ops.rbf_matrix(x, y, 0.3, impl="pallas_interpret")
+    want = ref.rbf_matrix(x.astype(jnp.float32), y.astype(jnp.float32), 0.3)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("gamma", [0.01, 1.0, 30.0])
+def test_rbf_gamma_sweep(gamma):
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (64, 16))
+    got = ops.rbf_matrix(x, x, gamma, impl="pallas_interpret")
+    want = ref.rbf_matrix(x, x, gamma)
+    # exp amplifies fp error by ~gamma * |eps(d^2)| — scale tolerance with it
+    tol = max(1e-5, 3e-5 * gamma)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol)
+    # self-distance cancels to ~eps; diagonal ~= 1 up to exp(-gamma*eps)
+    np.testing.assert_allclose(np.asarray(jnp.diag(got)), 1.0, atol=tol)
+
+
+def test_rbf_row():
+    key = jax.random.PRNGKey(1)
+    sv = jax.random.normal(key, (57, 9))
+    x = jax.random.normal(jax.random.PRNGKey(2), (9,))
+    got = ops.rbf_row(sv, x, 0.7, impl="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref.rbf_row(sv, x, 0.7)),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("s", [16, 100, 512, 1000])
+def test_merge_scores_matches_ref(s):
+    tbl = default_table()
+    key = jax.random.PRNGKey(s)
+    alpha = jnp.abs(jax.random.normal(key, (s,))) * 0.2 + 0.01
+    kappa = jax.random.uniform(jax.random.PRNGKey(s + 1), (s,))
+    valid = jax.random.bernoulli(jax.random.PRNGKey(s + 2), 0.8, (s,))
+    a_min = 0.05
+    wd_p, int_p = ops.merge_scores(alpha, kappa, valid, a_min, tbl.wd_table,
+                                   impl="pallas_interpret")
+    wd_r, int_r = ops.merge_scores(alpha, kappa, valid, a_min, tbl.wd_table,
+                                   impl="ref")
+    mask = np.asarray(valid)
+    np.testing.assert_allclose(np.asarray(wd_p)[mask], np.asarray(wd_r)[mask],
+                               rtol=1e-4, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(int_p), np.asarray(int_r),
+                               rtol=1e-4, atol=1e-6)
+    # invalid slots must lose every argmin
+    if (~mask).any() and mask.any():
+        assert np.asarray(wd_p)[~mask].min() > np.asarray(wd_p)[mask].max()
+
+
+def test_merge_scores_argmin_equals_oracle():
+    """End-to-end: the kernel's argmin picks the oracle's best partner."""
+    tbl = default_table()
+    for seed in range(5):
+        key = jax.random.PRNGKey(seed)
+        alpha = jnp.abs(jax.random.normal(key, (64,))) * 0.3 + 0.02
+        kappa = jax.random.uniform(jax.random.PRNGKey(seed + 9), (64,),
+                                   minval=0.2, maxval=0.99)
+        valid = jnp.ones((64,), bool).at[10].set(False)
+        wd_p, _ = ops.merge_scores(alpha, kappa, valid, 0.04, tbl.wd_table,
+                                   impl="pallas_interpret")
+        wd_r, _ = ops.merge_scores(alpha, kappa, valid, 0.04, tbl.wd_table,
+                                   impl="ref")
+        assert int(jnp.argmin(wd_p)) == int(jnp.argmin(wd_r))
+
+
+@pytest.mark.parametrize("shape", [(1, 16), (3, 100), (8, 512)])
+@pytest.mark.parametrize("n_iters", [10, 48])
+def test_gss_kernel_matches_ref(shape, n_iters):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(shape[1]))
+    m = jax.random.uniform(k1, shape, minval=0.01, maxval=0.99)
+    kappa = jax.random.uniform(k2, shape, minval=0.15, maxval=0.999)
+    got = ops.gss_solve(m, kappa, n_iters=n_iters, impl="pallas_interpret")
+    want = ref.gss(m, kappa, n_iters)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)

@@ -1,0 +1,122 @@
+"""Launch-layer structural tests: cell plans lower+compile on a small mesh
+(subprocess with 8 host devices — the cheap rehearsal of the 512-dev dryrun),
+and the roofline HLO parsers on synthetic text."""
+import os
+import subprocess
+import sys
+
+from repro.launch import roofline as rl
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+
+
+def run_py(code: str, n_devices: int = 8, timeout: int = 900):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("JAX_PLATFORMS", None)
+    proc = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                          text=True, timeout=timeout, env=env)
+    assert proc.returncode == 0, f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
+    return proc.stdout
+
+
+def test_every_family_lowers_and_compiles_every_step_kind():
+    """One arch per family x {train, prefill, decode} on a 2x4 mesh with
+    reduced configs — catches sharding-plan bugs without 512-dev compiles."""
+    out = run_py(r"""
+import dataclasses
+import jax
+from repro.configs import get_smoke, SHAPES
+from repro.launch.mesh import make_mesh
+from repro.launch.steps import plan_cell
+from repro.launch import inputs as inp
+
+mesh = make_mesh((2, 4), ("data", "model"))
+ARCHS = ["smollm_360m", "mamba2_130m", "jamba_v01_52b", "deepseek_v2_236b",
+         "hubert_xlarge"]
+# shrink the assignment shapes so compiles are fast
+small_shapes = {
+    "train_4k": dict(seq_len=32, global_batch=8, step="train"),
+    "prefill_32k": dict(seq_len=64, global_batch=8, step="prefill"),
+    "decode_32k": dict(seq_len=64, global_batch=8, step="decode"),
+}
+import repro.configs.registry as reg
+import repro.launch.inputs as inputs_mod
+reg.SHAPES.update(small_shapes)
+
+from repro.launch.steps import lower_cell
+for arch in ARCHS:
+    cfg = get_smoke(arch)
+    for shape in ("train_4k", "prefill_32k", "decode_32k"):
+        if cfg.is_encoder and shape == "decode_32k":
+            continue
+        lowered, plan = lower_cell(cfg, shape, mesh, strategy="tp")
+        compiled = lowered.compile()
+        cost = compiled.cost_analysis()
+        assert cost.get("flops", 0) > 0 or shape == "decode_32k"
+        print("OK", arch, shape, int(cost.get("flops", 0)))
+print("ALL OK")
+""")
+    assert "ALL OK" in out
+
+
+SAMPLE_HLO = """
+HloModule test
+ENTRY %main (p0: bf16[16,128]) -> bf16[16,128] {
+  %p0 = bf16[16,128]{1,0} parameter(0)
+  %ag = bf16[16,2048]{1,0} all-gather(%p0), replica_groups={}
+  %ar = bf16[16,128]{1,0} all-reduce(%p0), to_apply=%add
+  %ars = bf16[16,128]{1,0} all-reduce-start(%p0), to_apply=%add
+  %ard = bf16[16,128]{1,0} all-reduce-done(%ars)
+  %rs = bf16[2,128]{1,0} reduce-scatter(%p0), dimensions={0}
+  %a2a = bf16[16,128]{1,0} all-to-all(%p0), dimensions={0}
+  %cp = bf16[16,128]{1,0} collective-permute(%p0), source_target_pairs={{0,1}}
+  %dot.1 = f32[16,16]{1,0} dot(%p0, %p0), lhs_contracting_dims={1}, rhs_contracting_dims={1}
+  ROOT %r = bf16[16,128]{1,0} copy(%p0)
+}
+"""
+
+
+def test_collective_bytes_parser():
+    out = rl.collective_bytes(SAMPLE_HLO)
+    assert out["all-gather"] == 16 * 2048 * 2
+    # plain all-reduce + the -start of the async pair; -done NOT double counted
+    assert out["all-reduce"] == 2 * 16 * 128 * 2
+    assert out["reduce-scatter"] == 2 * 128 * 2
+    assert out["all-to-all"] == 16 * 128 * 2
+    assert out["collective-permute"] == 16 * 128 * 2
+
+
+def test_fused_bytes_counts_dot_traffic():
+    got = rl.fused_bytes(SAMPLE_HLO, arg_bytes=100.0, out_bytes=50.0)
+    # dot: result f32[16,16] + two reads of bf16[16,128]
+    assert got == 100.0 + 50.0 + 16 * 16 * 4 + 2 * 16 * 128 * 2
+
+
+def test_roofline_terms_and_dominance():
+    rec = rl.Roofline(
+        arch="a", shape="s", mesh="16x16", strategy="tp", n_devices=256,
+        flops_per_dev=1.97e12, bytes_per_dev=819e9 / 2,
+        bytes_per_dev_raw=1e12, coll_bytes_per_dev=50e9 * 2,
+        coll_breakdown={}, peak_mem_per_dev=0.0, arg_bytes_per_dev=1e9,
+        act_bytes_est=1e9, model_flops_global=1.97e12 * 256 / 2).finalize()
+    assert abs(rec.compute_s - 0.01) < 1e-9
+    assert abs(rec.memory_s - 0.5) < 1e-9
+    assert abs(rec.collective_s - 2.0) < 1e-9
+    assert rec.dominant == "collective"
+    assert abs(rec.useful_ratio - 0.5) < 1e-9
+    assert rec.fits_hbm
+    assert abs(rec.roofline_frac - 0.005 / 2.0) < 1e-9
+
+
+def test_model_flops_bookkeeping():
+    from repro.configs import SHAPES, get
+    cfg = get("smollm_360m")
+    f_train = rl.model_flops(cfg, "train_4k", SHAPES)
+    assert abs(f_train - 6 * cfg.active_param_count() * 256 * 4096) < 1e6
+    f_dec = rl.model_flops(cfg, "decode_32k", SHAPES)
+    assert abs(f_dec - 2 * cfg.active_param_count() * 128) < 1e6
+    # MoE: active < total
+    v3 = get("deepseek_v3_671b")
+    assert v3.active_param_count() < 0.1 * v3.param_count()

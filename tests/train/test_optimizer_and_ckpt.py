@@ -1,0 +1,128 @@
+"""Optimizer, schedules, gradient compression, checkpointing."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import checkpoint as ckpt
+from repro.train.grad_compress import compress_tree, decompress_tree
+from repro.train.optimizer import AdamW, SGD, cosine_schedule, global_norm
+
+
+def test_adamw_minimizes_quadratic():
+    opt = AdamW(lr=0.1, weight_decay=0.0)
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    state = opt.init(params)
+    loss = lambda p: jnp.sum(p["w"] ** 2)
+    for _ in range(120):
+        g = jax.grad(loss)(params)
+        params, state = opt.update(g, state, params)
+    assert float(loss(params)) < 1e-3
+
+
+def test_sgd_momentum_minimizes():
+    opt = SGD(lr=0.02)  # heavy-ball on x^2 oscillates at high lr
+    params = {"w": jnp.asarray([2.0])}
+    state = opt.init(params)
+    for _ in range(300):
+        g = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+        params, state = opt.update(g, state, params)
+    assert abs(float(params["w"][0])) < 5e-2
+
+
+def test_grad_clip_bounds_update():
+    opt = AdamW(lr=1.0, clip_norm=1.0, weight_decay=0.0)
+    params = {"w": jnp.zeros(4)}
+    state = opt.init(params)
+    huge = {"w": jnp.full((4,), 1e6)}
+    new_params, _ = opt.update(huge, state, params)
+    # clipped grad norm <= 1 -> first adam step magnitude <= lr
+    assert float(jnp.max(jnp.abs(new_params["w"]))) <= 1.0 + 1e-5
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(1.0, warmup=10, total=100, min_frac=0.1)
+    assert float(lr(0)) == 0.0
+    assert abs(float(lr(10)) - 1.0) < 1e-6
+    assert float(lr(100)) <= 0.1 + 1e-6
+    assert float(lr(55)) < float(lr(20))
+
+
+def test_global_norm():
+    t = {"a": jnp.asarray([3.0]), "b": jnp.asarray([4.0])}
+    assert abs(float(global_norm(t)) - 5.0) < 1e-6
+
+
+def test_int8_compression_roundtrip_error_and_feedback():
+    rng = np.random.default_rng(0)
+    g = {"w": jnp.asarray(rng.normal(size=(256,)).astype(np.float32))}
+    payload, resid = compress_tree(g, None)
+    decoded = decompress_tree(payload)
+    scale = float(payload["scale"]["w"])
+    # quantization error bounded by half a bucket
+    assert float(jnp.max(jnp.abs(decoded["w"] - g["w"]))) <= 0.5 * scale + 1e-7
+    # error feedback: residual holds exactly the rounding error
+    np.testing.assert_allclose(np.asarray(resid["w"]),
+                               np.asarray(g["w"] - decoded["w"]), atol=1e-7)
+    # feeding the residual back makes the two-step mean nearly exact
+    payload2, _ = compress_tree(g, resid)
+    decoded2 = decompress_tree(payload2)
+    two_step = (decoded["w"] + decoded2["w"]) / 2.0
+    assert float(jnp.max(jnp.abs(two_step - g["w"]))) <= 0.3 * scale + 1e-7
+
+
+# ------------------------------------------------------------ checkpointing
+def _tree():
+    return {"params": {"w": jnp.arange(6.0).reshape(2, 3)},
+            "opt": {"m": jnp.ones((2, 3)), "step": jnp.int32(7)}}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    d = str(tmp_path / "ck")
+    t = _tree()
+    ckpt.save(d, 10, t)
+    assert ckpt.latest_step(d) == 10
+    loaded = ckpt.load(d, 10, jax.tree.map(jnp.zeros_like, t))
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(np.asarray(a),
+                                                            np.asarray(b)),
+                 t, loaded)
+
+
+def test_checkpoint_keep_last(tmp_path):
+    d = str(tmp_path / "ck")
+    for s in (1, 2, 3, 4, 5):
+        ckpt.save(d, s, _tree(), keep_last=2)
+    assert ckpt.all_steps(d) == [4, 5]
+
+
+def test_checkpoint_atomicity_ignores_partial(tmp_path):
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 3, _tree())
+    # simulate a crashed mid-write attempt
+    os.makedirs(os.path.join(d, "step_00000009.tmp"))
+    assert ckpt.latest_step(d) == 3
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 1, _tree())
+    bad = {"params": {"w": jnp.zeros((3, 3))},
+           "opt": {"m": jnp.ones((2, 3)), "step": jnp.int32(0)}}
+    try:
+        ckpt.load(d, 1, bad)
+        assert False, "should raise"
+    except ValueError:
+        pass
+
+
+def test_restore_latest_none(tmp_path):
+    step, tree = ckpt.restore_latest(str(tmp_path / "nope"), _tree())
+    assert step is None and tree is None
+
+
+def test_save_async(tmp_path):
+    d = str(tmp_path / "ck")
+    t = ckpt.save_async(d, 2, _tree())
+    t.join(timeout=30)
+    assert ckpt.latest_step(d) == 2
