@@ -1,10 +1,14 @@
 """Paper Table 3: relative training-time improvement of the lookups vs GSS,
-merging frequency, decision agreement, and WD precision factors.
+merging frequency, decision agreement, and WD precision factors — plus the
+maintenance-engine variants (kernel cache, fused multi-merge) this repo adds
+on top of the paper.
 
 Timing compares jit'd whole-epoch training (identical streams, identical
 model updates modulo solver choice).  Decision/precision statistics run the
 solvers side-by-side on the same pre-maintenance states, exactly like the
-paper's paired run.
+paper's paired run.  ``maintenance_bench`` isolates the budget-maintenance
+path itself: a fixed number of merge events scanned inside one XLA program,
+with the kappa row recomputed per event (seed) vs read from the kernel cache.
 """
 from __future__ import annotations
 
@@ -15,10 +19,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (BSGDConfig, default_table, fit, init_state,
-                        maintenance_step, train_step)
+                        kernel_cache, maintenance_step, run_maintenance,
+                        train_step)
 from repro.data.synthetic import train_test_split
 
 from .common import DATASETS, csv_row, time_fn
+
+# engine variants timed alongside the paper's three solvers; each maps to
+# BSGDConfig knobs layered on the lookup-wd solver
+ENGINE_VARIANTS = {
+    "lookup-wd+cache": dict(method="lookup-wd", use_kernel_cache=True),
+    "lookup-wd+mm4": dict(method="lookup-wd", use_kernel_cache=True,
+                          maintenance="multi-merge", merge_batch=4),
+}
 
 
 def timed_fit(cfg, xtr, ytr, epochs):
@@ -63,13 +76,56 @@ def decision_stats(name, dim, gen, gamma, lam, *, budget=60, steps=1500):
     return stats
 
 
+def maintenance_bench(budget: int = 256, dim: int = 512, events: int = 64,
+                      gamma: float = 0.5, seed: int = 0, verbose=True):
+    """Isolated maintenance timing: ``events`` merge events in one XLA scan.
+
+    Compares the seed path (kappa row recomputed by ``rbf_row`` per event)
+    against the kernel-cache engine variants on identical over-budget states.
+    Returns {variant: seconds_per_event}.
+    """
+    slots = budget + events
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    sv = jax.random.normal(k1, (slots, dim))
+    # all same sign -> every event is a genuine merge, never the fallback
+    alpha = 0.1 * jnp.abs(jax.random.normal(k2, (slots,))) + 0.01
+    table = default_table()
+
+    def timed(use_cache, strategy, merge_batch=4):
+        kmat = kernel_cache.exact_cache(sv, gamma) if use_cache else None
+
+        def go():
+            out = run_maintenance(sv, alpha, kmat, jnp.int32(slots),
+                                  jnp.int32(0), gamma, table, budget=budget,
+                                  strategy=strategy, method="lookup-wd",
+                                  merge_batch=merge_batch, impl="auto")
+            return out[1]
+        return time_fn(go)[0] / events
+
+    res = {
+        "lookup-wd (recompute, seed)": timed(False, "merge"),
+        "lookup-wd + kernel cache": timed(True, "merge"),
+        "lookup-wd + cache + mm4": timed(True, "multi-merge"),
+        "lookup-wd + mm4 (no cache)": timed(False, "multi-merge"),
+        "removal (batched)": timed(False, "removal"),
+    }
+    if verbose:
+        base = res["lookup-wd (recompute, seed)"]
+        print(f"# maintenance_bench budget={budget} dim={dim} events={events}")
+        for k, v in res.items():
+            print(f"#   {k:30s} {v * 1e6:9.1f} us/event "
+                  f"(x{base / v:.2f} vs seed)", flush=True)
+    return res
+
+
 def run(n: int = 4000, budgets=(50, 150), epochs: int = 2, datasets=None,
         stats_steps: int = 1200, verbose=True):
     rows = []
     names = datasets or list(DATASETS)
     if verbose:
         print(csv_row("dataset", "budget", "t_gss_s", "t_lookup_h_s",
-                      "t_lookup_wd_s", "improv_h_%", "improv_wd_%"))
+                      "t_lookup_wd_s", "t_lwd_cache_s", "t_lwd_mm4_s",
+                      "improv_h_%", "improv_wd_%"))
     for name in names:
         dim, gen, gamma, lam = DATASETS[name]
         x, y = gen(jax.random.PRNGKey(hash(name) % 2**31), n)
@@ -80,10 +136,16 @@ def run(n: int = 4000, budgets=(50, 150), epochs: int = 2, datasets=None,
                 cfg = BSGDConfig(budget=budget, lambda_=lam, gamma=gamma,
                                  method=method)
                 times[method] = timed_fit(cfg, xtr, ytr, epochs)
+            for variant, knobs in ENGINE_VARIANTS.items():
+                cfg = BSGDConfig(budget=budget, lambda_=lam, gamma=gamma,
+                                 **knobs)
+                times[variant] = timed_fit(cfg, xtr, ytr, epochs)
             imp_h = 100 * (times["gss"] - times["lookup-h"]) / times["gss"]
             imp_wd = 100 * (times["gss"] - times["lookup-wd"]) / times["gss"]
             row = (name, budget, round(times["gss"], 3),
                    round(times["lookup-h"], 3), round(times["lookup-wd"], 3),
+                   round(times["lookup-wd+cache"], 3),
+                   round(times["lookup-wd+mm4"], 3),
                    round(imp_h, 2), round(imp_wd, 2))
             rows.append(row)
             if verbose:
@@ -103,11 +165,18 @@ def run(n: int = 4000, budgets=(50, 150), epochs: int = 2, datasets=None,
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--maintenance-only", action="store_true",
+                    help="only the isolated maintenance-path microbench")
     args = ap.parse_args()
+    if args.maintenance_only:
+        maintenance_bench()
+        return
     if args.quick:
+        maintenance_bench()
         run(n=1500, budgets=(50,), epochs=1, datasets=["SUSY", "ADULT"],
             stats_steps=400)
     else:
+        maintenance_bench()
         run()
 
 

@@ -1,17 +1,18 @@
 """Core paper contribution: budgeted SGD SVM with precomputed merge lookup."""
-from . import budget, merge_math
+from . import budget, kernel_cache, merge_math
 from .bsgd import BSGDConfig, SVMState, accuracy, decision_function, fit, init_state, predict, train_epoch, train_step
-from .budget import METHODS, MaintenanceInfo, maintenance_step
+from .budget import METHODS, STRATEGIES, MaintenanceInfo, maintenance_step, run_maintenance
 from .lookup import MergeLookupTable, bilinear_lookup, build_lookup_table, build_merge_tables, default_table
 from .merge_math import (EPS_PRECISE, EPS_STANDARD, KAPPA_UNIMODAL, golden_section_search, gss_num_iters,
                          merge_alpha_z, merge_point, s_objective, solve_merge, wd_norm_at, weight_degradation)
 
 __all__ = [
     "BSGDConfig", "SVMState", "MaintenanceInfo", "MergeLookupTable", "METHODS",
-    "accuracy", "bilinear_lookup", "budget", "build_lookup_table",
+    "STRATEGIES", "accuracy", "bilinear_lookup", "budget", "build_lookup_table",
     "build_merge_tables", "decision_function", "default_table", "fit",
-    "golden_section_search", "gss_num_iters", "init_state", "maintenance_step",
-    "merge_alpha_z", "merge_math", "merge_point", "predict", "s_objective",
-    "solve_merge", "train_epoch", "train_step", "wd_norm_at",
-    "weight_degradation", "EPS_PRECISE", "EPS_STANDARD", "KAPPA_UNIMODAL",
+    "golden_section_search", "gss_num_iters", "init_state", "kernel_cache",
+    "maintenance_step", "merge_alpha_z", "merge_math", "merge_point", "predict",
+    "run_maintenance", "s_objective", "solve_merge", "train_epoch",
+    "train_step", "wd_norm_at", "weight_degradation", "EPS_PRECISE",
+    "EPS_STANDARD", "KAPPA_UNIMODAL",
 ]

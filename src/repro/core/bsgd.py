@@ -8,8 +8,10 @@ paper's four budget-maintenance solvers), adapted to fixed shapes:
     argmin + compaction (see ``core.budget``).
   * Pegasos step t:  eta_t = 1/(lambda t);  alpha *= (1 - eta_t lambda);
     every margin violator in the minibatch is inserted with
-    alpha = eta_t y / batch_size;  maintenance runs (lax.while_loop) until
-    count <= budget.
+    alpha = eta_t y / batch_size;  maintenance runs until count <= budget
+    via the pluggable engine in ``core.budget`` (merge / multi-merge /
+    removal strategies, optionally backed by the persistent SV-SV kernel
+    cache in ``core.kernel_cache`` — DESIGN.md §4-5).
   * ``batch_size = 1`` reproduces the paper's setting exactly; larger
     minibatches are the TPU-friendly configuration (see DESIGN.md §3).
 
@@ -26,6 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from . import budget as budget_mod
+from . import kernel_cache
 from .lookup import MergeLookupTable, default_table
 from ..kernels import ops as kops
 
@@ -37,6 +40,9 @@ class SVMState(NamedTuple):
     step: jax.Array    # () int32 — Pegasos t (starts at 1)
     n_inserts: jax.Array  # () int32 — margin violations so far
     n_merges: jax.Array   # () int32 — budget-maintenance events so far
+    kmat: jax.Array | None = None  # (slots, slots) SV-SV kernel cache (fp32),
+                                   # or None when cfg.use_kernel_cache is off;
+                                   # invariants in core.kernel_cache / DESIGN.md
 
 
 @dataclasses.dataclass(frozen=True)
@@ -52,6 +58,18 @@ class BSGDConfig:
     dtype: str = "float32"             # alpha / margin arithmetic dtype
     sv_dtype: str | None = None        # SV row storage (bf16 halves HBM + gather
                                        # traffic at scale; kappa error ~1e-3)
+    use_kernel_cache: bool = False     # persistent SV-SV kernel matrix: kappa
+                                       # rows are read, not recomputed
+    maintenance: str = "merge"         # merge | multi-merge | removal
+    merge_batch: int = 4               # P pairs per fused multi-merge event
+
+    def __post_init__(self):
+        if self.maintenance not in budget_mod.STRATEGIES:
+            raise ValueError(f"maintenance={self.maintenance!r} not in "
+                             f"{budget_mod.STRATEGIES}")
+        if self.maintenance == "multi-merge" and not (
+                1 <= self.merge_batch <= self.budget):
+            raise ValueError("multi-merge needs 1 <= merge_batch <= budget")
 
     @property
     def slots(self) -> int:
@@ -73,7 +91,9 @@ def init_state(cfg: BSGDConfig, dim: int) -> SVMState:
     return SVMState(
         sv_x=jnp.zeros((cfg.slots, dim), jnp.dtype(cfg.sv_dtype or cfg.dtype)),
         alpha=jnp.zeros((cfg.slots,), dt),
-        count=z, step=jnp.ones((), jnp.int32), n_inserts=z, n_merges=z)
+        count=z, step=jnp.ones((), jnp.int32), n_inserts=z, n_merges=z,
+        kmat=kernel_cache.init_cache(cfg.slots) if cfg.use_kernel_cache
+        else None)
 
 
 def decision_function(state: SVMState, x, gamma, *, impl: str = "auto"):
@@ -98,8 +118,13 @@ def train_step(cfg: BSGDConfig, table, state: SVMState, xb, yb, *,
     t = state.step
     eta = 1.0 / (cfg.lambda_ * t)
 
-    # margins under the current model
-    f = decision_function(state, xb, cfg.gamma, impl=impl)        # (batch,)
+    # margins under the current model; the kernel rows k(xb, sv) are kept —
+    # they double as the cache update on insert (zero extra kernel evals)
+    # mask by the state's own width: callers may replay a step under a
+    # one-larger budget on the same arrays (see bench_table3 decision_stats)
+    k_b = kops.rbf_matrix(xb, state.sv_x, cfg.gamma, impl=impl)   # (batch, slots)
+    active = jnp.arange(state.alpha.shape[0]) < state.count
+    f = k_b.astype(state.alpha.dtype) @ jnp.where(active, state.alpha, 0.0)
     margin = yb * f
 
     # Pegasos shrink: w <- (1 - eta lambda) w  == alpha *= (1 - 1/t)
@@ -115,22 +140,20 @@ def train_step(cfg: BSGDConfig, table, state: SVMState, xb, yb, *,
     n_new = jnp.sum(viol).astype(jnp.int32)
     count = state.count + n_new
 
-    # budget maintenance until count <= budget
-    def cond(carry):
-        _, _, c, _ = carry
-        return c > cfg.budget
+    kmat = state.kmat
+    if cfg.use_kernel_cache:
+        k_bb = kops.rbf_matrix(xb, xb, cfg.gamma, impl=impl)      # (batch, batch)
+        kmat = kernel_cache.insert_rows(kmat, idx, k_b, k_bb)
 
-    def body(carry):
-        sv_x, alpha, c, n_merges = carry
-        sv_x, alpha, c, _ = budget_mod.maintenance_step(
-            sv_x, alpha, c, cfg.gamma, method=cfg.method, table=table)
-        return sv_x, alpha, c, n_merges + 1
-
-    sv_x, alpha, count, n_merges = jax.lax.while_loop(
-        cond, body, (sv_x, alpha, count, state.n_merges))
+    # budget maintenance until count <= budget (strategy layer: core.budget)
+    sv_x, alpha, kmat, count, n_merges = budget_mod.run_maintenance(
+        sv_x, alpha, kmat, count, state.n_merges, cfg.gamma, table,
+        budget=cfg.budget, strategy=cfg.maintenance, method=cfg.method,
+        merge_batch=cfg.merge_batch, impl=impl)
 
     return SVMState(sv_x=sv_x, alpha=alpha, count=count, step=t + 1,
-                    n_inserts=state.n_inserts + n_new, n_merges=n_merges)
+                    n_inserts=state.n_inserts + n_new, n_merges=n_merges,
+                    kmat=kmat)
 
 
 @partial(jax.jit, static_argnames=("cfg", "impl"))

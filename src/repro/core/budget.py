@@ -1,20 +1,32 @@
-"""Budget maintenance by merging (paper Alg. 1), with four selectable solvers.
+"""Budget maintenance as a pluggable strategy engine over a kernel cache.
 
-Methods (paper §4):
-  * ``gss``         — golden section search at runtime precision eps = 0.01
-  * ``gss-precise`` — golden section search at eps = 1e-10 (reference)
-  * ``lookup-h``    — bilinear table lookup of h(m, kappa), WD computed exactly
-  * ``lookup-wd``   — bilinear table lookup of WD_norm(m, kappa) for scoring;
-                      h looked up only for the winning pair (fewest flops)
+Two orthogonal axes (DESIGN.md §5):
 
-The SV set lives in fixed-size arrays (``slots = budget + batch``) with an
-``count`` watermark; inactive slots are masked.  One maintenance event:
+  * **solver** (``method``) — how a candidate pair is scored (paper §4):
+      - ``gss``         — golden section search at runtime precision eps = 0.01
+      - ``gss-precise`` — golden section search at eps = 1e-10 (reference)
+      - ``lookup-h``    — bilinear table lookup of h(m, kappa), WD exact
+      - ``lookup-wd``   — bilinear table lookup of WD_norm(m, kappa); h looked
+                          up only for winning pairs (fewest flops)
+  * **strategy** (``strategy``) — what one maintenance event does:
+      - ``merge``       — the paper's Alg. 1: merge the min-|alpha| SV with its
+                          best same-sign partner; count -= 1 per event
+      - ``multi-merge`` — Qaadan & Glasmachers 2018: the P smallest-|alpha| SVs
+                          each merge with their best partner (disjoint pairs,
+                          greedy in |alpha| order) in ONE fused scatter;
+                          count -= P per event
+      - ``removal``     — drop the ``count - budget`` smallest-|alpha| SVs in
+                          one permutation (cheapest, largest degradation)
 
-  1. fix x_a := the active SV with minimal |alpha|  (paper's O(B) heuristic)
-  2. score every active same-sign candidate x_b via the selected solver
-  3. merge the winning pair into z = h x_a + (1-h) x_b, compact the slots
+Every strategy reads its kappa rows ``k(x_fixed, .)`` from the persistent
+SV-SV kernel cache (``core.kernel_cache``) when one is passed, and keeps it
+incrementally consistent through merges/removals/compaction; with
+``kmat=None`` the rows are recomputed per event (the seed behavior).
 
-All steps are jit-safe (masked argmin / scatter, no dynamic shapes).
+The SV set lives in fixed-size arrays (``slots = budget + batch``) with a
+``count`` watermark; inactive slots are masked.  All steps are jit-safe
+(masked argmin / top-k, scatter-with-drop, stable-argsort compaction — no
+dynamic shapes).
 """
 from __future__ import annotations
 
@@ -24,12 +36,18 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from . import merge_math
+from . import kernel_cache, merge_math
 from .lookup import MergeLookupTable
 from ..kernels import ops as kops
+from ..kernels import ref as kref
 
 METHODS = ("gss", "gss-precise", "lookup-h", "lookup-wd")
+STRATEGIES = ("merge", "multi-merge", "removal")
 _BIG = jnp.inf
+# Scores above this mean "no valid partner" (the Pallas scorer marks invalid
+# slots with a finite 3.4e38 so bf16 casts stay argmin-safe; real WDs are
+# bounded by (2 max|alpha|)^2 << 1e30).
+_NO_PARTNER = 1e30
 
 
 class MaintenanceInfo(NamedTuple):
@@ -44,17 +62,17 @@ class MaintenanceInfo(NamedTuple):
 
 def candidate_scores(alpha, kappa_row, i_min, valid, method: str,
                      table: MergeLookupTable | None):
-    """Per-candidate (WD, h) for merging slot ``i_min`` with each slot j.
+    """Per-candidate (WD, h) for merging slot(s) ``i_min`` with each slot j.
 
     ``kappa_row[j] = k(x_{i_min}, x_j)``.  Invalid candidates get WD = +inf.
-    ``method`` is static, so exactly one solver is traced.
+    ``method`` is static, so exactly one solver is traced.  Batched form:
+    ``i_min`` of shape (P,) with ``kappa_row``/``valid`` of shape (P, s)
+    scores P fixed partners at once.
     """
     a_min = alpha[i_min]
-    denom = a_min + alpha
-    # Same-sign pairs have m strictly inside (0, 1); clip keeps masked-out
-    # entries finite so they cannot poison the argmin with NaNs.
-    m = jnp.clip(a_min / jnp.where(denom == 0, 1.0, denom), 0.0, 1.0)
-    kap = jnp.clip(kappa_row, 0.0, 1.0)
+    if jnp.ndim(a_min) == 1:          # batched fixed partners -> broadcast
+        a_min = a_min[:, None]
+    m, kap = kref.merge_coords(a_min, alpha, kappa_row)
 
     if method == "lookup-wd":
         wd = (a_min + alpha) ** 2 * table.lookup_wd_norm(m, kap)
@@ -75,13 +93,13 @@ def candidate_scores(alpha, kappa_row, i_min, valid, method: str,
     return wd, h
 
 
-@partial(jax.jit, static_argnames=("method",))
-def maintenance_step(sv_x, alpha, count, gamma, method: str = "lookup-wd",
-                     table: MergeLookupTable | None = None):
-    """One budget-maintenance event: merge two SVs (or remove one), count -= 1.
-
-    Returns ``(sv_x, alpha, count, MaintenanceInfo)``.
-    """
+# --------------------------------------------------------------------------
+# Strategy: merge (paper Alg. 1) — one pair per event
+# --------------------------------------------------------------------------
+def _merge_once(sv_x, alpha, kmat, count, gamma, method, table,
+                kappa_row=None):
+    """One merge event; ``kmat`` may be None (then kappa is recomputed unless
+    ``kappa_row`` is supplied).  Returns (sv_x, alpha, kmat, count-1, info)."""
     slots = alpha.shape[0]
     idx = jnp.arange(slots)
     active = idx < count
@@ -91,43 +109,298 @@ def maintenance_step(sv_x, alpha, count, gamma, method: str = "lookup-wd",
     i_min = jnp.argmin(abs_a)
     a_min = alpha[i_min]
 
-    # 2. kappa row k(x_{i_min}, x_j) — the rbf kernel hot spot.
-    kappa_row = kops.rbf_row(sv_x, sv_x[i_min], gamma)
+    # 2. kappa row k(x_{i_min}, x_j): cache read when available — the rbf
+    #    recompute below is the seed's per-event hot spot.
+    if kappa_row is None:
+        if kmat is not None:
+            kappa_row = kmat[i_min].astype(alpha.dtype)
+        else:
+            kappa_row = kops.rbf_row(sv_x, sv_x[i_min], gamma)
 
     same_sign = alpha * a_min > 0
     valid = active & same_sign & (idx != i_min)
     wd, h = candidate_scores(alpha, kappa_row, i_min, valid, method, table)
 
     j_star = jnp.argmin(wd)
-    has_partner = jnp.isfinite(wd[j_star])
+    has_partner = wd[j_star] < _NO_PARTNER
 
     last = count - 1
 
-    def do_merge(args):
-        sv_x, alpha = args
-        h_star = h[j_star]
-        kap = jnp.clip(kappa_row[j_star], 0.0, 1.0)
-        z = merge_math.merge_point(h_star, sv_x[i_min], sv_x[j_star])
-        a_z = merge_math.merge_alpha_z(a_min, alpha[j_star], kap, h_star)
+    if kmat is not None:
+        # Branch-free fused update: a lax.cond over the (slots, slots) cache
+        # defeats XLA's in-place buffer aliasing inside the maintenance
+        # while_loop (full-matrix copies per event, O(slots^2)); instead the
+        # merge and the removal fallback share one masked two-row scatter.
+        # All gathers happen before any write.
+        slots_i = jnp.int32(alpha.shape[0])
         lo = jnp.minimum(i_min, j_star)   # lo <= count-2, safe to overwrite
         hi = jnp.maximum(i_min, j_star)
-        sv_x = sv_x.at[lo].set(z)
-        sv_x = sv_x.at[hi].set(sv_x[last])        # compact: move last into hole
-        alpha = alpha.at[lo].set(a_z)
-        alpha = alpha.at[hi].set(alpha[last])
+        h_m = h[j_star]
+        kap = jnp.clip(kappa_row[j_star], 0.0, 1.0)
+        z = merge_math.merge_point(h_m, sv_x[i_min], sv_x[j_star])
+        a_z = merge_math.merge_alpha_z(a_min, alpha[j_star], kap, h_m)
+        # one batched gather for everything the update reads (each separate
+        # gather/scatter on the loop-carried cache risks a full-matrix copy
+        # on backends that cannot prove in-place aliasing)
+        block = kmat[jnp.stack([j_star, last])]
+        row_last = block[1]
+        z_row = kernel_cache.z_row_from_rows(
+            kappa_row.astype(jnp.float32), block[0], kappa_row[j_star],
+            h_m).astype(kmat.dtype)
+        # Fix intersections so row and column scatters agree: slot t1 holds z
+        # (or, on removal, the old ``last``), slot t2 holds the old ``last``;
+        # diagonals are pinned to 1 inside the rows themselves.
+        r_merge = z_row.at[hi].set(z_row[last]).at[lo].set(1.0)
+        r_move = row_last.at[hi].set(1.0).at[lo].set(z_row[last])
+        r_remove = row_last.at[i_min].set(1.0)
+        t1 = jnp.where(has_partner, lo, i_min)
+        t2 = jnp.where(has_partner, hi, slots_i)      # OOB on removal -> drop
+        tt = jnp.stack([t1, t2])
+        rows = jnp.stack([jnp.where(has_partner, r_merge, r_remove), r_move])
+        kmat = kmat.at[tt, :].set(rows, mode="drop")
+        kmat = kmat.at[:, tt].set(rows.T, mode="drop")
+        v_last, a_last = sv_x[last], alpha[last]
+        sv1 = jnp.where(has_partner, z.astype(sv_x.dtype), v_last)
+        a1 = jnp.where(has_partner, a_z, a_last)
+        sv_x = sv_x.at[tt].set(jnp.stack([sv1, v_last]), mode="drop")
+        alpha = alpha.at[tt].set(jnp.stack([a1, a_last]), mode="drop")
         alpha = alpha.at[last].set(0.0)
-        return sv_x, alpha, h_star, wd[j_star]
+        h_star = jnp.where(has_partner, h_m, jnp.asarray(1.0, alpha.dtype))
+        wd_star = jnp.where(has_partner, wd[j_star], a_min**2)
+    else:
+        def do_merge(args):
+            sv_x, alpha = args
+            h_star = h[j_star]
+            kap = jnp.clip(kappa_row[j_star], 0.0, 1.0)
+            z = merge_math.merge_point(h_star, sv_x[i_min], sv_x[j_star])
+            a_z = merge_math.merge_alpha_z(a_min, alpha[j_star], kap, h_star)
+            lo = jnp.minimum(i_min, j_star)   # lo <= count-2, safe to overwrite
+            hi = jnp.maximum(i_min, j_star)
+            sv_x = sv_x.at[lo].set(z.astype(sv_x.dtype))
+            sv_x = sv_x.at[hi].set(sv_x[last])    # compact: move last into hole
+            alpha = alpha.at[lo].set(a_z)
+            alpha = alpha.at[hi].set(alpha[last])
+            alpha = alpha.at[last].set(0.0)
+            return sv_x, alpha, h_star, wd[j_star]
 
-    def do_remove(args):
-        # No same-sign partner exists: fall back to removing the min-|alpha| SV.
-        sv_x, alpha = args
-        sv_x = sv_x.at[i_min].set(sv_x[last])
-        alpha = alpha.at[i_min].set(alpha[last])
-        alpha = alpha.at[last].set(0.0)
-        return sv_x, alpha, jnp.asarray(1.0, alpha.dtype), a_min**2
+        def do_remove(args):
+            # No same-sign partner: fall back to removing the min-|alpha| SV.
+            sv_x, alpha = args
+            sv_x = sv_x.at[i_min].set(sv_x[last])
+            alpha = alpha.at[i_min].set(alpha[last])
+            alpha = alpha.at[last].set(0.0)
+            return sv_x, alpha, jnp.asarray(1.0, alpha.dtype), a_min**2
 
-    sv_x, alpha, h_star, wd_star = jax.lax.cond(has_partner, do_merge, do_remove,
-                                                (sv_x, alpha))
+        sv_x, alpha, h_star, wd_star = jax.lax.cond(
+            has_partner, do_merge, do_remove, (sv_x, alpha))
+
     info = MaintenanceInfo(i_min=i_min, j_star=j_star, h_star=h_star,
                            wd_star=wd_star, merged=has_partner)
-    return sv_x, alpha, count - 1, info
+    return sv_x, alpha, kmat, count - 1, info
+
+
+@partial(jax.jit, static_argnames=("method",))
+def maintenance_step(sv_x, alpha, count, gamma, method: str = "lookup-wd",
+                     table: MergeLookupTable | None = None, kappa_row=None):
+    """One budget-maintenance event: merge two SVs (or remove one), count -= 1.
+
+    Back-compatible single-merge entry point; pass ``kappa_row`` to skip the
+    rbf recompute (e.g. a row read from the kernel cache).
+    Returns ``(sv_x, alpha, count, MaintenanceInfo)``.
+    """
+    sv_x, alpha, _, count, info = _merge_once(
+        sv_x, alpha, None, count, gamma, method, table, kappa_row=kappa_row)
+    return sv_x, alpha, count, info
+
+
+# --------------------------------------------------------------------------
+# Strategy: multi-merge — P disjoint pairs in one fused scatter
+# --------------------------------------------------------------------------
+def _compaction_perm(hole_mask):
+    """Stable permutation pushing hole slots behind every survivor.
+
+    Sort key: survivors keep their slot index (order preserved), inactive
+    slots stay in [count, slots), holes move past ``slots``.  With n holes
+    among the active slots, positions [0, count - n) are exactly the
+    surviving SVs in their original order.
+    """
+    slots = hole_mask.shape[0]
+    idx = jnp.arange(slots)
+    return jnp.argsort(jnp.where(hole_mask, slots + idx, idx), stable=True)
+
+
+def _multi_merge_once(sv_x, alpha, kmat, count, gamma, method, table,
+                      budget: int, merge_batch: int, impl: str):
+    """One fused multi-merge event: up to P = merge_batch disjoint same-sign
+    pairs merge at once; count -= the number of executed pairs (>= 1, <=
+    min(P, count - budget))."""
+    slots = alpha.shape[0]
+    p = merge_batch
+    idx = jnp.arange(slots)
+    active = idx < count
+
+    # 1. fixed partners: the P smallest-|alpha| active SVs, cheapest first
+    #    (requires budget >= P, so count > budget implies all P are active).
+    abs_a = jnp.where(active, jnp.abs(alpha), _BIG)
+    _, a_idx = jax.lax.top_k(-abs_a, p)                    # (P,) |alpha| asc
+    a_min = alpha[a_idx]
+
+    # 2. kappa rows from the cache, or one (P, slots) rbf block per event.
+    if kmat is not None:
+        kappa_rows = kmat[a_idx].astype(alpha.dtype)
+    else:
+        kappa_rows = kops.rbf_matrix(sv_x[a_idx], sv_x, gamma, impl=impl)
+
+    # a pair may merge with another pair's fixed slot (the lowest-|alpha| SVs
+    # are often each other's best partners); only its own slot is excluded
+    same_sign = a_min[:, None] * alpha[None, :] > 0        # (P, slots)
+    self_mask = jnp.zeros((p, slots), bool).at[jnp.arange(p), a_idx].set(True)
+    valid = active[None, :] & same_sign & ~self_mask
+
+    # 3. score all P x slots pairs in one pass (fused Pallas kernel for the
+    #    lookup solvers; candidate_scores broadcasts for the GSS solvers).
+    if method == "lookup-wd" and table is not None:
+        wd, h = kops.multi_merge_scores(alpha, kappa_rows, valid, a_min,
+                                        table, impl=impl)
+    else:
+        wd, h = candidate_scores(alpha, kappa_rows, a_idx, valid, method,
+                                 table)
+
+    # 4. greedy disjoint pair choice in |alpha| order (P is small/static: the
+    #    loop unrolls).  Executing a pair consumes both slots; a pair whose
+    #    fixed slot was consumed as an earlier partner is skipped, and no
+    #    pair executes once the budget excess is covered.  Pair 0 always
+    #    executes, so every event lowers count.
+    excess = count - budget
+    taken = jnp.zeros((slots,), bool)
+    consumed = jnp.zeros((p,), bool)
+    n_exec = jnp.int32(0)
+    b_list, merged_list, exec_list = [], [], []
+    for q in range(p):
+        wd_q = jnp.where(taken, _BIG, wd[q])
+        j_q = jnp.argmin(wd_q)
+        exec_q = ~consumed[q] & (n_exec < excess)
+        merged_q = exec_q & (wd_q[j_q] < _NO_PARTNER)
+        b_list.append(j_q)
+        merged_list.append(merged_q)
+        exec_list.append(exec_q)
+        taken = taken | ((idx == j_q) & merged_q) | ((idx == a_idx[q]) & exec_q)
+        consumed = consumed | ((a_idx == j_q) & merged_q)
+        n_exec = n_exec + exec_q.astype(jnp.int32)
+    b_idx = jnp.stack(b_list)                              # (P,)
+    merged = jnp.stack(merged_list)                        # (P,) bool
+    execute = jnp.stack(exec_list)                         # (P,) bool
+
+    # 5. one fused scatter: z_q overwrites a_q; b_q (or a_q on removal
+    #    fallback) becomes a hole.  Non-executing pairs scatter out of bounds.
+    h_star = h[jnp.arange(p), b_idx]
+    kap = jnp.clip(kappa_rows[jnp.arange(p), b_idx], 0.0, 1.0)
+    a_z = merge_math.merge_alpha_z(a_min, alpha[b_idx], kap, h_star)
+    z = merge_math.merge_point(h_star[:, None], sv_x[a_idx], sv_x[b_idx])
+    write_idx = jnp.where(merged, a_idx, slots)            # OOB -> dropped
+    hole_idx = jnp.where(merged, b_idx,
+                         jnp.where(execute, a_idx, slots))
+
+    if kmat is not None:
+        kmat = kernel_cache.apply_multi_merge(kmat, a_idx, b_idx, h_star,
+                                              write_idx)
+    sv_x = sv_x.at[write_idx].set(z.astype(sv_x.dtype), mode="drop")
+    alpha = alpha.at[write_idx].set(a_z.astype(alpha.dtype), mode="drop")
+
+    # 6. compaction by targeted moves: pair the k-th hole below the new
+    #    watermark with the k-th surviving slot above it — O(P * slots)
+    #    scatters instead of an O(slots^2) permutation gather of the cache
+    #    (survivor order is not an invariant; only the watermark is).
+    hole_mask = jnp.zeros((slots,), bool).at[hole_idx].set(True, mode="drop")
+    new_count = count - n_exec              # one hole per executed pair
+    front_hole = hole_mask & (idx < new_count)
+    tail_surv = active & ~hole_mask & (idx >= new_count)
+    # both sets have the same size (the tail has n_exec slots, n_exec - |front|
+    # of which are holes); sort pushes the `slots` padding behind real entries
+    dst = jnp.sort(jnp.where(front_hole, idx, slots))[:p]     # OOB-padded
+    src = jnp.sort(jnp.where(tail_surv, idx, slots))[:p]
+    src_c = jnp.minimum(src, slots - 1)                       # clamp gathers
+    if kmat is not None:
+        rows = kmat[src_c]                                    # (P, slots)
+        kmat = kmat.at[dst, :].set(rows, mode="drop")
+        kmat = kmat.at[:, dst].set(rows.T, mode="drop")
+        # moved-row intersections: slot dst_l now holds old src_l
+        kmat = kmat.at[dst[:, None], dst[None, :]].set(rows[:, src_c],
+                                                       mode="drop")
+    sv_x = sv_x.at[dst].set(sv_x[src_c], mode="drop")
+    alpha = alpha.at[dst].set(alpha[src_c], mode="drop")
+    alpha = jnp.where(idx < new_count, alpha, 0.0)
+    return sv_x, alpha, kmat, new_count
+
+
+# --------------------------------------------------------------------------
+# Strategy: removal — drop the excess smallest-|alpha| SVs in one shot
+# --------------------------------------------------------------------------
+def _removal_all(sv_x, alpha, kmat, count, budget: int):
+    """Remove the ``count - budget`` smallest-|alpha| SVs in one permutation."""
+    slots = alpha.shape[0]
+    idx = jnp.arange(slots)
+    active = idx < count
+    excess = jnp.maximum(count - budget, 0)
+    abs_a = jnp.where(active, jnp.abs(alpha), _BIG)
+    order = jnp.argsort(abs_a, stable=True)        # smallest |alpha| first
+    rank = jnp.zeros((slots,), jnp.int32).at[order].set(idx.astype(jnp.int32))
+    hole_mask = active & (rank < excess)
+    perm = _compaction_perm(hole_mask)
+    new_count = count - excess
+    sv_x = sv_x[perm]
+    alpha = jnp.where(idx < new_count, alpha[perm], 0.0)
+    if kmat is not None:
+        kmat = kernel_cache.permute(kmat, perm)
+    return sv_x, alpha, kmat, new_count
+
+
+# --------------------------------------------------------------------------
+# Engine entry point: loop a strategy until count <= budget
+# --------------------------------------------------------------------------
+@partial(jax.jit, static_argnames=("budget", "strategy", "method",
+                                   "merge_batch", "impl"))
+def run_maintenance(sv_x, alpha, kmat, count, n_events, gamma, table, *,
+                    budget: int, strategy: str = "merge",
+                    method: str = "lookup-wd", merge_batch: int = 4,
+                    impl: str = "auto"):
+    """Run budget maintenance until ``count <= budget``.
+
+    ``kmat`` is the SV-SV kernel cache (or None to recompute kappa rows per
+    event); it is kept consistent across merges and compaction.  Returns
+    ``(sv_x, alpha, kmat, count, n_events)`` with ``n_events`` incremented
+    once per maintenance event (a fused multi-merge counts as one event).
+    """
+    if strategy not in STRATEGIES:
+        raise ValueError(
+            f"unknown strategy {strategy!r}; expected one of {STRATEGIES}")
+
+    if strategy == "removal":
+        over = count > budget
+        sv_x, alpha, kmat, count = jax.lax.cond(
+            over,
+            lambda args: _removal_all(*args, budget),
+            lambda args: args,
+            (sv_x, alpha, kmat, count))
+        return sv_x, alpha, kmat, count, n_events + over.astype(n_events.dtype)
+
+    def cond(carry):
+        return carry[3] > budget
+
+    if strategy == "merge":
+        def body(carry):
+            sv_x, alpha, kmat, c, n = carry
+            sv_x, alpha, kmat, c, _ = _merge_once(sv_x, alpha, kmat, c, gamma,
+                                                  method, table)
+            return sv_x, alpha, kmat, c, n + 1
+    else:  # multi-merge
+        def body(carry):
+            sv_x, alpha, kmat, c, n = carry
+            sv_x, alpha, kmat, c = _multi_merge_once(
+                sv_x, alpha, kmat, c, gamma, method, table, budget,
+                merge_batch, impl)
+            return sv_x, alpha, kmat, c, n + 1
+
+    sv_x, alpha, kmat, count, n_events = jax.lax.while_loop(
+        cond, body, (sv_x, alpha, kmat, count, n_events))
+    return sv_x, alpha, kmat, count, n_events

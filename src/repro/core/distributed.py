@@ -53,6 +53,10 @@ def sv_shardings(cfg: BSGDConfig, mesh, dim: int, *, layout: str = "replicated")
         step=NamedSharding(mesh, P()),
         n_inserts=NamedSharding(mesh, P()),
         n_merges=NamedSharding(mesh, P()),
+        # The kernel cache rides the SV layout: rows sharded with the slots
+        # axis (each shard owns its SVs' kappa rows), columns replicated.
+        kmat=(NamedSharding(mesh, P(slot_axis, None))
+              if cfg.use_kernel_cache else None),
     ), NamedSharding(mesh, P(batch_axes, None)), NamedSharding(mesh, P(batch_axes))
 
 
@@ -78,7 +82,9 @@ def make_distributed_step(cfg: BSGDConfig, mesh, dim: int,
             count=jax.ShapeDtypeStruct((), jnp.int32),
             step=jax.ShapeDtypeStruct((), jnp.int32),
             n_inserts=jax.ShapeDtypeStruct((), jnp.int32),
-            n_merges=jax.ShapeDtypeStruct((), jnp.int32)),
+            n_merges=jax.ShapeDtypeStruct((), jnp.int32),
+            kmat=(jax.ShapeDtypeStruct((cfg.slots, cfg.slots), jnp.float32)
+                  if cfg.use_kernel_cache else None)),
         (jax.eval_shape(lambda: table) if table is not None else None),
         jax.ShapeDtypeStruct((cfg.batch_size, dim),
                              jnp.dtype(cfg.sv_dtype or cfg.dtype)),

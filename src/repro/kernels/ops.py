@@ -13,6 +13,7 @@ multiples, re-slicing, and scalar/1-D massaging.
 """
 from __future__ import annotations
 
+import math
 from functools import partial
 
 import jax
@@ -20,6 +21,7 @@ import jax.numpy as jnp
 
 from . import gss as gss_kernel
 from . import merge_lookup as merge_lookup_kernel
+from . import merge_multi as merge_multi_kernel
 from . import rbf_kernel
 from . import ref
 
@@ -83,9 +85,8 @@ def merge_scores(alpha, kappa_row, valid, a_min, table, *, impl: str = "auto",
     impl = _resolve(impl)
     if impl == "ref":
         wd = ref.merge_scores(alpha, kappa_row, valid, a_min, table)
-        denom = a_min + alpha
-        m = jnp.clip(a_min / jnp.where(denom == 0, 1.0, denom), 0.0, 1.0)
-        interp = ref.bilinear_lookup(table, m, jnp.clip(kappa_row, 0.0, 1.0))
+        m, kap = ref.merge_coords(a_min, alpha, kappa_row)
+        interp = ref.bilinear_lookup(table, m, kap)
         return wd, interp
     s = alpha.shape[0]
     bs = min(block_s, max(128, s))
@@ -114,5 +115,41 @@ def gss_solve(m, kappa, *, n_iters: int, impl: str = "auto"):
     flat_k = _pad_to(flat_k, 1, bc, value=1.0)  # kappa=1 is a benign problem
     h = gss_kernel.gss_pallas(flat_m, flat_k, n_iters=n_iters, block=(br, bc),
                               interpret=(impl == "pallas_interpret"))
-    import math
     return h[0, : math.prod(shape)].reshape(shape)
+
+
+# --------------------------------------------------------------------------
+# Batched multi-merge scoring (P fixed partners, both tables, one pass)
+# --------------------------------------------------------------------------
+@partial(jax.jit, static_argnames=("impl", "block_s"))
+def multi_merge_scores(alpha, kappa_rows, valid, a_min, table, *,
+                       impl: str = "auto", block_s: int = 128):
+    """(wd, h) of shape (P, s) for P fixed merge partners at once.
+
+    alpha: (s,); kappa_rows, valid: (P, s); a_min: (P,);
+    table: a ``MergeLookupTable`` (both grids are interpolated in one pass).
+    Invalid slots get WD = +inf (ref) / 3.4e38 (pallas) — argmin-safe either way.
+    """
+    impl = _resolve(impl)
+    if impl == "ref":
+        return ref.multi_merge_scores(alpha, kappa_rows, valid, a_min,
+                                      table.h_table, table.wd_table)
+    p, s = kappa_rows.shape
+    bs = min(block_s, max(128, s))
+    pad_s = lambda a: _pad_to(a, a.ndim - 1, bs)
+    pad_p = lambda a: _pad_to(a, 0, merge_multi_kernel.P_PAD)
+    alpha_p = pad_s(alpha)
+    # Tile the pair axis: the kernel keeps all its P rows resident per grid
+    # step (hat-weight matrices scale with P * block_s), so one launch per
+    # P_PAD pairs keeps VMEM bounded no matter how large merge_batch is.
+    wds, hs = [], []
+    for start in range(0, p, merge_multi_kernel.P_PAD):
+        sl = slice(start, min(start + merge_multi_kernel.P_PAD, p))
+        wd_c, h_c = merge_multi_kernel.multi_merge_scores_pallas(
+            alpha_p, pad_p(pad_s(kappa_rows[sl])),
+            pad_p(pad_s(valid[sl].astype(jnp.float32))), pad_p(a_min[sl]),
+            table.h_table, table.wd_table, block_s=bs,
+            interpret=(impl == "pallas_interpret"))
+        wds.append(wd_c[:sl.stop - sl.start])
+        hs.append(h_c[:sl.stop - sl.start])
+    return jnp.concatenate(wds)[:, :s], jnp.concatenate(hs)[:, :s]

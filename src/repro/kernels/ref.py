@@ -46,17 +46,44 @@ def bilinear_lookup(table, u, v):
     return top * (1 - du) + bot * du
 
 
+def merge_coords(a_min, alpha, kappa):
+    """Table coordinates ``(m, kappa)`` of the merge problem, clipped to the
+    unit square.
+
+    ``m = a_min / (a_min + alpha)``; same-sign pairs land strictly inside
+    (0, 1), and the clip keeps masked-out entries finite so they cannot
+    poison an argmin with NaNs.  Broadcasts: ``a_min`` may be a scalar or a
+    ``(P, 1)`` column against ``(s,)`` / ``(P, s)`` candidate arrays.  This
+    is the single definition shared by the core strategy layer
+    (``budget.candidate_scores``) and the kernel oracles/wrappers.
+    """
+    denom = a_min + alpha
+    m = jnp.clip(a_min / jnp.where(denom == 0, 1.0, denom), 0.0, 1.0)
+    return m, jnp.clip(kappa, 0.0, 1.0)
+
+
 def merge_scores(alpha, kappa_row, valid, a_min, wd_table):
     """Lookup-WD candidate scoring (paper Alg. 1 with the lookup solver).
 
     alpha, kappa_row, valid: (s,); a_min: scalar; wd_table: (G, G).
     Returns WD per candidate with +inf at invalid slots.
     """
-    denom = a_min + alpha
-    m = jnp.clip(a_min / jnp.where(denom == 0, 1.0, denom), 0.0, 1.0)
-    kap = jnp.clip(kappa_row, 0.0, 1.0)
-    wd = denom**2 * bilinear_lookup(wd_table, m, kap)
+    m, kap = merge_coords(a_min, alpha, kappa_row)
+    wd = (a_min + alpha) ** 2 * bilinear_lookup(wd_table, m, kap)
     return jnp.where(valid, wd, jnp.inf)
+
+
+def multi_merge_scores(alpha, kappa_rows, valid, a_min, h_table, wd_table):
+    """Batched Lookup-WD scoring for P fixed partners at once.
+
+    alpha: (s,); kappa_rows, valid: (P, s); a_min: (P,); tables: (G, G).
+    Returns ``(wd, h)`` of shape (P, s): per-pair weight degradation (+inf at
+    invalid slots) and the merge coefficient from the h table.
+    """
+    m, kap = merge_coords(a_min[:, None], alpha[None, :], kappa_rows)
+    wd = (a_min[:, None] + alpha[None, :]) ** 2 * bilinear_lookup(wd_table, m, kap)
+    h = bilinear_lookup(h_table, m, kap)
+    return jnp.where(valid, wd, jnp.inf), h
 
 
 def gss(m, kappa, n_iters: int):

@@ -1,0 +1,146 @@
+"""Kernel cache: incremental invariants and trajectory equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import BSGDConfig, fit, kernel_cache
+from repro.data import make_blobs, make_two_moons, train_test_split
+from repro.kernels import ref
+
+
+def _exact(sv_x, count, gamma):
+    x = np.asarray(sv_x, np.float32)[:count]
+    return np.asarray(ref.rbf_matrix(jnp.asarray(x), jnp.asarray(x), gamma))
+
+
+def _check_cache(state, gamma, tol=5e-5):
+    c = int(state.count)
+    got = np.asarray(state.kmat)[:c, :c]
+    want = _exact(state.sv_x, c, gamma)
+    np.testing.assert_allclose(got, want, atol=tol)
+    # I2/I3: exact symmetry, unit diagonal
+    np.testing.assert_array_equal(got, got.T)
+    np.testing.assert_array_equal(np.diag(got), np.ones(c, np.float32))
+
+
+def test_insert_rows_matches_direct():
+    key = jax.random.PRNGKey(0)
+    gamma, slots, count, batch, dim = 0.7, 12, 6, 3, 5
+    sv = jax.random.normal(key, (slots, dim))
+    xb = jax.random.normal(jax.random.PRNGKey(1), (batch, dim))
+    kmat = kernel_cache.exact_cache(sv, gamma)
+    # insert 2 of the 3 batch points (middle one dropped, like a non-violator)
+    idx = jnp.asarray([count, slots, count + 1])
+    sv2 = sv.at[idx].set(xb, mode="drop")
+    k_bs = ref.rbf_matrix(xb, sv, gamma)
+    k_bb = ref.rbf_matrix(xb, xb, gamma)
+    kmat2 = kernel_cache.insert_rows(kmat, idx, k_bs, k_bb)
+    want = _exact(sv2, count + 2, gamma)
+    np.testing.assert_allclose(np.asarray(kmat2)[:count + 2, :count + 2], want,
+                               atol=1e-5)
+
+
+def test_merge_z_row_closed_form():
+    """k(z, .) from cached rows only == direct rbf against z."""
+    key = jax.random.PRNGKey(2)
+    gamma, slots, dim = 0.5, 10, 4
+    sv = jax.random.normal(key, (slots, dim))
+    kmat = kernel_cache.exact_cache(sv, gamma)
+    for h in (0.0, 0.31, 0.5, 1.0):
+        z = h * sv[2] + (1 - h) * sv[7]
+        got = kernel_cache.merge_z_row(kmat, jnp.int32(2), jnp.int32(7),
+                                       jnp.float32(h))
+        want = ref.rbf_row(sv, z, gamma)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("strategy,merge_batch", [("merge", 1),
+                                                  ("multi-merge", 4),
+                                                  ("removal", 1)])
+def test_cache_consistent_through_training(strategy, merge_batch):
+    """Invariant I1 after real training: cache == recomputed kernel matrix."""
+    key = jax.random.PRNGKey(3)
+    x, y = make_blobs(key, 400, 6, sep=2.0)
+    cfg = BSGDConfig(budget=20, lambda_=1e-4, gamma=0.5, method="lookup-wd",
+                     batch_size=2, use_kernel_cache=True, maintenance=strategy,
+                     merge_batch=merge_batch)
+    st = fit(cfg, x, y, epochs=1, seed=0)
+    assert int(st.count) <= cfg.budget
+    assert int(st.n_merges) > 0
+    _check_cache(st, cfg.gamma)
+
+
+def test_cached_trajectory_matches_recompute():
+    """Acceptance: cached-kappa single-merge training follows the recompute
+    path's trajectory (same inserts, same merge decisions)."""
+    cases = [
+        (make_blobs(jax.random.PRNGKey(0), 600, 6, sep=2.0),
+         dict(budget=25, lambda_=1e-4, gamma=0.5, method="lookup-wd")),
+        (make_two_moons(jax.random.PRNGKey(42), 1000, noise=0.15),
+         dict(budget=40, lambda_=1e-4, gamma=2.0, method="lookup-wd")),
+    ]
+    for (x, y), base in cases:
+        (xtr, ytr), _ = train_test_split(x, y)
+        st0 = fit(BSGDConfig(**base), xtr, ytr, epochs=1, seed=0)
+        st1 = fit(BSGDConfig(**base, use_kernel_cache=True), xtr, ytr,
+                  epochs=1, seed=0)
+        assert int(st0.count) == int(st1.count)
+        assert int(st0.n_merges) == int(st1.n_merges)
+        np.testing.assert_allclose(np.asarray(st0.alpha), np.asarray(st1.alpha),
+                                   rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(st0.sv_x), np.asarray(st1.sv_x),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_cache_survives_removal_fallback():
+    """do_remove (no same-sign partner) keeps the cache consistent."""
+    from repro.core import SVMState, run_maintenance, default_table
+
+    gamma, slots, count = 1.0, 8, 6
+    sv = jax.random.normal(jax.random.PRNGKey(5), (slots, 3))
+    # lone tiny positive alpha among negatives: fallback must fire first
+    alpha = jnp.asarray([0.01, -0.5, -0.3, -0.7, -0.2, -0.9, 0.0, 0.0])
+    kmat = kernel_cache.exact_cache(sv, gamma)
+    sv2, a2, kmat2, c2, n2 = run_maintenance(
+        sv, alpha, kmat, jnp.int32(count), jnp.int32(0), gamma,
+        default_table(), budget=count - 2, strategy="merge",
+        method="lookup-wd")
+    assert int(c2) == count - 2 and int(n2) == 2
+    assert np.all(np.asarray(a2[:int(c2)]) < 0)   # the positive SV is gone
+    state = SVMState(sv_x=sv2, alpha=a2, count=c2, step=jnp.int32(1),
+                     n_inserts=jnp.int32(0), n_merges=n2, kmat=kmat2)
+    _check_cache(state, gamma)
+
+
+def test_apply_merge_reference_matches_exact():
+    """apply_merge/apply_removal are the reference forms of the fused update
+    in core.budget; they must track a from-scratch rebuild exactly."""
+    gamma, slots = 0.8, 10
+    sv = jax.random.normal(jax.random.PRNGKey(7), (slots, 3))
+    kmat = kernel_cache.exact_cache(sv, gamma)
+    i, j, last, h = 2, 7, 9, 0.4
+    got = kernel_cache.apply_merge(kmat, jnp.int32(i), jnp.int32(j),
+                                   jnp.int32(last), jnp.float32(h))
+    z = h * sv[i] + (1 - h) * sv[j]
+    sv2 = sv.at[i].set(z).at[j].set(sv[last])
+    want = kernel_cache.exact_cache(sv2, gamma)
+    np.testing.assert_allclose(np.asarray(got)[:last, :last],
+                               np.asarray(want)[:last, :last],
+                               rtol=1e-5, atol=1e-6)
+
+    got_r = kernel_cache.apply_removal(kmat, jnp.int32(3), jnp.int32(last))
+    sv3 = sv.at[3].set(sv[last])
+    want_r = kernel_cache.exact_cache(sv3, gamma)
+    np.testing.assert_allclose(np.asarray(got_r)[:last, :last],
+                               np.asarray(want_r)[:last, :last],
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_permute_matches_double_gather():
+    kmat = jax.random.uniform(jax.random.PRNGKey(8), (6, 6))
+    perm = jnp.asarray([3, 1, 5, 0, 2, 4])
+    got = np.asarray(kernel_cache.permute(kmat, perm))
+    want = np.asarray(kmat)[np.asarray(perm)][:, np.asarray(perm)]
+    np.testing.assert_array_equal(got, want)

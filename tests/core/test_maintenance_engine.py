@@ -1,0 +1,212 @@
+"""Strategy layer: multi-merge, removal, fallback paths, bf16 training."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (BSGDConfig, STRATEGIES, accuracy, default_table, fit,
+                        init_state, run_maintenance, train_step)
+from repro.data import make_blobs, make_two_moons, train_test_split
+
+
+def _random_sv_set(key, n_active, slots, dim, *, same_sign=False):
+    k1, k2 = jax.random.split(key)
+    sv_x = jax.random.normal(k1, (slots, dim))
+    alpha = 0.1 * jax.random.normal(k2, (slots,))
+    if same_sign:
+        alpha = jnp.abs(alpha) + 0.01
+    alpha = alpha.at[n_active:].set(0.0)
+    return sv_x, alpha
+
+
+# --------------------------------------------------------------------------
+# multi-merge
+# --------------------------------------------------------------------------
+def test_multi_merge_p1_matches_single_merge_model():
+    """P=1 multi-merge makes the same decision as the classic single merge
+    (layouts differ by a slot permutation; the model function must agree)."""
+    key = jax.random.PRNGKey(0)
+    slots, count, dim, gamma = 16, 12, 5, 0.5
+    sv_x, alpha = _random_sv_set(key, count, slots, dim, same_sign=True)
+    table = default_table()
+    xq = jax.random.normal(jax.random.PRNGKey(9), (32, dim))
+
+    def model(sv, a, c):
+        from repro.kernels import ref
+        k = ref.rbf_matrix(xq, sv, gamma)
+        return k @ jnp.where(jnp.arange(slots) < c, a, 0.0)
+
+    s1, a1, _, c1, _ = run_maintenance(
+        sv_x, alpha, None, jnp.int32(count), jnp.int32(0), gamma, table,
+        budget=count - 1, strategy="merge", method="lookup-wd")
+    s2, a2, _, c2, _ = run_maintenance(
+        sv_x, alpha, None, jnp.int32(count), jnp.int32(0), gamma, table,
+        budget=count - 1, strategy="multi-merge", merge_batch=1,
+        method="lookup-wd", impl="ref")
+    assert int(c1) == int(c2) == count - 1
+    np.testing.assert_allclose(np.asarray(model(s1, a1, c1)),
+                               np.asarray(model(s2, a2, c2)),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("excess,p", [(1, 4), (3, 4), (7, 3)])
+def test_multi_merge_count_and_compaction(excess, p):
+    """count lands exactly on budget; survivors are compacted to the front."""
+    key = jax.random.PRNGKey(1)
+    slots, dim, gamma = 32, 4, 0.5
+    budget = 20
+    count = budget + excess
+    sv_x, alpha = _random_sv_set(key, count, slots, dim, same_sign=True)
+    _, a2, _, c2, n2 = run_maintenance(
+        sv_x, alpha, None, jnp.int32(count), jnp.int32(0), gamma,
+        default_table(), budget=budget, strategy="multi-merge", merge_batch=p,
+        method="lookup-wd", impl="ref")
+    assert int(c2) == budget
+    # each fused event executes between 1 and P pairs (a pair is skipped when
+    # its fixed slot was consumed as an earlier pair's partner)
+    assert -(-excess // p) <= int(n2) <= excess
+    a2 = np.asarray(a2)
+    assert np.all(a2[budget:] == 0.0)
+    assert np.all(np.abs(a2[:budget]) > 0.0)
+
+
+def test_multi_merge_pairs_can_merge_each_other():
+    """The two smallest-|alpha| SVs must be allowed to merge with each other
+    (not silently fall back to removal because both are fixed partners)."""
+    slots, dim, gamma = 16, 4, 0.5
+    sv_x = jax.random.normal(jax.random.PRNGKey(5), (slots, dim))
+    # slots 0/1: tiny same-sign pair, near-identical points (clear best merge);
+    # everything else opposite-sign so they are each other's ONLY partners
+    sv_x = sv_x.at[1].set(sv_x[0] + 1e-3)
+    alpha = jnp.full((slots,), -0.5).at[0].set(0.01).at[1].set(0.02)
+    count = 12
+    alpha = alpha.at[count:].set(0.0)
+    mass = float(jnp.sum(alpha[:count]))
+    _, a2, _, c2, n2 = run_maintenance(
+        sv_x, alpha, None, jnp.int32(count), jnp.int32(0), gamma,
+        default_table(), budget=count - 1, strategy="multi-merge",
+        merge_batch=2, method="lookup-wd", impl="ref")
+    assert int(c2) == count - 1
+    # merged, not removed: the ~0.03 of positive mass is preserved
+    a2 = np.asarray(a2)[: count - 1]
+    assert a2.max() > 0.025, a2.max()
+    assert np.isclose(a2.sum(), mass, atol=5e-3)
+
+
+@pytest.mark.parametrize("method", ["lookup-wd", "gss"])
+def test_multi_merge_learns_two_moons(method):
+    key = jax.random.PRNGKey(42)
+    x, y = make_two_moons(key, 1200, noise=0.15)
+    (xtr, ytr), (xte, yte) = train_test_split(x, y)
+    cfg = BSGDConfig(budget=40, lambda_=1e-4, gamma=2.0, method=method,
+                     maintenance="multi-merge", merge_batch=4,
+                     use_kernel_cache=True)
+    st = fit(cfg, xtr, ytr, epochs=2, seed=0)
+    acc = float(accuracy(st, xte, yte, cfg.gamma))
+    assert acc > 0.95, (method, acc)
+    assert int(st.count) <= cfg.budget
+    assert int(st.n_merges) > 0
+
+
+def test_multi_merge_batched_insert_over_budget():
+    """A minibatch can overshoot the budget by several SVs at once; one or two
+    fused events must absorb all of them."""
+    key = jax.random.PRNGKey(2)
+    x, y = make_blobs(key, 200, 6, sep=1.0)
+    cfg = BSGDConfig(budget=16, lambda_=1e-3, gamma=0.5, method="lookup-wd",
+                     batch_size=8, maintenance="multi-merge", merge_batch=4,
+                     use_kernel_cache=True)
+    table = cfg.table()
+    state = init_state(cfg, 6)
+    for i in range(0, 160, 8):
+        state = train_step(cfg, table, state, x[i:i + 8], y[i:i + 8])
+        assert int(state.count) <= cfg.budget
+
+
+# --------------------------------------------------------------------------
+# removal strategy
+# --------------------------------------------------------------------------
+def test_removal_strategy_drops_smallest():
+    key = jax.random.PRNGKey(3)
+    slots, count, budget = 16, 12, 9
+    sv_x, alpha = _random_sv_set(key, count, slots, 4, same_sign=True)
+    _, a2, _, c2, n2 = run_maintenance(
+        sv_x, alpha, None, jnp.int32(count), jnp.int32(0), 0.5, None,
+        budget=budget, strategy="removal")
+    assert int(c2) == budget and int(n2) == 1
+    kept = np.sort(np.abs(np.asarray(a2[:budget])))
+    want = np.sort(np.abs(np.asarray(alpha[:count])))[count - budget:]
+    np.testing.assert_allclose(kept, want, rtol=1e-6)
+
+
+def test_removal_strategy_trains():
+    key = jax.random.PRNGKey(4)
+    x, y = make_blobs(key, 800, 4, sep=2.0)
+    (xtr, ytr), (xte, yte) = train_test_split(x, y)
+    cfg = BSGDConfig(budget=25, lambda_=1e-4, gamma=0.5, maintenance="removal")
+    st = fit(cfg, xtr, ytr, epochs=2, seed=0)
+    assert int(st.count) <= cfg.budget
+    assert float(accuracy(st, xte, yte, cfg.gamma)) > 0.9
+
+
+# --------------------------------------------------------------------------
+# do_remove fallback through the full training step
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("use_cache", [False, True])
+def test_train_step_removal_fallback(use_cache):
+    """When the min-|alpha| SV has no same-sign partner, a real training step
+    must fall back to removal (previously only unit-covered)."""
+    from repro.core import kernel_cache
+
+    cfg = BSGDConfig(budget=4, lambda_=1e-2, gamma=1.0, method="lookup-wd",
+                     use_kernel_cache=use_cache)
+    table = cfg.table()
+    # budget full of strong negatives; a far-away positive margin violator
+    # then inserts with |alpha| = 1/(lambda t) = 1, the strict minimum, and
+    # has no same-sign merge partner -> do_remove must fire.
+    sv = jnp.asarray([[0.0, 0.0], [10.0, 0.0], [0.0, 10.0], [10.0, 10.0],
+                      [0.0, 0.0]])
+    alpha = jnp.asarray([-5.0, -5.0, -5.0, -5.0, 0.0])
+    state = init_state(cfg, 2)._replace(
+        sv_x=sv, alpha=alpha, count=jnp.int32(4), step=jnp.int32(100),
+        kmat=kernel_cache.exact_cache(sv, cfg.gamma) if use_cache else None)
+    state = train_step(cfg, table, state, jnp.asarray([[30.0, 30.0]]),
+                       jnp.asarray([1.0]))
+    assert int(state.count) == cfg.budget
+    assert int(state.n_merges) == 1
+    # the fallback removed the lone positive outright; survivors all negative
+    assert np.all(np.asarray(state.alpha[:int(state.count)]) < 0)
+    if use_cache:
+        _c = int(state.count)
+        got = np.asarray(state.kmat)[:_c, :_c]
+        want = np.asarray(jnp.asarray(
+            kernel_cache.exact_cache(state.sv_x, cfg.gamma)))[:_c, :_c]
+        np.testing.assert_allclose(got, want, atol=5e-5)
+
+
+# --------------------------------------------------------------------------
+# bf16 SV storage
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("strategy", ["merge", "multi-merge"])
+def test_bfloat16_sv_training(strategy):
+    """sv_dtype="bfloat16" trains end to end (with the fp32 kernel cache)."""
+    key = jax.random.PRNGKey(5)
+    x, y = make_blobs(key, 1000, 8, sep=2.5)
+    (xtr, ytr), (xte, yte) = train_test_split(x, y)
+    cfg = BSGDConfig(budget=30, lambda_=1e-4, gamma=0.3, method="lookup-wd",
+                     sv_dtype="bfloat16", use_kernel_cache=True,
+                     maintenance=strategy, merge_batch=4)
+    st = fit(cfg, xtr, ytr, epochs=2, seed=0)
+    assert st.sv_x.dtype == jnp.bfloat16
+    assert st.kmat.dtype == jnp.float32
+    assert int(st.count) <= cfg.budget
+    acc = float(accuracy(st, xte, yte, cfg.gamma))
+    assert acc > 0.9, acc
+
+
+def test_config_validation():
+    with pytest.raises(ValueError):
+        BSGDConfig(maintenance="bogus")
+    with pytest.raises(ValueError):
+        BSGDConfig(budget=4, maintenance="multi-merge", merge_batch=8)
+    assert set(STRATEGIES) == {"merge", "multi-merge", "removal"}

@@ -1,6 +1,9 @@
 """Hypothesis property tests on the merge-problem invariants."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need the 'test' extra")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import default_table, merge_math as mm

@@ -95,3 +95,49 @@ def test_gss_kernel_matches_ref(shape, n_iters):
     want = ref.gss(m, kappa, n_iters)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("p", [1, 3, 8])
+@pytest.mark.parametrize("s", [16, 100, 512])
+def test_multi_merge_scores_matches_ref(p, s):
+    tbl = default_table()
+    key = jax.random.PRNGKey(p * 131 + s)
+    alpha = jnp.abs(jax.random.normal(key, (s,))) * 0.2 + 0.01
+    kappa = jax.random.uniform(jax.random.PRNGKey(s + 1), (p, s))
+    valid = jax.random.bernoulli(jax.random.PRNGKey(s + 2), 0.8, (p, s))
+    a_min = jnp.abs(jax.random.normal(jax.random.PRNGKey(s + 3), (p,))) * 0.05
+    wd_p, h_p = ops.multi_merge_scores(alpha, kappa, valid, a_min, tbl,
+                                       impl="pallas_interpret")
+    wd_r, h_r = ops.multi_merge_scores(alpha, kappa, valid, a_min, tbl,
+                                       impl="ref")
+    mask = np.asarray(valid)
+    np.testing.assert_allclose(np.asarray(wd_p)[mask], np.asarray(wd_r)[mask],
+                               rtol=1e-4, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(h_p), np.asarray(h_r),
+                               rtol=1e-4, atol=1e-5)
+    # invalid slots must lose every per-row argmin
+    for q in range(p):
+        if mask[q].any() and (~mask[q]).any():
+            assert np.asarray(wd_p)[q][~mask[q]].min() > \
+                np.asarray(wd_p)[q][mask[q]].max()
+
+
+def test_multi_merge_scores_rows_match_single_kernel():
+    """Each row of the multi kernel == the single-partner kernel's output."""
+    tbl = default_table()
+    s, p = 100, 4
+    alpha = jnp.abs(jax.random.normal(jax.random.PRNGKey(0), (s,))) * 0.3 + 0.02
+    kappa = jax.random.uniform(jax.random.PRNGKey(1), (p, s))
+    valid = jnp.ones((p, s), bool)
+    a_min = jnp.asarray([0.01, 0.04, 0.1, 0.5])
+    wd_m, h_m = ops.multi_merge_scores(alpha, kappa, valid, a_min, tbl,
+                                       impl="pallas_interpret")
+    for q in range(p):
+        wd_s, _ = ops.merge_scores(alpha, kappa[q], valid[q], a_min[q],
+                                   tbl.wd_table, impl="pallas_interpret")
+        np.testing.assert_allclose(np.asarray(wd_m[q]), np.asarray(wd_s),
+                                   rtol=1e-5, atol=1e-7)
+        np.testing.assert_allclose(
+            np.asarray(h_m[q]),
+            np.asarray(ref.bilinear_lookup(tbl.h_table, *ref.merge_coords(
+                a_min[q], alpha, kappa[q]))), rtol=1e-4, atol=1e-5)
