@@ -1,16 +1,27 @@
 """Paper Table 2: test accuracy of GSS-precise / GSS / Lookup-h / Lookup-WD
-across datasets and budget sizes — the "no accuracy loss" claim."""
+across datasets and budget sizes — the "no accuracy loss" claim.
+
+``--multiclass`` adds the one-vs-rest mode this repo grows on top of the
+paper: per-class merge counts plus wall-clock of the batched lockstep engine
+(one fused all-class kernel contraction per step) vs the loop-over-classes
+baseline.  ``--smoke`` runs a CI-sized subset of both and writes the results
+as JSON (the ``BENCH_*.json`` perf-trajectory artifact).
+"""
 from __future__ import annotations
 
 import argparse
+import json
+import zlib
 
 import jax
 import numpy as np
 
-from repro.core import BSGDConfig, METHODS, accuracy, fit
-from repro.data.synthetic import train_test_split
+from repro.core import (BSGDConfig, METHODS, MulticlassSVMConfig, accuracy,
+                        accuracy_multiclass, fit, fit_multiclass,
+                        fit_multiclass_loop)
+from repro.data.synthetic import make_blobs_multiclass, train_test_split
 
-from .common import DATASETS, csv_row
+from .common import DATASETS, csv_row, time_fn
 
 ORDER = ("gss-precise", "gss", "lookup-h", "lookup-wd")
 
@@ -23,7 +34,9 @@ def run(n: int = 3000, budgets=(50, 150), epochs: int = 2, seeds=(0, 1, 2),
         print(csv_row("dataset", "budget", "method", "acc_mean", "acc_std"))
     for name in names:
         dim, gen, gamma, lam = DATASETS[name]
-        x, y = gen(jax.random.PRNGKey(hash(name) % 2**31), n)
+        # stable digest, not hash(): str hashing is salted per process, and
+        # the --smoke artifact must benchmark the SAME dataset every CI run
+        x, y = gen(jax.random.PRNGKey(zlib.crc32(name.encode()) % 2**31), n)
         (xtr, ytr), (xte, yte) = train_test_split(x, y)
         for budget in budgets:
             for method in ORDER:
@@ -51,11 +64,68 @@ def run(n: int = 3000, budgets=(50, 150), epochs: int = 2, seeds=(0, 1, 2),
     return rows
 
 
+def run_multiclass(n: int = 6000, n_classes: int = 16, dim: int = 20,
+                   budget: int = 50, batch_size: int = 1, verbose=True):
+    """One-vs-rest mode: accuracy, per-class merge counts, and wall-clock of
+    the batched lockstep engine vs the loop-over-classes baseline (identical
+    models — same seed means same permutations)."""
+    x, y = make_blobs_multiclass(jax.random.PRNGKey(0), n, dim, n_classes,
+                                 sep=1.0)
+    (xtr, ytr), (xte, yte) = train_test_split(x, y)
+    cfg = MulticlassSVMConfig.create(n_classes, budget=budget, lambda_=1e-4,
+                                     gamma=0.1, method="lookup-wd",
+                                     batch_size=batch_size)
+
+    def timed(fit_fn):
+        t, st = time_fn(lambda: fit_fn(cfg, xtr, ytr, epochs=1, seed=0))
+        return t, st
+
+    t_batched, st = timed(fit_multiclass)
+    t_loop, st_loop = timed(fit_multiclass_loop)
+    g = cfg.binary.gamma
+    result = {
+        "n_train": int(xtr.shape[0]), "dim": dim, "n_classes": n_classes,
+        "budget": budget, "batch_size": batch_size,
+        "acc_batched": round(float(accuracy_multiclass(st, xte, yte, g)), 4),
+        "acc_loop": round(float(accuracy_multiclass(st_loop, xte, yte, g)), 4),
+        "t_batched_s": round(t_batched, 3),
+        "t_loop_s": round(t_loop, 3),
+        "speedup_batched_vs_loop": round(t_loop / t_batched, 3),
+        "merges_per_class": np.asarray(st.n_merges).tolist(),
+        "sv_count_per_class": np.asarray(st.count).tolist(),
+    }
+    if verbose:
+        print(csv_row("mode", "classes", "budget", "acc", "t_batched_s",
+                      "t_loop_s", "speedup"))
+        print(csv_row("ovr-batched", n_classes, budget, result["acc_batched"],
+                      result["t_batched_s"], result["t_loop_s"],
+                      result["speedup_batched_vs_loop"]), flush=True)
+        print(f"# per-class merges: {result['merges_per_class']}")
+    return result
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=3000)
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--multiclass", action="store_true",
+                    help="one-vs-rest mode: batched engine vs class loop")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized binary + multiclass run, JSON to --out")
+    ap.add_argument("--out", default="BENCH_table2_accuracy.json",
+                    help="JSON output path for --smoke")
     args = ap.parse_args()
+    if args.smoke:
+        rows = run(n=1200, budgets=(50,), epochs=1, seeds=(0,),
+                   datasets=["SUSY", "IJCNN"])
+        mc = run_multiclass(n=2500, n_classes=5, budget=30)
+        with open(args.out, "w") as f:
+            json.dump({"binary_rows": rows, "multiclass": mc}, f, indent=2)
+        print(f"# wrote {args.out}")
+        return
+    if args.multiclass:
+        run_multiclass(n=args.n * 2)
+        return
     if args.quick:
         run(n=1200, budgets=(50,), epochs=1, seeds=(0,),
             datasets=["SUSY", "IJCNN"])

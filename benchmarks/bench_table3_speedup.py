@@ -13,6 +13,7 @@ with the kappa row recomputed per event (seed) vs read from the kernel cache.
 from __future__ import annotations
 
 import argparse
+import zlib
 
 import jax
 import jax.numpy as jnp
@@ -128,7 +129,8 @@ def run(n: int = 4000, budgets=(50, 150), epochs: int = 2, datasets=None,
                       "improv_h_%", "improv_wd_%"))
     for name in names:
         dim, gen, gamma, lam = DATASETS[name]
-        x, y = gen(jax.random.PRNGKey(hash(name) % 2**31), n)
+        # stable digest, not hash(): str hashing is salted per process
+        x, y = gen(jax.random.PRNGKey(zlib.crc32(name.encode()) % 2**31), n)
         (xtr, ytr), _ = train_test_split(x, y)
         for budget in budgets:
             times = {}

@@ -62,6 +62,10 @@ class BSGDConfig:
                                        # rows are read, not recomputed
     maintenance: str = "merge"         # merge | multi-merge | removal
     merge_batch: int = 4               # P pairs per fused multi-merge event
+    unroll_maintenance: bool = False   # inline batch_size masked events instead
+                                       # of a while_loop: bitwise loop-parity
+                                       # under vmap (core.budget docstring);
+                                       # compile size grows with batch_size
 
     def __post_init__(self):
         if self.maintenance not in budget_mod.STRATEGIES:
@@ -108,11 +112,17 @@ def predict(state: SVMState, x, gamma, **kw):
 
 
 @partial(jax.jit, static_argnames=("cfg", "impl"))
-def train_step(cfg: BSGDConfig, table, state: SVMState, xb, yb, *,
-               impl: str = "auto") -> SVMState:
-    """One Pegasos minibatch step + budget maintenance.
+def train_step_from_rows(cfg: BSGDConfig, table, state: SVMState, xb, yb,
+                         k_b, k_bb=None, *, impl: str = "auto") -> SVMState:
+    """Pegasos minibatch step + maintenance from precomputed kernel rows.
 
-    xb: (batch, dim), yb: (batch,) in {-1, +1}.
+    ``k_b = k(xb, sv_x)`` of shape (batch, slots) and — only when the kernel
+    cache is on — ``k_bb = k(xb, xb)`` of shape (batch, batch).  This is the
+    seam the one-vs-rest engine (``core.multiclass``) vmaps over the class
+    axis: all classes' rows come from ONE fused ``rbf_matrix`` call against
+    the flattened (C * slots, dim) SV bank, then each class runs this
+    row-consuming step.  Everything below is vmap-clean (masked argmin/top-k,
+    scatter-with-drop — no per-example control flow).
     """
     slots = cfg.slots
     t = state.step
@@ -122,7 +132,6 @@ def train_step(cfg: BSGDConfig, table, state: SVMState, xb, yb, *,
     # they double as the cache update on insert (zero extra kernel evals)
     # mask by the state's own width: callers may replay a step under a
     # one-larger budget on the same arrays (see bench_table3 decision_stats)
-    k_b = kops.rbf_matrix(xb, state.sv_x, cfg.gamma, impl=impl)   # (batch, slots)
     active = jnp.arange(state.alpha.shape[0]) < state.count
     f = k_b.astype(state.alpha.dtype) @ jnp.where(active, state.alpha, 0.0)
     margin = yb * f
@@ -142,18 +151,32 @@ def train_step(cfg: BSGDConfig, table, state: SVMState, xb, yb, *,
 
     kmat = state.kmat
     if cfg.use_kernel_cache:
-        k_bb = kops.rbf_matrix(xb, xb, cfg.gamma, impl=impl)      # (batch, batch)
         kmat = kernel_cache.insert_rows(kmat, idx, k_b, k_bb)
 
     # budget maintenance until count <= budget (strategy layer: core.budget)
     sv_x, alpha, kmat, count, n_merges = budget_mod.run_maintenance(
         sv_x, alpha, kmat, count, state.n_merges, cfg.gamma, table,
         budget=cfg.budget, strategy=cfg.maintenance, method=cfg.method,
-        merge_batch=cfg.merge_batch, impl=impl)
+        merge_batch=cfg.merge_batch, impl=impl,
+        unroll=cfg.batch_size if cfg.unroll_maintenance else 0)
 
     return SVMState(sv_x=sv_x, alpha=alpha, count=count, step=t + 1,
                     n_inserts=state.n_inserts + n_new, n_merges=n_merges,
                     kmat=kmat)
+
+
+@partial(jax.jit, static_argnames=("cfg", "impl"))
+def train_step(cfg: BSGDConfig, table, state: SVMState, xb, yb, *,
+               impl: str = "auto") -> SVMState:
+    """One Pegasos minibatch step + budget maintenance.
+
+    xb: (batch, dim), yb: (batch,) in {-1, +1}.
+    """
+    k_b = kops.rbf_matrix(xb, state.sv_x, cfg.gamma, impl=impl)   # (batch, slots)
+    k_bb = (kops.rbf_matrix(xb, xb, cfg.gamma, impl=impl)         # (batch, batch)
+            if cfg.use_kernel_cache else None)
+    return train_step_from_rows(cfg, table, state, xb, yb, k_b, k_bb,
+                                impl=impl)
 
 
 @partial(jax.jit, static_argnames=("cfg", "impl"))

@@ -359,17 +359,27 @@ def _removal_all(sv_x, alpha, kmat, count, budget: int):
 # Engine entry point: loop a strategy until count <= budget
 # --------------------------------------------------------------------------
 @partial(jax.jit, static_argnames=("budget", "strategy", "method",
-                                   "merge_batch", "impl"))
+                                   "merge_batch", "impl", "unroll"))
 def run_maintenance(sv_x, alpha, kmat, count, n_events, gamma, table, *,
                     budget: int, strategy: str = "merge",
                     method: str = "lookup-wd", merge_batch: int = 4,
-                    impl: str = "auto"):
+                    impl: str = "auto", unroll: int = 0):
     """Run budget maintenance until ``count <= budget``.
 
     ``kmat`` is the SV-SV kernel cache (or None to recompute kappa rows per
     event); it is kept consistent across merges and compaction.  Returns
     ``(sv_x, alpha, kmat, count, n_events)`` with ``n_events`` incremented
     once per maintenance event (a fused multi-merge counts as one event).
+
+    ``unroll > 0`` replaces the ``lax.while_loop`` with exactly ``unroll``
+    statically-inlined events, each masked to a no-op once ``count <=
+    budget``.  The caller must guarantee the budget excess never exceeds
+    ``unroll`` (one insert minibatch gives excess <= batch_size, and every
+    event lowers count by >= 1, so ``unroll = batch_size`` always suffices).
+    The payoff is exact cross-batching numerics: XLA compiles a while-loop
+    body with batch-width-dependent FMA contraction, so ``vmap`` over a class
+    axis drifts from the per-class loop by ~1 ULP per event — inlined bodies
+    do not (the loop-parity property in tests/core/test_multiclass.py).
     """
     if strategy not in STRATEGIES:
         raise ValueError(
@@ -383,9 +393,6 @@ def run_maintenance(sv_x, alpha, kmat, count, n_events, gamma, table, *,
             lambda args: args,
             (sv_x, alpha, kmat, count))
         return sv_x, alpha, kmat, count, n_events + over.astype(n_events.dtype)
-
-    def cond(carry):
-        return carry[3] > budget
 
     if strategy == "merge":
         def body(carry):
@@ -401,6 +408,12 @@ def run_maintenance(sv_x, alpha, kmat, count, n_events, gamma, table, *,
                 merge_batch, impl)
             return sv_x, alpha, kmat, c, n + 1
 
-    sv_x, alpha, kmat, count, n_events = jax.lax.while_loop(
-        cond, body, (sv_x, alpha, kmat, count, n_events))
-    return sv_x, alpha, kmat, count, n_events
+    carry = (sv_x, alpha, kmat, count, n_events)
+    if unroll:
+        for _ in range(unroll):
+            over = carry[3] > budget
+            carry = jax.tree.map(lambda new, old: jnp.where(over, new, old),
+                                 body(carry), carry)
+        return carry
+
+    return jax.lax.while_loop(lambda c: c[3] > budget, body, carry)

@@ -12,6 +12,12 @@ Parallel structure (DESIGN.md §3.5):
     sequential solver chain would serialize every replica (the paper's cost,
     amplified by scale).
 
+Multi-class (``layout="class"``, DESIGN.md §8): the stacked one-vs-rest
+state's leading ``(C,)`` axis shards over ``model`` — every device owns
+whole classes, so per-class maintenance needs NO collective at all; the
+minibatch shards over the data axes and all-gathers once into the fused
+(batch, C * slots) kernel contraction.
+
 ``make_distributed_step`` returns (step_fn, in_shardings, out_shardings,
 abstract args) — consumed by both the real trainer and the dry-run, so the
 SVM cell is exercised on the production mesh exactly like the LM cells.
@@ -24,6 +30,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from .bsgd import BSGDConfig, SVMState, train_step
 from .lookup import MergeLookupTable
+from .multiclass import MulticlassSVMConfig, train_step_multiclass
 
 
 def sv_shardings(cfg: BSGDConfig, mesh, dim: int, *, layout: str = "replicated"):
@@ -60,10 +67,73 @@ def sv_shardings(cfg: BSGDConfig, mesh, dim: int, *, layout: str = "replicated")
     ), NamedSharding(mesh, P(batch_axes, None)), NamedSharding(mesh, P(batch_axes))
 
 
-def make_distributed_step(cfg: BSGDConfig, mesh, dim: int,
+def multiclass_shardings(cfg: MulticlassSVMConfig, mesh):
+    """``layout="class"`` shardings: classes over ``model``, batch over the
+    data axes.  Requires ``n_classes`` divisible by the model-axis size
+    (falls back to replicated classes otherwise)."""
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    cls = "model" if cfg.n_classes % mesh.shape["model"] == 0 else None
+    state_sh = SVMState(
+        sv_x=NamedSharding(mesh, P(cls, None, None)),
+        alpha=NamedSharding(mesh, P(cls, None)),
+        count=NamedSharding(mesh, P(cls)),
+        step=NamedSharding(mesh, P(cls)),
+        n_inserts=NamedSharding(mesh, P(cls)),
+        n_merges=NamedSharding(mesh, P(cls)),
+        kmat=(NamedSharding(mesh, P(cls, None, None))
+              if cfg.binary.use_kernel_cache else None),
+    )
+    return (state_sh, NamedSharding(mesh, P(dp, None)),
+            NamedSharding(mesh, P(dp)))
+
+
+def _make_multiclass_step(cfg: MulticlassSVMConfig, mesh, dim: int,
+                          table: MergeLookupTable | None):
+    b = cfg.binary
+    state_sh, x_sh, y_sh = multiclass_shardings(cfg, mesh)
+    repl = NamedSharding(mesh, P())
+    table_sh = (MergeLookupTable(h_table=repl, wd_table=repl)
+                if table is not None else None)
+
+    def step(state: SVMState, table, xb, yb):
+        return train_step_multiclass(cfg, table, state, xb, yb, impl="ref")
+
+    c = cfg.n_classes
+    args = (
+        SVMState(
+            sv_x=jax.ShapeDtypeStruct((c, b.slots, dim),
+                                      jnp.dtype(b.sv_dtype or b.dtype)),
+            alpha=jax.ShapeDtypeStruct((c, b.slots), jnp.dtype(b.dtype)),
+            count=jax.ShapeDtypeStruct((c,), jnp.int32),
+            step=jax.ShapeDtypeStruct((c,), jnp.int32),
+            n_inserts=jax.ShapeDtypeStruct((c,), jnp.int32),
+            n_merges=jax.ShapeDtypeStruct((c,), jnp.int32),
+            kmat=(jax.ShapeDtypeStruct((c, b.slots, b.slots), jnp.float32)
+                  if b.use_kernel_cache else None)),
+        (jax.eval_shape(lambda: table) if table is not None else None),
+        jax.ShapeDtypeStruct((b.batch_size, dim),
+                             jnp.dtype(b.sv_dtype or b.dtype)),
+        jax.ShapeDtypeStruct((b.batch_size,), jnp.int32),
+    )
+    in_sh = (state_sh, table_sh, x_sh, y_sh)
+    return step, args, in_sh, state_sh
+
+
+def make_distributed_step(cfg, mesh, dim: int,
                           table: MergeLookupTable | None = None,
                           layout: str = "replicated"):
-    """(step_fn, args_abstract, in_shardings, out_shardings)."""
+    """(step_fn, args_abstract, in_shardings, out_shardings).
+
+    ``cfg`` is a ``BSGDConfig`` for the binary layouts (``replicated`` /
+    ``slots``) or a ``MulticlassSVMConfig`` for ``layout="class"``.
+    """
+    if layout == "class":
+        if not isinstance(cfg, MulticlassSVMConfig):
+            raise TypeError("layout='class' needs a MulticlassSVMConfig, got "
+                            f"{type(cfg).__name__}")
+        if table is None and cfg.binary.method.startswith("lookup"):
+            table = cfg.table()
+        return _make_multiclass_step(cfg, mesh, dim, table)
     if table is None and cfg.method.startswith("lookup"):
         table = cfg.table()
     state_sh, x_sh, y_sh = sv_shardings(cfg, mesh, dim, layout=layout)
@@ -97,15 +167,19 @@ def make_distributed_step(cfg: BSGDConfig, mesh, dim: int,
 
 def lower_svm_cell(mesh, *, budget: int = 16384, dim: int = 1024,
                    batch: int = 8192, method: str = "lookup-wd",
-                   layout: str = "replicated"):
+                   layout: str = "replicated", n_classes: int = 8):
     """AOT-lower the production-scale BSGD cell (the paper-technique cell).
 
     Production sizing: budget 16k SVs, 1k features, 8k-example global
     minibatch — the regime where the kernel matrix (batch x slots) is real
-    MXU work and merging fires every step.
+    MXU work and merging fires every step.  ``layout="class"`` lowers the
+    one-vs-rest multi-class cell instead (``n_classes`` stacked problems,
+    classes sharded over ``model``).
     """
     cfg = BSGDConfig(budget=budget, lambda_=1e-6, gamma=2.0**-7, method=method,
                      batch_size=batch, dtype="float32", sv_dtype="bfloat16")
+    if layout == "class":
+        cfg = MulticlassSVMConfig(n_classes=n_classes, binary=cfg)
     table = cfg.table()
     step, args, in_sh, out_sh = make_distributed_step(cfg, mesh, dim, table,
                                                       layout=layout)

@@ -134,12 +134,20 @@ class MergeLookupTable:
         return cls(*children)
 
 
-_DEFAULT_TABLE: MergeLookupTable | None = None
+_TABLE_CACHE: dict[tuple, MergeLookupTable] = {}
 
 
-def default_table(grid_size: int = DEFAULT_GRID) -> MergeLookupTable:
-    """Process-wide cached table (built once, ~160k GSS solves, <1s)."""
-    global _DEFAULT_TABLE
-    if _DEFAULT_TABLE is None or _DEFAULT_TABLE.h_table.shape[0] != grid_size:
-        _DEFAULT_TABLE = MergeLookupTable.create(grid_size=grid_size)
-    return _DEFAULT_TABLE
+def default_table(grid_size: int = DEFAULT_GRID,
+                  eps: float = merge_math.EPS_PRECISE,
+                  dtype=jnp.float32) -> MergeLookupTable:
+    """Process-wide cached tables (each built once, ~160k GSS solves, <1s).
+
+    Keyed by every build parameter — a call with a different ``eps`` or
+    ``dtype`` must not be handed a table built with someone else's settings.
+    """
+    key = (int(grid_size), float(eps), jnp.dtype(dtype).name)
+    table = _TABLE_CACHE.get(key)
+    if table is None:
+        table = _TABLE_CACHE[key] = MergeLookupTable.create(
+            grid_size=grid_size, eps=eps, dtype=dtype)
+    return table

@@ -1,0 +1,203 @@
+"""One-vs-rest multi-class BSGD: the class axis as a leading state dimension.
+
+The paper's lookup-based merge makes budget maintenance cheap enough to run
+*per class per step* — exactly what one-vs-rest multi-class kernel SVMs need
+(Picard 2018 shows budgeted kernel SVMs paying off in large multi-class
+regimes).  This module stacks C independent binary BSGD problems into one
+``SVMState`` whose every array carries a leading ``(C,)`` axis and trains
+them in lockstep:
+
+  * margins for ALL classes come from a single fused kernel contraction —
+    ONE ``rbf_matrix`` call against the flattened ``(C * slots, dim)`` SV
+    bank, reshaped to ``(C, batch, slots)`` — not C sequential kernel calls
+    (``class_kernel_rows``);
+  * the Pegasos update + budget maintenance is ``jax.vmap`` of
+    ``bsgd.train_step_from_rows`` over the class axis — the step is
+    vmap-clean, and with ``unroll_maintenance=True`` it is *bitwise*
+    loop-parity (property test in ``tests/core/test_multiclass.py``);
+  * ONE ``MergeLookupTable`` is shared by every class (closed over the vmap,
+    never stacked — 640 KB total regardless of C).
+
+Prediction is argmax over the C per-class decision functions, again from one
+fused kernel call.  The loop-over-classes baseline (`fit_multiclass_loop`)
+is kept as the benchmark reference point (`bench_table2_accuracy
+--multiclass` reports batched vs loop wall-clock).
+
+Sharding: ``core.distributed`` maps this layout onto the production mesh
+with ``layout="class"`` — classes over the ``model`` axis, the minibatch
+over the data axes (DESIGN.md §8).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .bsgd import (BSGDConfig, SVMState, init_state, train_step_from_rows)
+from ..kernels import ops as kops
+
+
+@dataclasses.dataclass(frozen=True)
+class MulticlassSVMConfig:
+    """C one-vs-rest copies of a binary ``BSGDConfig`` (one shared table)."""
+
+    n_classes: int
+    binary: BSGDConfig
+
+    def __post_init__(self):
+        if self.n_classes < 2:
+            raise ValueError(f"n_classes={self.n_classes} < 2")
+
+    @property
+    def slots(self) -> int:
+        return self.binary.slots
+
+    def table(self):
+        return self.binary.table()
+
+    @staticmethod
+    def create(n_classes: int, **kw) -> "MulticlassSVMConfig":
+        """Build from binary hyperparameters: ``create(5, budget=100, ...)``."""
+        return MulticlassSVMConfig(n_classes=n_classes, binary=BSGDConfig(**kw))
+
+
+def ovr_targets(y, n_classes: int, dtype=jnp.float32):
+    """Integer class labels (n,) -> one-vs-rest targets (C, n) in {-1, +1}.
+
+    Labels must be 0-based: an out-of-range id would silently train as "not
+    any class" (all-(-1) targets) and could never be predicted.  The fit
+    drivers validate concrete labels up front (``check_labels``).
+    """
+    y = y.astype(jnp.int32)
+    onehot = jnp.arange(n_classes, dtype=jnp.int32)[:, None] == y[None, :]
+    return jnp.where(onehot, 1.0, -1.0).astype(dtype)
+
+
+def check_labels(y, n_classes: int) -> None:
+    """Raise on concrete labels outside [0, n_classes); no-op on tracers."""
+    try:
+        y_min, y_max = int(jnp.min(y)), int(jnp.max(y))
+    except (jax.errors.ConcretizationTypeError,
+            jax.errors.TracerArrayConversionError):
+        return
+    if y_min < 0 or y_max >= n_classes:
+        raise ValueError(
+            f"class labels must be integers in [0, {n_classes}); got range "
+            f"[{y_min}, {y_max}] — remap 1-based labels (e.g. y - 1) first")
+
+
+def init_multiclass_state(cfg: MulticlassSVMConfig, dim: int) -> SVMState:
+    """Stacked ``SVMState``: every leaf gains a leading ``(C,)`` axis."""
+    st = init_state(cfg.binary, dim)
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (cfg.n_classes,) + a.shape), st)
+
+
+def class_kernel_rows(sv_x, x, gamma, *, impl: str = "auto"):
+    """``k(x, sv_c)`` for every class from ONE kernel call.
+
+    sv_x: (C, slots, dim) stacked SV bank; x: (n, dim).
+    Returns (C, n, slots) — the batched all-class kernel contraction: the
+    class axis is flattened into the SV axis so the whole thing is a single
+    ``(n, C * slots)`` rbf block (one Pallas launch / one XLA matmul), then
+    reshaped back.
+    """
+    c, slots, dim = sv_x.shape
+    k = kops.rbf_matrix(x, sv_x.reshape(c * slots, dim), gamma, impl=impl)
+    return jnp.moveaxis(k.reshape(x.shape[0], c, slots), 1, 0)
+
+
+def decision_function_multiclass(state: SVMState, x, gamma, *,
+                                 impl: str = "auto"):
+    """Per-class scores f_c(x); x: (n, d) -> (C, n)."""
+    k = class_kernel_rows(state.sv_x, x, gamma, impl=impl)        # (C, n, slots)
+    active = jnp.arange(state.alpha.shape[-1])[None, :] < state.count[:, None]
+    alpha = jnp.where(active, state.alpha, 0.0)                   # (C, slots)
+    return jnp.einsum("cns,cs->cn", k.astype(alpha.dtype), alpha)
+
+
+def predict_multiclass(state: SVMState, x, gamma, **kw):
+    """argmax over the C one-vs-rest decision functions; returns (n,) int32."""
+    scores = decision_function_multiclass(state, x, gamma, **kw)
+    return jnp.argmax(scores, axis=0).astype(jnp.int32)
+
+
+def accuracy_multiclass(state: SVMState, x, y, gamma, **kw) -> jax.Array:
+    pred = predict_multiclass(state, x, gamma, **kw)
+    return jnp.mean((pred == y.astype(jnp.int32)).astype(jnp.float32))
+
+
+@partial(jax.jit, static_argnames=("cfg", "impl"))
+def train_step_multiclass(cfg: MulticlassSVMConfig, table, state: SVMState,
+                          xb, yb, *, impl: str = "auto") -> SVMState:
+    """One lockstep Pegasos step for all C one-vs-rest problems.
+
+    xb: (batch, dim); yb: (batch,) integer class ids in [0, C).
+    One fused rbf call produces every class's margin rows; the per-class
+    update (insert + budget maintenance) is vmapped over the class axis with
+    the lookup table and minibatch closed over (shared, not stacked).
+    """
+    b = cfg.binary
+    k_b = class_kernel_rows(state.sv_x, xb, b.gamma, impl=impl)   # (C, batch, slots)
+    k_bb = (kops.rbf_matrix(xb, xb, b.gamma, impl=impl)
+            if b.use_kernel_cache else None)
+    y_ovr = ovr_targets(yb, cfg.n_classes, dtype=jnp.dtype(b.dtype))
+
+    def one_class(st, yc, kc):
+        return train_step_from_rows(b, table, st, xb, yc, kc, k_bb, impl=impl)
+
+    return jax.vmap(one_class)(state, y_ovr, k_b)
+
+
+@partial(jax.jit, static_argnames=("cfg", "impl"))
+def train_epoch_multiclass(cfg: MulticlassSVMConfig, table, state: SVMState,
+                           x, y, perm, *, impl: str = "auto") -> SVMState:
+    """One pass over (x, integer y) as a single lax.scan (cf. train_epoch)."""
+    bs = cfg.binary.batch_size
+    steps = perm.shape[0] // bs
+    order = perm[: steps * bs].reshape(steps, bs)
+
+    def scan_body(st, batch_idx):
+        xb = jnp.take(x, batch_idx, axis=0)
+        yb = jnp.take(y, batch_idx, axis=0)
+        return train_step_multiclass(cfg, table, st, xb, yb, impl=impl), ()
+
+    state, _ = jax.lax.scan(scan_body, state, order)
+    return state
+
+
+def fit_multiclass(cfg: MulticlassSVMConfig, x, y, *, epochs: int = 1,
+                   seed: int = 0, impl: str = "auto",
+                   state: SVMState | None = None) -> SVMState:
+    """Convenience driver: shuffled epochs over (x, integer labels y)."""
+    check_labels(y, cfg.n_classes)
+    table = cfg.table()
+    if state is None:
+        state = init_multiclass_state(cfg, x.shape[1])
+    key = jax.random.PRNGKey(seed)
+    for _ in range(epochs):
+        key, sub = jax.random.split(key)
+        perm = jax.random.permutation(sub, x.shape[0])
+        state = train_epoch_multiclass(cfg, table, state, x, y, perm,
+                                       impl=impl)
+    return state
+
+
+def fit_multiclass_loop(cfg: MulticlassSVMConfig, x, y, *, epochs: int = 1,
+                        seed: int = 0, impl: str = "auto") -> SVMState:
+    """Loop-over-classes baseline: C sequential binary fits on OVR labels.
+
+    Identical epoch permutations (same seed) mean this trains the same model
+    as ``fit_multiclass`` — it just pays C sequential kernel calls per step
+    plus C scans per epoch.  Kept as the reference point the batched engine
+    is benchmarked against (``bench_table2_accuracy --multiclass``).
+    """
+    from .bsgd import fit
+
+    check_labels(y, cfg.n_classes)
+    y_ovr = ovr_targets(y, cfg.n_classes, dtype=jnp.dtype(cfg.binary.dtype))
+    states = [fit(cfg.binary, x, y_ovr[c], epochs=epochs, seed=seed, impl=impl)
+              for c in range(cfg.n_classes)]
+    return jax.tree.map(lambda *leaves: jnp.stack(leaves), *states)

@@ -1,4 +1,6 @@
 """Data pipelines: synthetic classification sets, LIBSVM parsing, LM tokens."""
-from .synthetic import make_blobs, make_susy_like, make_two_moons, train_test_split
+from .libsvm import dump_libsvm, parse_libsvm
+from .synthetic import make_blobs, make_blobs_multiclass, make_susy_like, make_two_moons, train_test_split
 
-__all__ = ["make_blobs", "make_susy_like", "make_two_moons", "train_test_split"]
+__all__ = ["dump_libsvm", "make_blobs", "make_blobs_multiclass", "make_susy_like", "make_two_moons",
+           "parse_libsvm", "train_test_split"]

@@ -4,8 +4,16 @@ from __future__ import annotations
 import numpy as np
 
 
-def parse_libsvm(path_or_lines, n_features: int | None = None):
-    """Returns (x (n, d) float32, y (n,) float32 in {-1, +1})."""
+def parse_libsvm(path_or_lines, n_features: int | None = None, *,
+                 binary: bool = True):
+    """Returns ``(x (n, d) float32, y (n,) float32)``.
+
+    ``binary=True`` (the paper's setting) maps every label to {-1, +1} by
+    sign; ``binary=False`` keeps the raw labels untouched so multi-class
+    sets survive for ``core.multiclass``.  ``fit_multiclass`` expects
+    0-based integer ids — remap first, e.g. ``y.astype(int) - 1`` for the
+    common 1..C LIBSVM convention (it raises on out-of-range labels).
+    """
     if isinstance(path_or_lines, str):
         with open(path_or_lines) as f:
             lines = f.readlines()
@@ -18,7 +26,7 @@ def parse_libsvm(path_or_lines, n_features: int | None = None):
         if not parts:
             continue
         label = float(parts[0])
-        ys.append(1.0 if label > 0 else -1.0)
+        ys.append((1.0 if label > 0 else -1.0) if binary else label)
         feats = {}
         for tok in parts[1:]:
             idx, val = tok.split(":")

@@ -38,13 +38,13 @@ P_PAD = 8  # fp32 sublane multiple; ops pads the pair axis to this
 
 def _multi_merge_kernel(alpha_ref, kappa_ref, valid_ref, amin_ref,
                         h_tab_ref, wd_tab_ref, wd_ref, h_ref, *, g: int):
-    alpha = alpha_ref[0, :].astype(jnp.float32)        # (bS,)
+    alpha = alpha_ref[...].astype(jnp.float32)         # (P, bS) — per-row
     kappa = kappa_ref[...].astype(jnp.float32)         # (P, bS)
     valid = valid_ref[...]                             # (P, bS)
     a_min = amin_ref[:, 0].astype(jnp.float32)         # (P,)
     p, bs = kappa.shape
 
-    denom = a_min[:, None] + alpha[None, :]            # (P, bS)
+    denom = a_min[:, None] + alpha                     # (P, bS)
     m = jnp.clip(a_min[:, None] / jnp.where(denom == 0.0, 1.0, denom), 0.0, 1.0)
     kap = jnp.clip(kappa, 0.0, 1.0)
 
@@ -70,18 +70,23 @@ def multi_merge_scores_pallas(alpha, kappa_rows, valid, a_min, h_table,
                               interpret: bool = False):
     """(wd, h) of shape (P, s) for P fixed partners against all candidates.
 
-    alpha: (s,); kappa_rows, valid: (P, s); a_min: (P,); tables: (G, G).
-    P must be a multiple of ``P_PAD`` and s of ``block_s`` (ops pads).
+    alpha, kappa_rows, valid: (P, s); a_min: (P,); tables: (G, G).
+    Each pair row carries its OWN candidate-alpha row — in the binary engine
+    all P rows are the same broadcast alpha, while the class-batched layout
+    folds ``(C, P)`` pairs into the row axis with per-class alphas
+    (``kernels.ops.multi_merge_scores``).  P must be a multiple of ``P_PAD``
+    and s of ``block_s`` (ops pads).
     Invalid slots get WD = 3.4e38 (argmin-safe, finite for bf16 casts).
     """
     p, s = kappa_rows.shape
     assert s % block_s == 0 and p % P_PAD == 0, "pad first (see kernels.ops)"
+    assert alpha.shape == (p, s), "alpha must be per-row (broadcast upstream)"
     g = h_table.shape[0]
     wd, h = pl.pallas_call(
         functools.partial(_multi_merge_kernel, g=g),
         grid=(s // block_s,),
         in_specs=[
-            pl.BlockSpec((1, block_s), lambda i: (0, i)),
+            pl.BlockSpec((p, block_s), lambda i: (0, i)),
             pl.BlockSpec((p, block_s), lambda i: (0, i)),
             pl.BlockSpec((p, block_s), lambda i: (0, i)),
             pl.BlockSpec((p, 1), lambda i: (0, 0)),
@@ -97,7 +102,7 @@ def multi_merge_scores_pallas(alpha, kappa_rows, valid, a_min, h_table,
             jax.ShapeDtypeStruct((p, s), jnp.float32),
         ],
         interpret=interpret,
-    )(alpha[None, :].astype(jnp.float32), kappa_rows.astype(jnp.float32),
+    )(alpha.astype(jnp.float32), kappa_rows.astype(jnp.float32),
       valid.astype(jnp.float32), a_min[:, None].astype(jnp.float32),
       h_table.astype(jnp.float32), wd_table.astype(jnp.float32))
     return wd, h

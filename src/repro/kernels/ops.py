@@ -81,8 +81,27 @@ def rbf_row(sv_x, x, gamma, *, impl: str = "auto"):
 @partial(jax.jit, static_argnames=("impl", "block_s"))
 def merge_scores(alpha, kappa_row, valid, a_min, table, *, impl: str = "auto",
                  block_s: int = 512):
-    """(wd, interp) per candidate; invalid slots get a large finite WD."""
+    """(wd, interp) per candidate; invalid slots get a large finite WD.
+
+    Class-batched layout: ``alpha``/``kappa_row``/``valid`` of shape (C, s)
+    with ``a_min`` (C,) scores one fixed partner *per class* in one pass —
+    each class row carries its own alpha, so this is exactly the row-wise
+    layout of the multi-merge kernel (one launch, both lookups from the one
+    ``table``).  Returns (C, s) arrays.
+    """
     impl = _resolve(impl)
+    if kappa_row.ndim == 2:                     # class-batched: C rows at once
+        if impl == "ref":
+            return ref.multi_merge_scores_rows(alpha, kappa_row, valid, a_min,
+                                               table, table)
+        # clamp to the multi-row kernel's VMEM-safe block: it keeps P_PAD
+        # rows of hat weights resident, unlike the single-row kernel whose
+        # default this function's block_s=512 was sized for
+        wd, interp = _multi_merge_rows_pallas(
+            alpha, kappa_row, valid, a_min, table, table,
+            block_s=min(block_s, 128),
+            interpret=(impl == "pallas_interpret"))
+        return wd, interp
     if impl == "ref":
         wd = ref.merge_scores(alpha, kappa_row, valid, a_min, table)
         m, kap = ref.merge_coords(a_min, alpha, kappa_row)
@@ -121,6 +140,31 @@ def gss_solve(m, kappa, *, n_iters: int, impl: str = "auto"):
 # --------------------------------------------------------------------------
 # Batched multi-merge scoring (P fixed partners, both tables, one pass)
 # --------------------------------------------------------------------------
+def _multi_merge_rows_pallas(alpha_rows, kappa_rows, valid, a_min, h_table,
+                             wd_table, *, block_s: int, interpret: bool):
+    """Row-wise Pallas launches: every pair row carries its own alpha.
+
+    Tiles the row axis: the kernel keeps all its P rows resident per grid
+    step (hat-weight matrices scale with P * block_s), so one launch per
+    P_PAD rows keeps VMEM bounded no matter how many rows are folded in
+    (merge_batch, or n_classes * merge_batch in the class-batched layout).
+    """
+    p, s = kappa_rows.shape
+    bs = min(block_s, max(128, s))
+    pad_s = lambda a: _pad_to(a, a.ndim - 1, bs)
+    pad_p = lambda a: _pad_to(a, 0, merge_multi_kernel.P_PAD)
+    wds, hs = [], []
+    for start in range(0, p, merge_multi_kernel.P_PAD):
+        sl = slice(start, min(start + merge_multi_kernel.P_PAD, p))
+        wd_c, h_c = merge_multi_kernel.multi_merge_scores_pallas(
+            pad_p(pad_s(alpha_rows[sl])), pad_p(pad_s(kappa_rows[sl])),
+            pad_p(pad_s(valid[sl].astype(jnp.float32))), pad_p(a_min[sl]),
+            h_table, wd_table, block_s=bs, interpret=interpret)
+        wds.append(wd_c[:sl.stop - sl.start])
+        hs.append(h_c[:sl.stop - sl.start])
+    return jnp.concatenate(wds)[:, :s], jnp.concatenate(hs)[:, :s]
+
+
 @partial(jax.jit, static_argnames=("impl", "block_s"))
 def multi_merge_scores(alpha, kappa_rows, valid, a_min, table, *,
                        impl: str = "auto", block_s: int = 128):
@@ -128,28 +172,32 @@ def multi_merge_scores(alpha, kappa_rows, valid, a_min, table, *,
 
     alpha: (s,); kappa_rows, valid: (P, s); a_min: (P,);
     table: a ``MergeLookupTable`` (both grids are interpolated in one pass).
+    Class-batched layout: ``alpha`` (C, s); ``kappa_rows``/``valid``
+    (C, P, s); ``a_min`` (C, P) -> (C, P, s) outputs.  The (C, P) pair grid
+    folds onto the kernel's row axis with each class's alpha repeated across
+    its P rows, so all classes' maintenance candidates score in the same
+    launch sequence.
     Invalid slots get WD = +inf (ref) / 3.4e38 (pallas) — argmin-safe either way.
     """
     impl = _resolve(impl)
+    if kappa_rows.ndim == 3:                    # class-batched
+        c, p, s = kappa_rows.shape
+        if impl == "ref":
+            return ref.multi_merge_scores_classes(
+                alpha, kappa_rows, valid, a_min, table.h_table, table.wd_table)
+        alpha_rows = jnp.broadcast_to(alpha[:, None, :], (c, p, s))
+        wd, h = _multi_merge_rows_pallas(
+            alpha_rows.reshape(c * p, s), kappa_rows.reshape(c * p, s),
+            valid.reshape(c * p, s), a_min.reshape(c * p),
+            table.h_table, table.wd_table, block_s=block_s,
+            interpret=(impl == "pallas_interpret"))
+        return wd.reshape(c, p, s), h.reshape(c, p, s)
     if impl == "ref":
         return ref.multi_merge_scores(alpha, kappa_rows, valid, a_min,
                                       table.h_table, table.wd_table)
     p, s = kappa_rows.shape
-    bs = min(block_s, max(128, s))
-    pad_s = lambda a: _pad_to(a, a.ndim - 1, bs)
-    pad_p = lambda a: _pad_to(a, 0, merge_multi_kernel.P_PAD)
-    alpha_p = pad_s(alpha)
-    # Tile the pair axis: the kernel keeps all its P rows resident per grid
-    # step (hat-weight matrices scale with P * block_s), so one launch per
-    # P_PAD pairs keeps VMEM bounded no matter how large merge_batch is.
-    wds, hs = [], []
-    for start in range(0, p, merge_multi_kernel.P_PAD):
-        sl = slice(start, min(start + merge_multi_kernel.P_PAD, p))
-        wd_c, h_c = merge_multi_kernel.multi_merge_scores_pallas(
-            alpha_p, pad_p(pad_s(kappa_rows[sl])),
-            pad_p(pad_s(valid[sl].astype(jnp.float32))), pad_p(a_min[sl]),
-            table.h_table, table.wd_table, block_s=bs,
-            interpret=(impl == "pallas_interpret"))
-        wds.append(wd_c[:sl.stop - sl.start])
-        hs.append(h_c[:sl.stop - sl.start])
-    return jnp.concatenate(wds)[:, :s], jnp.concatenate(hs)[:, :s]
+    alpha_rows = jnp.broadcast_to(alpha[None, :], (p, s))
+    return _multi_merge_rows_pallas(alpha_rows, kappa_rows, valid, a_min,
+                                    table.h_table, table.wd_table,
+                                    block_s=block_s,
+                                    interpret=(impl == "pallas_interpret"))

@@ -73,17 +73,41 @@ def merge_scores(alpha, kappa_row, valid, a_min, wd_table):
     return jnp.where(valid, wd, jnp.inf)
 
 
+def multi_merge_scores_rows(alpha_rows, kappa_rows, valid, a_min, h_table,
+                            wd_table):
+    """Row-wise Lookup-WD scoring: every fixed partner brings its OWN
+    candidate-alpha row.
+
+    alpha_rows, kappa_rows, valid: (P, s); a_min: (P,); tables: (G, G).
+    This is the layout the class-batched engine folds into: ``(C, P)`` pairs
+    flatten onto the row axis with each class's alpha repeated across its P
+    rows (``kernels.ops.multi_merge_scores``).  Returns ``(wd, h)`` of shape
+    (P, s) with +inf WD at invalid slots.
+    """
+    m, kap = merge_coords(a_min[:, None], alpha_rows, kappa_rows)
+    wd = (a_min[:, None] + alpha_rows) ** 2 * bilinear_lookup(wd_table, m, kap)
+    h = bilinear_lookup(h_table, m, kap)
+    return jnp.where(valid, wd, jnp.inf), h
+
+
 def multi_merge_scores(alpha, kappa_rows, valid, a_min, h_table, wd_table):
-    """Batched Lookup-WD scoring for P fixed partners at once.
+    """Batched Lookup-WD scoring for P fixed partners sharing one alpha.
 
     alpha: (s,); kappa_rows, valid: (P, s); a_min: (P,); tables: (G, G).
     Returns ``(wd, h)`` of shape (P, s): per-pair weight degradation (+inf at
     invalid slots) and the merge coefficient from the h table.
     """
-    m, kap = merge_coords(a_min[:, None], alpha[None, :], kappa_rows)
-    wd = (a_min[:, None] + alpha[None, :]) ** 2 * bilinear_lookup(wd_table, m, kap)
-    h = bilinear_lookup(h_table, m, kap)
-    return jnp.where(valid, wd, jnp.inf), h
+    alpha_rows = jnp.broadcast_to(alpha[None, :], kappa_rows.shape)
+    return multi_merge_scores_rows(alpha_rows, kappa_rows, valid, a_min,
+                                   h_table, wd_table)
+
+
+def multi_merge_scores_classes(alpha, kappa_rows, valid, a_min, h_table,
+                               wd_table):
+    """Class-batched oracle: alpha (C, s); kappa_rows, valid (C, P, s);
+    a_min (C, P) -> (wd, h) of shape (C, P, s)."""
+    return jax.vmap(multi_merge_scores, in_axes=(0, 0, 0, 0, None, None))(
+        alpha, kappa_rows, valid, a_min, h_table, wd_table)
 
 
 def gss(m, kappa, n_iters: int):

@@ -45,21 +45,25 @@ def choose_strategy(cfg, shape_name: str, strategy: str) -> str:
 def run_svm_cell(*, multi_pod: bool, method: str = "lookup-wd",
                  out_dir: str | None = None, budget: int = 16384,
                  dim: int = 1024, batch: int = 8192, verbose=True,
-                 layout: str = "replicated") -> dict:
+                 layout: str = "replicated", n_classes: int = 8) -> dict:
     """The paper-technique cell: distributed minibatch BSGD on the mesh."""
     from ..core.distributed import lower_svm_cell
 
     mesh = make_production_mesh(multi_pod=multi_pod)
     t0 = time.time()
     lowered, cfg = lower_svm_cell(mesh, budget=budget, dim=dim, batch=batch,
-                                  method=method, layout=layout)
+                                  method=method, layout=layout,
+                                  n_classes=n_classes)
     t_lower = time.time() - t0
     t0 = time.time()
     compiled = lowered.compile()
     t_compile = time.time() - t0
     mem = compiled.memory_analysis()
     # model flops: the useful work is the (batch x slots x dim) kernel matrix
+    # — times n_classes for the fused all-class contraction (layout="class")
     model_flops = 2.0 * batch * (budget + batch) * dim
+    if layout == "class":
+        model_flops *= n_classes
     rec = rl.analyze(compiled, arch=f"svm_bsgd_{method}", shape=f"b{budget}",
                      mesh=mesh, strategy=layout, model_flops_global=model_flops)
     result = rec.to_json()
@@ -146,7 +150,9 @@ def main() -> None:
     ap.add_argument("--svm-method", default="lookup-wd",
                     help="solver for the svm_bsgd cell")
     ap.add_argument("--svm-layout", default="replicated",
-                    choices=["replicated", "slots"])
+                    choices=["replicated", "slots", "class"])
+    ap.add_argument("--svm-classes", type=int, default=8,
+                    help="n_classes for --svm-layout=class")
     ap.add_argument("--seq-shard-attn", action="store_true",
                     help="context-parallel attention (hillclimb variant)")
     ap.add_argument("--keep-scan", action="store_true",
@@ -167,7 +173,8 @@ def main() -> None:
 
     if args.arch == "svm_bsgd":
         run_svm_cell(multi_pod=args.multi_pod, method=args.svm_method,
-                     out_dir=args.out, layout=args.svm_layout)
+                     out_dir=args.out, layout=args.svm_layout,
+                     n_classes=args.svm_classes)
         return
 
     failures = []

@@ -66,6 +66,30 @@ def test_save_load_roundtrip(tmp_path):
     np.testing.assert_array_equal(np.asarray(tbl.wd_table), np.asarray(tbl2.wd_table))
 
 
+def test_default_table_cache_keyed_by_build_params(tmp_path):
+    """The process cache must key on every build parameter, not just
+    grid_size — a later call with different eps/dtype used to get a stale
+    table built with someone else's settings."""
+    from repro.core.lookup import default_table
+
+    a = default_table(64)
+    assert default_table(64) is a                         # hit: same params
+    b16 = default_table(64, dtype=jnp.bfloat16)
+    assert b16 is not a
+    assert b16.h_table.dtype == jnp.bfloat16
+    assert default_table(64).h_table.dtype == jnp.float32  # fp32 not clobbered
+    loose = default_table(64, eps=1e-3)
+    assert loose is not a
+    assert default_table(64, eps=1e-3) is loose           # its own cache line
+
+    # a cached table survives a save/load round trip unchanged
+    path = os.path.join(tmp_path, "default.npz")
+    a.save(path)
+    back = MergeLookupTable.load(path)
+    np.testing.assert_array_equal(np.asarray(a.h_table), np.asarray(back.h_table))
+    np.testing.assert_array_equal(np.asarray(a.wd_table), np.asarray(back.wd_table))
+
+
 def test_table_threads_through_jit():
     tbl = MergeLookupTable.create(grid_size=64)
 

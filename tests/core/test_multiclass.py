@@ -1,0 +1,167 @@
+"""Multi-class OVR engine: vmap loop-parity, learning, fused margin path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (BSGDConfig, MulticlassSVMConfig, STRATEGIES,
+                        accuracy_multiclass, decision_function,
+                        decision_function_multiclass, fit_multiclass,
+                        fit_multiclass_loop, init_multiclass_state, init_state,
+                        ovr_targets, predict_multiclass, train_step,
+                        train_step_multiclass)
+from repro.data import make_blobs_multiclass, train_test_split
+
+
+def _stacked_binary_problems(key, c, n, dim):
+    """C independent binary problems (distinct x AND y per stack entry)."""
+    kx, ky = jax.random.split(key)
+    x = jax.random.normal(kx, (c, n, dim))
+    y = jnp.where(jax.random.bernoulli(ky, 0.5, (c, n)), 1.0, -1.0)
+    return x, y
+
+
+def _run_vmap_vs_loop(cfg, c=3, n=60, dim=5):
+    table = cfg.table()
+    x, y = _stacked_binary_problems(jax.random.PRNGKey(0), c, n, dim)
+    st_v = jax.vmap(lambda _: init_state(cfg, dim))(jnp.arange(c))
+    st_l = [jax.tree.map(lambda a: a[q], st_v) for q in range(c)]
+    step = lambda st, xb, yb: train_step(cfg, table, st, xb, yb, impl="ref")
+    vstep = jax.vmap(step)
+    bs = cfg.batch_size
+    for i in range(0, n, bs):
+        st_v = vstep(st_v, x[:, i:i + bs], y[:, i:i + bs])
+        for q in range(c):
+            st_l[q] = step(st_l[q], x[q, i:i + bs], y[q, i:i + bs])
+    return st_v, st_l
+
+
+@pytest.mark.parametrize("use_cache", [False, True])
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_vmap_train_step_matches_per_class_loop(strategy, use_cache):
+    """vmap(train_step) over stacked binary problems == looping train_step
+    per class — every strategy x both cache modes.
+
+    Uses ``unroll_maintenance=True``: XLA compiles a ``lax.while_loop`` body
+    with batch-width-dependent FMA contraction, so the while-mode vmap
+    drifts ~1 ULP per maintenance event; the statically inlined events are
+    the vmap-exact path (core.budget.run_maintenance).  Without the kernel
+    cache the match is BITWISE for every strategy.  The cache path's
+    score -> z_row chain still leaves XLA one width-dependent contraction
+    choice (measured <= 4e-7 absolute on CPU), so there the maintenance
+    *decisions* (all integer state: counts, inserts, events) must be bitwise
+    and the float state within fp32 round-off — tight enough that any real
+    divergence (a different merge partner, a dropped event) fails loudly.
+    """
+    cfg = BSGDConfig(budget=12, lambda_=1e-3, gamma=0.5, method="lookup-wd",
+                     batch_size=4, use_kernel_cache=use_cache,
+                     maintenance=strategy, unroll_maintenance=True)
+    st_v, st_l = _run_vmap_vs_loop(cfg)
+    assert int(jnp.sum(st_v.n_merges)) > 0      # the budget actually bit
+    for q, st_q in enumerate(st_l):
+        for name, a, b in zip(st_v._fields, st_v, st_q):
+            if a is None:
+                continue
+            a, b = np.asarray(a[q]), np.asarray(b)
+            if not use_cache or not np.issubdtype(a.dtype, np.floating):
+                np.testing.assert_array_equal(
+                    a, b, err_msg=f"{name} differs for stacked problem {q}")
+            else:
+                np.testing.assert_allclose(
+                    a, b, rtol=1e-5, atol=2e-6,
+                    err_msg=f"{name} drifts beyond fp32 round-off for "
+                            f"stacked problem {q}")
+
+
+@pytest.mark.parametrize("use_cache", [False, True])
+def test_vmap_while_loop_mode_matches_to_fp_noise(use_cache):
+    """The default while_loop maintenance under vmap makes identical merge
+    DECISIONS (counts/merge totals bitwise) and drifts only by XLA's
+    while-body FMA-contraction noise in the float state."""
+    cfg = BSGDConfig(budget=12, lambda_=1e-3, gamma=0.5, method="lookup-wd",
+                     batch_size=4, use_kernel_cache=use_cache)
+    st_v, st_l = _run_vmap_vs_loop(cfg)
+    for q, st_q in enumerate(st_l):
+        for name in ("count", "step", "n_inserts", "n_merges"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(st_v, name)[q]),
+                np.asarray(getattr(st_q, name)), err_msg=name)
+        np.testing.assert_allclose(np.asarray(st_v.alpha[q]),
+                                   np.asarray(st_q.alpha), atol=1e-6)
+        np.testing.assert_allclose(np.asarray(st_v.sv_x[q]),
+                                   np.asarray(st_q.sv_x), atol=1e-5)
+
+
+def test_ovr_targets():
+    y = jnp.asarray([0, 2, 1, 2])
+    t = ovr_targets(y, 3)
+    want = np.asarray([[1, -1, -1, -1], [-1, -1, 1, -1], [-1, 1, -1, 1]],
+                      np.float32)
+    np.testing.assert_array_equal(np.asarray(t), want)
+    assert t.dtype == jnp.float32
+
+
+def test_fit_multiclass_matches_loop_baseline_bitwise():
+    """The lockstep engine trains the SAME model as C sequential binary fits
+    (same seed => same permutations; unrolled maintenance => bitwise)."""
+    x, y = make_blobs_multiclass(jax.random.PRNGKey(3), 400, 6, 4, sep=1.2)
+    cfg = MulticlassSVMConfig.create(4, budget=20, lambda_=1e-3, gamma=0.2,
+                                     method="lookup-wd", batch_size=4,
+                                     unroll_maintenance=True)
+    st_b = fit_multiclass(cfg, x, y, epochs=1, seed=0)
+    st_l = fit_multiclass_loop(cfg, x, y, epochs=1, seed=0)
+    assert int(jnp.sum(st_b.n_merges)) > 0
+    for name, a, b in zip(st_b._fields, st_b, st_l):
+        if a is None:
+            continue
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=name)
+
+
+def test_multiclass_learns_blobs_one_pass():
+    """>= 4 classes to >= 90% test accuracy in ONE pass with the budget
+    biting (the examples/svm_multiclass.py acceptance, in miniature)."""
+    x, y = make_blobs_multiclass(jax.random.PRNGKey(0), 2500, 12, 5, sep=1.2)
+    (xtr, ytr), (xte, yte) = train_test_split(x, y)
+    cfg = MulticlassSVMConfig.create(5, budget=24, lambda_=1e-4, gamma=0.05,
+                                     method="lookup-wd", batch_size=4)
+    st = fit_multiclass(cfg, xtr, ytr, epochs=1, seed=0)
+    acc = float(accuracy_multiclass(st, xte, yte, cfg.binary.gamma))
+    assert acc >= 0.9, acc
+    assert np.all(np.asarray(st.count) <= cfg.binary.budget)
+    assert int(jnp.sum(st.n_merges)) > 0
+    pred = predict_multiclass(st, xte, cfg.binary.gamma)
+    assert pred.dtype == jnp.int32
+    assert set(np.unique(np.asarray(pred))) <= set(range(5))
+
+
+def test_fused_decision_function_matches_per_class():
+    """decision_function_multiclass (one fused rbf call) == C separate
+    binary decision_function calls on the per-class slices."""
+    x, y = make_blobs_multiclass(jax.random.PRNGKey(1), 600, 8, 4, sep=1.5)
+    cfg = MulticlassSVMConfig.create(4, budget=24, lambda_=1e-4, gamma=0.1,
+                                     method="lookup-wd", batch_size=4)
+    st = fit_multiclass(cfg, x, y, epochs=1, seed=0)
+    scores = decision_function_multiclass(st, x[:50], cfg.binary.gamma)
+    for c in range(4):
+        st_c = jax.tree.map(lambda a: a[c], st)
+        f_c = decision_function(st_c, x[:50], cfg.binary.gamma)
+        np.testing.assert_allclose(np.asarray(scores[c]), np.asarray(f_c),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_multiclass_config_validation():
+    with pytest.raises(ValueError):
+        MulticlassSVMConfig.create(1, budget=10)
+
+
+def test_multiclass_state_shapes():
+    cfg = MulticlassSVMConfig.create(6, budget=10, batch_size=3)
+    st = init_multiclass_state(cfg, 7)
+    assert st.sv_x.shape == (6, 13, 7)
+    assert st.alpha.shape == (6, 13)
+    assert st.count.shape == (6,)
+    out = train_step_multiclass(cfg, cfg.table(), st,
+                                jnp.ones((3, 7)), jnp.asarray([0, 5, 2]))
+    assert out.sv_x.shape == st.sv_x.shape
+    assert int(jnp.sum(out.n_inserts)) > 0

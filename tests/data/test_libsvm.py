@@ -1,0 +1,45 @@
+"""LIBSVM parser: binary sign-mapping vs raw multi-class labels, round trips."""
+import os
+
+import numpy as np
+
+from repro.data import dump_libsvm, parse_libsvm
+
+
+def test_parse_binary_maps_to_signs():
+    lines = ["+1 1:0.5 3:2.0", "-1 2:1.5", "0 1:1.0"]
+    x, y = parse_libsvm(lines)
+    assert x.shape == (3, 3)
+    np.testing.assert_array_equal(y, [1.0, -1.0, -1.0])   # 0 is "not positive"
+    assert x[0, 0] == 0.5 and x[0, 2] == 2.0 and x[1, 1] == 1.5
+
+
+def test_parse_raw_labels_survive():
+    """binary=False keeps multi-class labels untouched (satellite fix: the
+    old parser silently collapsed every label to +-1)."""
+    lines = ["3 1:1.0", "0 2:1.0", "7 1:0.5 2:0.5", "1 1:2.0"]
+    _, y = parse_libsvm(lines, binary=False)
+    np.testing.assert_array_equal(y, [3.0, 0.0, 7.0, 1.0])
+
+
+def test_multiclass_roundtrip_with_dump(tmp_path):
+    rng = np.random.default_rng(0)
+    x = np.round(rng.normal(size=(20, 6)).astype(np.float32), 3)
+    x[rng.random(x.shape) < 0.3] = 0.0          # exercise sparse encoding
+    y = rng.integers(0, 5, 20).astype(np.float32)
+    path = os.path.join(tmp_path, "mc.libsvm")
+    dump_libsvm(path, x, y)
+    x2, y2 = parse_libsvm(path, n_features=6, binary=False)
+    np.testing.assert_array_equal(y2, y)
+    np.testing.assert_allclose(x2, x, rtol=1e-5, atol=1e-6)
+
+
+def test_binary_roundtrip_unchanged(tmp_path):
+    rng = np.random.default_rng(1)
+    x = np.round(rng.normal(size=(10, 4)).astype(np.float32), 3)
+    y = np.where(rng.random(10) < 0.5, 1.0, -1.0).astype(np.float32)
+    path = os.path.join(tmp_path, "bin.libsvm")
+    dump_libsvm(path, x, y)
+    x2, y2 = parse_libsvm(path, n_features=4)
+    np.testing.assert_array_equal(y2, y)
+    np.testing.assert_allclose(x2, x, rtol=1e-5, atol=1e-6)

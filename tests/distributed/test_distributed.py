@@ -14,7 +14,11 @@ def run_py(code: str, n_devices: int = 8, timeout: int = 600, env_extra=None):
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
     env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
-    env.pop("JAX_PLATFORMS", None)
+    # force the CPU platform: with JAX_PLATFORMS unset, a jax[tpu] install
+    # probes the cloud TPU metadata service and stalls for minutes on
+    # machines without one; the forced host-device count is a CPU-platform
+    # feature anyway
+    env["JAX_PLATFORMS"] = "cpu"
     if env_extra:
         env.update(env_extra)
     proc = subprocess.run([sys.executable, "-c", code], capture_output=True,

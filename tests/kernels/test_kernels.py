@@ -122,6 +122,57 @@ def test_multi_merge_scores_matches_ref(p, s):
                 np.asarray(wd_p)[q][mask[q]].max()
 
 
+@pytest.mark.parametrize("c,p,s", [(2, 1, 16), (3, 4, 100), (5, 8, 256)])
+def test_multi_merge_scores_class_batched(c, p, s):
+    """(C, P, s) layout == per-class (P, s) calls, pallas vs ref."""
+    tbl = default_table()
+    key = jax.random.PRNGKey(c * 7 + s)
+    alpha = jnp.abs(jax.random.normal(key, (c, s))) * 0.2 + 0.01
+    kappa = jax.random.uniform(jax.random.PRNGKey(s + 1), (c, p, s))
+    valid = jax.random.bernoulli(jax.random.PRNGKey(s + 2), 0.8, (c, p, s))
+    a_min = jnp.abs(jax.random.normal(jax.random.PRNGKey(s + 3), (c, p))) * 0.05
+    wd_p, h_p = ops.multi_merge_scores(alpha, kappa, valid, a_min, tbl,
+                                       impl="pallas_interpret")
+    wd_r, h_r = ops.multi_merge_scores(alpha, kappa, valid, a_min, tbl,
+                                       impl="ref")
+    assert wd_p.shape == (c, p, s)
+    mask = np.asarray(valid)
+    np.testing.assert_allclose(np.asarray(wd_p)[mask], np.asarray(wd_r)[mask],
+                               rtol=1e-4, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(h_p), np.asarray(h_r),
+                               rtol=1e-4, atol=1e-5)
+    for q in range(c):   # each class row == the unbatched call on its slice
+        wd_q, h_q = ops.multi_merge_scores(alpha[q], kappa[q], valid[q],
+                                           a_min[q], tbl, impl="ref")
+        np.testing.assert_allclose(np.asarray(wd_r[q]), np.asarray(wd_q),
+                                   rtol=1e-6, atol=0)
+        np.testing.assert_allclose(np.asarray(h_r[q]), np.asarray(h_q),
+                                   rtol=1e-6, atol=0)
+
+
+def test_merge_scores_class_batched_matches_per_class():
+    """(C, s) merge_scores == C single calls (one fixed partner per class)."""
+    tbl = default_table()
+    c, s = 4, 100
+    alpha = jnp.abs(jax.random.normal(jax.random.PRNGKey(0), (c, s))) * 0.3 + 0.02
+    kappa = jax.random.uniform(jax.random.PRNGKey(1), (c, s))
+    valid = jax.random.bernoulli(jax.random.PRNGKey(2), 0.9, (c, s))
+    a_min = jnp.abs(jax.random.normal(jax.random.PRNGKey(3), (c,))) * 0.05
+    for impl in ("ref", "pallas_interpret"):
+        wd_b, int_b = ops.merge_scores(alpha, kappa, valid, a_min,
+                                       tbl.wd_table, impl=impl)
+        assert wd_b.shape == (c, s)
+        for q in range(c):
+            wd_q, int_q = ops.merge_scores(alpha[q], kappa[q], valid[q],
+                                           a_min[q], tbl.wd_table, impl=impl)
+            mask = np.asarray(valid[q])
+            np.testing.assert_allclose(np.asarray(wd_b[q])[mask],
+                                       np.asarray(wd_q)[mask],
+                                       rtol=1e-5, atol=1e-7)
+            np.testing.assert_allclose(np.asarray(int_b[q]), np.asarray(int_q),
+                                       rtol=1e-4, atol=1e-5)
+
+
 def test_multi_merge_scores_rows_match_single_kernel():
     """Each row of the multi kernel == the single-partner kernel's output."""
     tbl = default_table()

@@ -14,7 +14,11 @@ def run_py(code: str, n_devices: int = 8, timeout: int = 900):
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
     env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
-    env.pop("JAX_PLATFORMS", None)
+    # force the CPU platform: with JAX_PLATFORMS unset, a jax[tpu] install
+    # probes the cloud TPU metadata service and stalls for minutes on
+    # machines without one; the forced host-device count is a CPU-platform
+    # feature anyway
+    env["JAX_PLATFORMS"] = "cpu"
     proc = subprocess.run([sys.executable, "-c", code], capture_output=True,
                           text=True, timeout=timeout, env=env)
     assert proc.returncode == 0, f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
@@ -54,6 +58,8 @@ for arch in ARCHS:
         lowered, plan = lower_cell(cfg, shape, mesh, strategy="tp")
         compiled = lowered.compile()
         cost = compiled.cost_analysis()
+        if isinstance(cost, list):   # jax < 0.5 wrapped the dict in a list
+            cost = cost[0]
         assert cost.get("flops", 0) > 0 or shape == "decode_32k"
         print("OK", arch, shape, int(cost.get("flops", 0)))
 print("ALL OK")
