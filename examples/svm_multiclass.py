@@ -11,8 +11,9 @@ import jax
 import numpy as np
 
 from repro.core import (MulticlassSVMConfig, accuracy_multiclass,
-                        fit_multiclass, fit_multiclass_loop)
-from repro.data import make_blobs_multiclass, train_test_split
+                        fit_multiclass, fit_multiclass_loop,
+                        fit_multiclass_stream)
+from repro.data import ArrayChunks, make_blobs_multiclass, train_test_split
 
 
 def main():
@@ -23,6 +24,10 @@ def main():
     ap.add_argument("--budget", type=int, default=50)
     ap.add_argument("--batch-size", type=int, default=1)
     ap.add_argument("--skip-loop-baseline", action="store_true")
+    ap.add_argument("--stream", action="store_true",
+                    help="train through the chunked streaming engine "
+                         "(out-of-core path) instead of the resident arrays")
+    ap.add_argument("--chunk-rows", type=int, default=1024)
     args = ap.parse_args()
 
     key = jax.random.PRNGKey(0)
@@ -32,7 +37,11 @@ def main():
         args.classes, budget=args.budget, lambda_=1e-4, gamma=0.1,
         method="lookup-wd", batch_size=args.batch_size)
     print(f"blobs: n={xtr.shape[0]} d={args.dim} classes={args.classes} "
-          f"budget={args.budget}/class (single pass, one-vs-rest)")
+          f"budget={args.budget}/class (single pass, one-vs-rest"
+          f"{', streamed' if args.stream else ''})")
+    if args.stream:
+        source = ArrayChunks(np.asarray(xtr), np.asarray(ytr),
+                             args.chunk_rows)
 
     def timed(fit_fn):
         """Best-of-3 after a compile warmup (single-shot wall-clock on a
@@ -46,7 +55,10 @@ def main():
             times.append(time.perf_counter() - t0)
         return min(times), st
 
-    t_batched, st = timed(fit_multiclass)
+    def fit_streamed(cfg, xtr, ytr, *, epochs, seed):
+        return fit_multiclass_stream(cfg, source, epochs=epochs, seed=seed)
+
+    t_batched, st = timed(fit_streamed if args.stream else fit_multiclass)
 
     acc = float(accuracy_multiclass(st, xte, yte, cfg.binary.gamma))
     merges = np.asarray(st.n_merges)

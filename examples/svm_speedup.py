@@ -8,9 +8,10 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core import BSGDConfig, accuracy, fit, run_maintenance
-from repro.data import make_susy_like, train_test_split
+from repro.core import BSGDConfig, accuracy, fit, fit_stream, run_maintenance
+from repro.data import ArrayChunks, make_susy_like, train_test_split
 
 
 def merge_seconds_per_event(cfg, table, st, events: int = 64):
@@ -48,13 +49,20 @@ def main():
     ap.add_argument("--n", type=int, default=40_000)
     ap.add_argument("--budget", type=int, default=100)
     ap.add_argument("--batch-size", type=int, default=1)
+    ap.add_argument("--stream", action="store_true",
+                    help="train through the chunked streaming engine "
+                         "(out-of-core path) instead of the resident arrays")
+    ap.add_argument("--chunk-rows", type=int, default=8192)
     args = ap.parse_args()
 
     key = jax.random.PRNGKey(1)
     x, y = make_susy_like(key, args.n)
     (xtr, ytr), (xte, yte) = train_test_split(x, y)
     print(f"SUSY-like stream: n={xtr.shape[0]} d={x.shape[1]} "
-          f"budget={args.budget} (single pass)")
+          f"budget={args.budget} (single pass"
+          f"{f', streamed in {args.chunk_rows}-row chunks' if args.stream else ''})")
+    source = (ArrayChunks(np.asarray(xtr), np.asarray(ytr), args.chunk_rows)
+              if args.stream else None)
 
     results = {}
     for method in ("gss", "lookup-wd"):
@@ -62,7 +70,10 @@ def main():
                          method=method, batch_size=args.batch_size)
         table = cfg.table()
         t0 = time.time()
-        st = fit(cfg, xtr, ytr, epochs=1, seed=0)
+        if args.stream:
+            st = fit_stream(cfg, source, epochs=1, seed=0)
+        else:
+            st = fit(cfg, xtr, ytr, epochs=1, seed=0)
         dt = time.time() - t0
         acc = float(accuracy(st, xte, yte, cfg.gamma))
         freq = int(st.n_merges) / max(int(st.step) - 1, 1)

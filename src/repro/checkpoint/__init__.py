@@ -1,1 +1,3 @@
-from .checkpointer import all_steps, latest_step, load, restore_latest, save, save_async
+"""Atomic keep-last-k checkpointing (see ``checkpointer`` for the layout)."""
+from .checkpointer import (all_steps, latest_step, load, load_metadata,
+                           restore_latest, save, save_async)

@@ -95,6 +95,18 @@ def latest_step(ckpt_dir: str) -> int | None:
     return steps[-1] if steps else None
 
 
+def load_metadata(ckpt_dir: str, step: int) -> dict:
+    """The ``metadata`` dict passed to ``save`` for this step.
+
+    Consumers that resume from *inside* a logical unit of work store their
+    cursor here — e.g. the streaming trainers save ``{"epoch", "next_chunk"}``
+    so a mid-epoch restart replays the exact remaining chunk sequence.
+    """
+    path = os.path.join(ckpt_dir, f"step_{step:08d}", "manifest.json")
+    with open(path) as f:
+        return json.load(f).get("metadata", {})
+
+
 def load(ckpt_dir: str, step: int, target_tree, *, shardings=None):
     """Restore into the structure of ``target_tree``.
 

@@ -1,12 +1,13 @@
 """Core paper contribution: budgeted SGD SVM with precomputed merge lookup."""
 from . import budget, kernel_cache, merge_math
-from .bsgd import (BSGDConfig, SVMState, accuracy, decision_function, fit, init_state, predict, train_epoch,
-                   train_step, train_step_from_rows)
+from .bsgd import (BSGDConfig, SVMState, accuracy, decision_function, fit, fit_stream, init_state, predict,
+                   train_chunk, train_epoch, train_epoch_stream, train_step, train_step_from_rows)
 from .budget import METHODS, STRATEGIES, MaintenanceInfo, maintenance_step, run_maintenance
 from .lookup import MergeLookupTable, bilinear_lookup, build_lookup_table, build_merge_tables, default_table
 from .multiclass import (MulticlassSVMConfig, accuracy_multiclass, check_labels, class_kernel_rows,
-                         decision_function_multiclass, fit_multiclass, fit_multiclass_loop, init_multiclass_state,
-                         ovr_targets, predict_multiclass, train_epoch_multiclass, train_step_multiclass)
+                         decision_function_multiclass, fit_multiclass, fit_multiclass_loop, fit_multiclass_stream,
+                         init_multiclass_state, ovr_targets, predict_multiclass, train_chunk_multiclass,
+                         train_epoch_multiclass, train_epoch_multiclass_stream, train_step_multiclass)
 from .merge_math import (EPS_PRECISE, EPS_STANDARD, KAPPA_UNIMODAL, golden_section_search, gss_num_iters,
                          merge_alpha_z, merge_point, s_objective, solve_merge, wd_norm_at, weight_degradation)
 
@@ -16,12 +17,15 @@ __all__ = [
     "bilinear_lookup", "budget", "build_lookup_table",
     "build_merge_tables", "check_labels", "class_kernel_rows", "decision_function",
     "decision_function_multiclass", "default_table", "fit", "fit_multiclass",
-    "fit_multiclass_loop", "golden_section_search", "gss_num_iters",
+    "fit_multiclass_loop", "fit_multiclass_stream", "fit_stream",
+    "golden_section_search", "gss_num_iters",
     "init_multiclass_state", "init_state", "kernel_cache",
     "maintenance_step", "merge_alpha_z", "merge_math", "merge_point",
     "ovr_targets", "predict", "predict_multiclass",
-    "run_maintenance", "s_objective", "solve_merge", "train_epoch",
-    "train_epoch_multiclass", "train_step", "train_step_from_rows",
+    "run_maintenance", "s_objective", "solve_merge", "train_chunk",
+    "train_chunk_multiclass", "train_epoch",
+    "train_epoch_multiclass", "train_epoch_multiclass_stream",
+    "train_epoch_stream", "train_step", "train_step_from_rows",
     "train_step_multiclass", "wd_norm_at", "weight_degradation",
     "EPS_PRECISE", "EPS_STANDARD", "KAPPA_UNIMODAL",
 ]

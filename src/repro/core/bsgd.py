@@ -26,6 +26,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import budget as budget_mod
 from . import kernel_cache
@@ -47,7 +48,36 @@ class SVMState(NamedTuple):
 
 @dataclasses.dataclass(frozen=True)
 class BSGDConfig:
-    """Hyperparameters. C-parameterization: lambda = 1 / (n * C) (paper §4)."""
+    """Budgeted-SGD hyperparameters (one binary problem).
+
+    Attributes:
+      budget: maximum active support vectors; maintenance runs whenever the
+        post-insert count exceeds it (storage is ``slots = budget +
+        batch_size`` rows, DESIGN.md §2).
+      lambda_: Pegasos regularization; the paper's C-parameterization is
+        ``lambda = 1 / (n * C)`` (``BSGDConfig.from_C``).
+      gamma: RBF kernel width, k(a, b) = exp(-gamma ||a - b||^2).
+      method: how merge candidates are scored — ``gss`` (runtime golden
+        section search, eps 0.01), ``gss-precise`` (eps 1e-10, reference),
+        ``lookup-h`` / ``lookup-wd`` (the paper's precomputed bilinear
+        tables; ``lookup-wd`` needs the fewest flops).
+      batch_size: minibatch rows per Pegasos step; 1 reproduces the paper,
+        larger is the TPU-friendly configuration.
+      grid_size: resolution of the precomputed lookup tables.
+      dtype: alpha / margin arithmetic dtype.
+      sv_dtype: SV row storage dtype (``"bfloat16"`` halves HBM + gather
+        traffic at scale; kappa error ~1e-3); None = ``dtype``.
+      use_kernel_cache: maintain the persistent (slots, slots) SV-SV kernel
+        matrix so maintenance reads kappa rows instead of recomputing them
+        (DESIGN.md §4).
+      maintenance: what one maintenance event does — ``merge`` (paper
+        Alg. 1), ``multi-merge`` (P fused pairs/event), ``removal``
+        (drop smallest-|alpha|; no kernel evals).
+      merge_batch: P, pairs per fused multi-merge event.
+      unroll_maintenance: inline ``batch_size`` masked events instead of the
+        while_loop — bitwise loop-parity under vmap (DESIGN.md §5);
+        compile size grows with ``batch_size``.
+    """
 
     budget: int = 100
     lambda_: float = 1e-4
@@ -91,11 +121,13 @@ class BSGDConfig:
 
 def init_state(cfg: BSGDConfig, dim: int) -> SVMState:
     dt = jnp.dtype(cfg.dtype)
-    z = jnp.zeros((), jnp.int32)
+    # distinct zero buffers per counter: the streaming path donates the whole
+    # state, and XLA rejects the same buffer donated twice
+    z = lambda: jnp.zeros((), jnp.int32)
     return SVMState(
         sv_x=jnp.zeros((cfg.slots, dim), jnp.dtype(cfg.sv_dtype or cfg.dtype)),
         alpha=jnp.zeros((cfg.slots,), dt),
-        count=z, step=jnp.ones((), jnp.int32), n_inserts=z, n_merges=z,
+        count=z(), step=jnp.ones((), jnp.int32), n_inserts=z(), n_merges=z(),
         kmat=kernel_cache.init_cache(cfg.slots) if cfg.use_kernel_cache
         else None)
 
@@ -182,10 +214,16 @@ def train_step(cfg: BSGDConfig, table, state: SVMState, xb, yb, *,
 @partial(jax.jit, static_argnames=("cfg", "impl"))
 def train_epoch(cfg: BSGDConfig, table, state: SVMState, x, y, perm, *,
                 impl: str = "auto") -> SVMState:
-    """One pass over the data as a single lax.scan.
+    """One pass over resident data as a single jitted ``lax.scan``.
 
-    x: (n, d), y: (n,), perm: (n,) shuffled indices; n must be a multiple of
-    cfg.batch_size (callers truncate).
+    Args:
+      table: the precomputed ``MergeLookupTable`` (``cfg.table()``), or None
+        for the gss methods.
+      x: (n, d) rows; y: (n,) labels in {-1, +1}; perm: (n,) row order for
+        this epoch (rows past the last full ``batch_size`` multiple are
+        dropped).
+    Returns the updated ``SVMState``.  The streamed counterpart over a chunk
+    source is ``train_epoch_stream``.
     """
     n = perm.shape[0]
     steps = n // cfg.batch_size
@@ -202,7 +240,22 @@ def train_epoch(cfg: BSGDConfig, table, state: SVMState, x, y, perm, *,
 
 def fit(cfg: BSGDConfig, x, y, *, epochs: int = 1, seed: int = 0,
         impl: str = "auto", state: SVMState | None = None) -> SVMState:
-    """Convenience driver: shuffled epochs over (x, y)."""
+    """Train a budgeted SVM on in-memory data: shuffled epochs over (x, y).
+
+    Args:
+      cfg: hyperparameters (``BSGDConfig``); ``cfg.table()`` supplies the
+        precomputed merge lookup when the method needs one.
+      x: (n, dim) training rows; y: (n,) labels in {-1, +1}.
+      epochs: passes over the data; each uses a fresh permutation derived
+        from ``seed``.
+      impl: kernel implementation dispatch (``auto | pallas |
+        pallas_interpret | ref`` — see ``kernels.ops``).
+      state: resume from an existing ``SVMState`` instead of a fresh model
+        (its ``slots``/dtypes must match ``cfg``).
+
+    Returns the final ``SVMState``.  For data larger than device memory use
+    ``fit_stream`` (same model, chunked host pipeline).
+    """
     table = cfg.table()
     if state is None:
         state = init_state(cfg, x.shape[1])
@@ -212,6 +265,255 @@ def fit(cfg: BSGDConfig, x, y, *, epochs: int = 1, seed: int = 0,
         perm = jax.random.permutation(sub, x.shape[0])
         state = train_epoch(cfg, table, state, x, y, perm, impl=impl)
     return state
+
+
+# ---------------------------------------------------------------------------
+# Streaming epochs: chunked host pipeline -> one donated-state program/chunk
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("cfg", "impl"), donate_argnums=(2,))
+def train_chunk(cfg: BSGDConfig, table, state: SVMState, xc, yc, *,
+                impl: str = "auto") -> SVMState:
+    """One resident chunk as a single donated-state XLA program.
+
+    ``xc: (steps, batch, dim)``, ``yc: (steps, batch)`` — the chunk already
+    shuffled and reshaped into minibatches on the host.  The scan body is the
+    same traced ``train_step`` as the in-memory ``train_epoch``, so the hot
+    path is identical; donating ``state`` lets XLA update the budgeted model
+    in place while chunks stream through.
+    """
+    def body(st, xy):
+        xb, yb = xy
+        return train_step(cfg, table, st, xb, yb, impl=impl), ()
+
+    state, _ = jax.lax.scan(body, state, (xc, yc))
+    return state
+
+
+def _stream_epoch(chunk_fn, state, source, *, batch_size: int, key,
+                  start_chunk: int = 0, carry=None, on_chunk=None,
+                  max_chunks: int | None = None):
+    """Generic one-epoch streaming driver shared by binary and multi-class.
+
+    ``chunk_fn(state, xc, yc) -> state`` runs one jitted chunk program.
+    Rows left over when a chunk is not a multiple of ``batch_size`` *carry*
+    into the next chunk (so the realized batch sequence equals the in-memory
+    one on the concatenated order); the final sub-batch rows of the epoch are
+    dropped, matching ``train_epoch``'s truncation.  Chunks are staged in the
+    source's own dtypes (no forced cast — streamed and in-memory training see
+    the same arrays); checkpointed carry rows are stored as float32 and cast
+    back on resume.  ``on_chunk(state, pos, carry)`` fires after each chunk
+    program — the checkpoint hook.  Returns ``(state, next_chunk, carry,
+    chunks_run)``; ``next_chunk < source.n_chunks`` means the epoch was cut
+    short by ``max_chunks``.
+    """
+    from ..data import stream as stream_mod
+
+    cx, cy = carry if carry is not None else (None, None)
+    # resolve the budget to an exclusive end position up front so chunks past
+    # it are never read from the source
+    end = (source.n_chunks if max_chunks is None
+           else min(source.n_chunks, start_chunk + max_chunks))
+    for pos, x, y in stream_mod.iter_epoch(source, key,
+                                           start_chunk=start_chunk,
+                                           end_chunk=end):
+        x, y = np.asarray(x), np.asarray(y)
+        if cx is not None and cx.size:
+            x = np.concatenate([cx.astype(x.dtype, copy=False), x])
+            y = np.concatenate([cy.astype(y.dtype, copy=False), y])
+        steps = x.shape[0] // batch_size
+        used = steps * batch_size
+        # copy the (< batch_size rows) remainder: a view would keep the whole
+        # chunk buffer alive through the next chunk's load (O(chunk) promise)
+        cx, cy = x[used:].copy(), y[used:].copy()
+        if steps:
+            state = chunk_fn(state,
+                             x[:used].reshape(steps, batch_size, x.shape[1]),
+                             y[:used].reshape(steps, batch_size))
+        if on_chunk is not None:
+            on_chunk(state, pos, (cx, cy))
+    if cx is None:
+        cx = np.zeros((0, source.dim), np.float32)
+        cy = np.zeros((0,), np.float32)
+    return state, end, (cx, cy), end - start_chunk
+
+
+def _ckpt_template(state: SVMState, batch_size: int, dim: int):
+    """Target tree for the streaming checkpoint: model state + epoch RNG key
+    + the (padded, fixed-shape) inter-chunk carry rows."""
+    return {
+        "state": state,
+        "epoch_key": jax.random.PRNGKey(0),
+        "carry_x": jnp.zeros((batch_size - 1, dim), jnp.float32),
+        "carry_y": jnp.zeros((batch_size - 1,), jnp.float32),
+        "carry_n": jnp.zeros((), jnp.int32),
+    }
+
+
+def _pad_carry(carry, batch_size: int, dim: int):
+    cx, cy = carry
+    n = cx.shape[0]
+    px = np.zeros((batch_size - 1, dim), np.float32)
+    py = np.zeros((batch_size - 1,), np.float32)
+    px[:n], py[:n] = cx, cy
+    return px, py, np.int32(n)
+
+
+def _fit_stream(batch_size: int, source, chunk_fn, state, *,
+                epochs: int, seed: int, ckpt_dir, ckpt_every: int,
+                max_chunks, keep_last: int):
+    """Shared multi-epoch streaming driver (see ``fit_stream`` for the
+    contract)."""
+    from .. import checkpoint as ckpt
+
+    dim = source.dim
+    n_chunks = source.n_chunks
+    start_epoch, start_chunk = 0, 0
+    carry, resume_key = None, None
+    if ckpt_dir:
+        latest = ckpt.latest_step(ckpt_dir)
+        if latest is not None:
+            meta = ckpt.load_metadata(ckpt_dir, latest)
+            if meta.get("kind") != "stream-epoch":
+                raise ValueError(f"{ckpt_dir}: step {latest} is not a "
+                                 "streaming checkpoint")
+            # the cursor is only meaningful against the same shuffle and the
+            # same chunking — a silent mismatch would train some rows twice
+            # and others never, so refuse instead
+            if meta["seed"] != seed:
+                raise ValueError(
+                    f"{ckpt_dir}: checkpoint was written with seed="
+                    f"{meta['seed']}, resume called with seed={seed}")
+            if meta["n_chunks"] != n_chunks:
+                raise ValueError(
+                    f"{ckpt_dir}: checkpoint cursor is against "
+                    f"{meta['n_chunks']} chunks, source now has {n_chunks} — "
+                    "re-chunked data cannot resume mid-epoch")
+            tree = ckpt.load(ckpt_dir, latest,
+                             _ckpt_template(state, batch_size, dim))
+            state = tree["state"]
+            start_epoch, start_chunk = meta["epoch"], meta["next_chunk"]
+            resume_key = tree["epoch_key"]    # the interrupted epoch's key
+            cn = int(tree["carry_n"])
+            carry = (np.asarray(tree["carry_x"])[:cn],
+                     np.asarray(tree["carry_y"])[:cn])
+            if start_chunk >= n_chunks:       # checkpoint at an epoch boundary
+                start_epoch, start_chunk, carry = start_epoch + 1, 0, None
+                resume_key = None
+
+    budget_left = max_chunks
+    base_key = jax.random.PRNGKey(seed)
+    for epoch in range(start_epoch, epochs):
+        # the resumed epoch continues under its checkpointed RNG key (equal,
+        # by the seed guard above, to the rederived one); later epochs fold
+        epoch_key = (resume_key if epoch == start_epoch and
+                     resume_key is not None
+                     else jax.random.fold_in(base_key, epoch))
+
+        def save(st, pos, cr, *, _epoch=epoch, _key=epoch_key):
+            done = pos + 1
+            if not (ckpt_dir and ckpt_every and done % ckpt_every == 0):
+                return
+            px, py, cn = _pad_carry(cr, batch_size, dim)
+            ckpt.save(ckpt_dir, _epoch * n_chunks + done,
+                      {"state": st, "epoch_key": _key, "carry_x": px,
+                       "carry_y": py, "carry_n": cn},
+                      keep_last=keep_last,
+                      metadata={"kind": "stream-epoch", "epoch": _epoch,
+                                "next_chunk": done, "n_chunks": n_chunks,
+                                "seed": seed})
+
+        state, next_chunk, carry, ran = _stream_epoch(
+            chunk_fn, state, source, batch_size=batch_size, key=epoch_key,
+            start_chunk=start_chunk, carry=carry, on_chunk=save,
+            max_chunks=budget_left)
+        if budget_left is not None:
+            budget_left -= ran
+        if next_chunk < n_chunks:             # cut short by max_chunks
+            return state
+        jax.block_until_ready(state.alpha)    # sync only at epoch end
+        start_chunk, carry = 0, None          # sub-batch remainder dropped
+    return state
+
+
+def train_epoch_stream(cfg: BSGDConfig, table, state: SVMState, source, *,
+                       key=None, impl: str = "auto", start_chunk: int = 0,
+                       carry=None, on_chunk=None, max_chunks: int | None = None,
+                       chunk_fn=None):
+    """One streamed pass over a ``repro.data.stream`` chunk source.
+
+    The chunked counterpart of ``train_epoch``: chunks are loaded on the
+    host in the deterministic shuffled order derived from ``key`` (chunk
+    order permuted, then rows within each chunk — ``None`` streams in natural
+    order), and each becomes ONE donated-state jitted program
+    (``train_chunk``); only the budgeted ``SVMState`` stays on device between
+    chunks.  Remainder rows of a ragged chunk carry into the next chunk, so
+    the realized minibatch sequence equals ``train_epoch`` on
+    ``epoch_permutation(source, key)`` — the equivalence the stream tests pin.
+
+    ``start_chunk``/``carry`` resume mid-epoch (see ``fit_stream`` for the
+    checkpointed version); ``on_chunk(state, pos, carry)`` fires after each
+    chunk; ``max_chunks`` bounds how many chunk programs run (fault drills).
+    ``chunk_fn(state, xc, yc)`` overrides the jitted per-chunk program — the
+    distributed path passes a pjit'd one (``launch.train.svm_stream_loop``).
+
+    Returns ``(state, next_chunk, carry)``; ``next_chunk == source.n_chunks``
+    means the epoch completed.  The chunk programs DONATE ``state``: the
+    caller's input buffers are consumed — keep using the returned state (or
+    use ``fit_stream``, which copies a provided state up front).
+    """
+    if chunk_fn is None:
+        def chunk_fn(st, xc, yc):
+            return train_chunk(cfg, table, st, xc, yc, impl=impl)
+    state, next_chunk, carry, _ = _stream_epoch(
+        chunk_fn, state, source, batch_size=cfg.batch_size, key=key,
+        start_chunk=start_chunk, carry=carry, on_chunk=on_chunk,
+        max_chunks=max_chunks)
+    if next_chunk == source.n_chunks:
+        jax.block_until_ready(state.alpha)
+    return state, next_chunk, carry
+
+
+def fit_stream(cfg: BSGDConfig, source, *, epochs: int = 1, seed: int = 0,
+               impl: str = "auto", state: SVMState | None = None,
+               ckpt_dir: str | None = None, ckpt_every: int = 0,
+               max_chunks: int | None = None, keep_last: int = 3,
+               chunk_fn=None) -> SVMState:
+    """Out-of-core ``fit``: shuffled streamed epochs over a chunk source.
+
+    Args:
+      source: a ``repro.data.stream.ChunkSource`` (in-memory ``ArrayChunks``,
+        sharded ``FileChunks``, incremental ``LibsvmChunks``); only one chunk
+        is host-resident at a time and only the budgeted state lives on
+        device across chunks.
+      epochs / seed: as in ``fit``; the per-epoch shuffle is the
+        deterministic chunk-order + intra-chunk composition (DESIGN.md §9).
+      ckpt_dir / ckpt_every: write a resumable checkpoint every
+        ``ckpt_every`` chunks through ``repro.checkpoint`` (0 = off).  The
+        checkpoint stores the model, the epoch RNG key, the inter-chunk carry
+        rows and the ``(epoch, next_chunk)`` cursor; calling ``fit_stream``
+        again with the same ``ckpt_dir`` resumes mid-epoch and reproduces the
+        uninterrupted run bit-for-bit (the resume test pins this).
+      max_chunks: stop after this many chunk programs without writing a final
+        checkpoint — simulates a hard kill in tests/fault drills.
+      chunk_fn: override the per-chunk program (distributed path).
+
+    Returns the final ``SVMState``.  The chunk programs run with donated
+    state; a caller-provided ``state`` is copied once up front so the
+    caller's arrays stay valid (same non-destructive contract as ``fit``).
+    """
+    table = cfg.table()
+    if state is None:
+        state = init_state(cfg, source.dim)
+    else:
+        state = jax.tree.map(jnp.array, state)   # donation would delete it
+    if chunk_fn is None:
+        def chunk_fn(st, xc, yc):
+            return train_chunk(cfg, table, st, xc, yc, impl=impl)
+    return _fit_stream(cfg.batch_size, source, chunk_fn, state,
+                       epochs=epochs, seed=seed, ckpt_dir=ckpt_dir,
+                       ckpt_every=ckpt_every, max_chunks=max_chunks,
+                       keep_last=keep_last)
 
 
 def accuracy(state: SVMState, x, y, gamma, **kw) -> jax.Array:

@@ -165,24 +165,70 @@ def make_distributed_step(cfg, mesh, dim: int,
     return step, args, in_sh, out_sh
 
 
+def make_distributed_chunk_step(cfg, mesh, dim: int, chunk_steps: int,
+                                table: MergeLookupTable | None = None,
+                                layout: str = "replicated"):
+    """Per-chunk program for the streaming path on the production mesh.
+
+    The streaming trainers (``core.bsgd.fit_stream`` /
+    ``core.multiclass.fit_multiclass_stream``) run one jitted program per
+    resident chunk; this builds that program's distributed form — a
+    ``chunk_steps``-long scan of the same sharded ``train_step`` the per-batch
+    cell uses, with the chunk arrays sharded like the per-step minibatch along
+    their batch axis (``(steps, batch, dim)`` with batch over the data axes —
+    or every axis for ``layout="replicated"`` — and the SV state sharded per
+    ``layout``: ``replicated`` / ``slots`` / ``class``).  Returns
+    ``(chunk_fn, args_abstract, in_shardings, out_shardings)`` with
+    ``chunk_fn(state, table, xc, yc) -> state``; jit with
+    ``donate_argnums=(0,)`` so the budgeted state updates in place while
+    chunks stream through (``launch.train.svm_stream_loop`` is the driver).
+    """
+    step, args, in_sh, out_sh = make_distributed_step(cfg, mesh, dim, table,
+                                                      layout=layout)
+    state_abs, table_abs, xb_abs, yb_abs = args
+    state_sh, table_sh, x_sh, y_sh = in_sh
+
+    def chunk_fn(state, table, xc, yc):
+        def body(st, xy):
+            return step(st, table, xy[0], xy[1]), ()
+
+        state, _ = jax.lax.scan(body, state, (xc, yc))
+        return state
+
+    cargs = (state_abs, table_abs,
+             jax.ShapeDtypeStruct((chunk_steps,) + xb_abs.shape, xb_abs.dtype),
+             jax.ShapeDtypeStruct((chunk_steps,) + yb_abs.shape, yb_abs.dtype))
+    cin_sh = (state_sh, table_sh,
+              NamedSharding(mesh, P(None, *x_sh.spec)),
+              NamedSharding(mesh, P(None, *y_sh.spec)))
+    return chunk_fn, cargs, cin_sh, out_sh
+
+
 def lower_svm_cell(mesh, *, budget: int = 16384, dim: int = 1024,
                    batch: int = 8192, method: str = "lookup-wd",
-                   layout: str = "replicated", n_classes: int = 8):
+                   layout: str = "replicated", n_classes: int = 8,
+                   stream_steps: int = 0):
     """AOT-lower the production-scale BSGD cell (the paper-technique cell).
 
     Production sizing: budget 16k SVs, 1k features, 8k-example global
     minibatch — the regime where the kernel matrix (batch x slots) is real
     MXU work and merging fires every step.  ``layout="class"`` lowers the
     one-vs-rest multi-class cell instead (``n_classes`` stacked problems,
-    classes sharded over ``model``).
+    classes sharded over ``model``).  ``stream_steps > 0`` lowers the
+    streaming-epoch chunk program instead — the ``stream_steps``-minibatch
+    scan one resident chunk runs as (``make_distributed_chunk_step``).
     """
     cfg = BSGDConfig(budget=budget, lambda_=1e-6, gamma=2.0**-7, method=method,
                      batch_size=batch, dtype="float32", sv_dtype="bfloat16")
     if layout == "class":
         cfg = MulticlassSVMConfig(n_classes=n_classes, binary=cfg)
     table = cfg.table()
-    step, args, in_sh, out_sh = make_distributed_step(cfg, mesh, dim, table,
-                                                      layout=layout)
+    if stream_steps > 0:
+        step, args, in_sh, out_sh = make_distributed_chunk_step(
+            cfg, mesh, dim, stream_steps, table, layout=layout)
+    else:
+        step, args, in_sh, out_sh = make_distributed_step(cfg, mesh, dim,
+                                                          table, layout=layout)
     with mesh:
         lowered = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
                           donate_argnums=(0,)).lower(*args)

@@ -35,13 +35,22 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from .bsgd import (BSGDConfig, SVMState, init_state, train_step_from_rows)
+from .bsgd import (BSGDConfig, SVMState, _fit_stream, _stream_epoch,
+                   init_state, train_step_from_rows)
 from ..kernels import ops as kops
 
 
 @dataclasses.dataclass(frozen=True)
 class MulticlassSVMConfig:
-    """C one-vs-rest copies of a binary ``BSGDConfig`` (one shared table)."""
+    """C one-vs-rest copies of a binary ``BSGDConfig``.
+
+    Attributes:
+      n_classes: number of one-vs-rest problems (stacked along the leading
+        state axis; labels are integer ids in [0, n_classes)).
+      binary: the per-class ``BSGDConfig`` — every binary knob (budget,
+        solver, kernel cache, maintenance strategy, dtypes) applies to each
+        class unchanged; ONE lookup table is shared by all classes.
+    """
 
     n_classes: int
     binary: BSGDConfig
@@ -154,7 +163,9 @@ def train_step_multiclass(cfg: MulticlassSVMConfig, table, state: SVMState,
 @partial(jax.jit, static_argnames=("cfg", "impl"))
 def train_epoch_multiclass(cfg: MulticlassSVMConfig, table, state: SVMState,
                            x, y, perm, *, impl: str = "auto") -> SVMState:
-    """One pass over (x, integer y) as a single lax.scan (cf. train_epoch)."""
+    """One pass over resident (x, integer y) as a single jitted lax.scan —
+    the class-axis counterpart of ``train_epoch`` (same perm/truncation
+    contract; streamed form: ``train_epoch_multiclass_stream``)."""
     bs = cfg.binary.batch_size
     steps = perm.shape[0] // bs
     order = perm[: steps * bs].reshape(steps, bs)
@@ -171,7 +182,14 @@ def train_epoch_multiclass(cfg: MulticlassSVMConfig, table, state: SVMState,
 def fit_multiclass(cfg: MulticlassSVMConfig, x, y, *, epochs: int = 1,
                    seed: int = 0, impl: str = "auto",
                    state: SVMState | None = None) -> SVMState:
-    """Convenience driver: shuffled epochs over (x, integer labels y)."""
+    """Train C one-vs-rest problems in lockstep on in-memory data.
+
+    Mirrors ``bsgd.fit``: shuffled epochs (permutation per epoch from
+    ``seed``) over ``x: (n, dim)`` with integer labels ``y: (n,)`` in
+    [0, n_classes) — validated up front when concrete.  ``state`` resumes an
+    existing stacked model.  Out-of-core counterpart:
+    ``fit_multiclass_stream``.
+    """
     check_labels(y, cfg.n_classes)
     table = cfg.table()
     if state is None:
@@ -183,6 +201,72 @@ def fit_multiclass(cfg: MulticlassSVMConfig, x, y, *, epochs: int = 1,
         state = train_epoch_multiclass(cfg, table, state, x, y, perm,
                                        impl=impl)
     return state
+
+
+@partial(jax.jit, static_argnames=("cfg", "impl"), donate_argnums=(2,))
+def train_chunk_multiclass(cfg: MulticlassSVMConfig, table, state: SVMState,
+                           xc, yc, *, impl: str = "auto") -> SVMState:
+    """One resident chunk of the one-vs-rest engine as a single donated-state
+    program; ``xc: (steps, batch, dim)``, ``yc: (steps, batch)`` class ids
+    (cf. ``bsgd.train_chunk``)."""
+    def body(st, xy):
+        xb, yb = xy
+        return train_step_multiclass(cfg, table, st, xb,
+                                     yb.astype(jnp.int32), impl=impl), ()
+
+    state, _ = jax.lax.scan(body, state, (xc, yc))
+    return state
+
+
+def train_epoch_multiclass_stream(cfg: MulticlassSVMConfig, table,
+                                  state: SVMState, source, *, key=None,
+                                  impl: str = "auto", start_chunk: int = 0,
+                                  carry=None, on_chunk=None,
+                                  max_chunks: int | None = None,
+                                  chunk_fn=None):
+    """One streamed pass of the one-vs-rest engine over a chunk source.
+
+    The multi-class counterpart of ``bsgd.train_epoch_stream`` — identical
+    chunk-carry contract (deterministic shuffle, donated per-chunk program —
+    the caller's input state buffers are consumed —, remainder carry,
+    ``(state, next_chunk, carry)`` return); labels are integer class ids in
+    [0, C).
+    """
+    if chunk_fn is None:
+        def chunk_fn(st, xc, yc):
+            return train_chunk_multiclass(cfg, table, st, xc, yc, impl=impl)
+    state, next_chunk, carry, _ = _stream_epoch(
+        chunk_fn, state, source, batch_size=cfg.binary.batch_size, key=key,
+        start_chunk=start_chunk, carry=carry, on_chunk=on_chunk,
+        max_chunks=max_chunks)
+    if next_chunk == source.n_chunks:
+        jax.block_until_ready(state.alpha)
+    return state, next_chunk, carry
+
+
+def fit_multiclass_stream(cfg: MulticlassSVMConfig, source, *,
+                          epochs: int = 1, seed: int = 0, impl: str = "auto",
+                          state: SVMState | None = None,
+                          ckpt_dir: str | None = None, ckpt_every: int = 0,
+                          max_chunks: int | None = None, keep_last: int = 3,
+                          chunk_fn=None) -> SVMState:
+    """Out-of-core ``fit_multiclass``: streamed shuffled epochs over a chunk
+    source of integer-labelled rows (contract as in ``bsgd.fit_stream`` —
+    same checkpointing, cursor, bitwise-resume and copied-caller-state
+    semantics).  Labels are validated per concrete chunk."""
+    table = cfg.table()
+    if state is None:
+        state = init_multiclass_state(cfg, source.dim)
+    else:
+        state = jax.tree.map(jnp.array, state)   # donation would delete it
+    if chunk_fn is None:
+        def chunk_fn(st, xc, yc):
+            check_labels(yc, cfg.n_classes)
+            return train_chunk_multiclass(cfg, table, st, xc, yc, impl=impl)
+    return _fit_stream(cfg.binary.batch_size, source, chunk_fn, state,
+                       epochs=epochs, seed=seed, ckpt_dir=ckpt_dir,
+                       ckpt_every=ckpt_every, max_chunks=max_chunks,
+                       keep_last=keep_last)
 
 
 def fit_multiclass_loop(cfg: MulticlassSVMConfig, x, y, *, epochs: int = 1,

@@ -42,8 +42,38 @@ def parse_libsvm(path_or_lines, n_features: int | None = None, *,
     return x, np.asarray(ys, np.float32)
 
 
-def dump_libsvm(path: str, x, y) -> None:
-    with open(path, "w") as f:
+def dump_libsvm(path: str, x, y, *, append: bool = False) -> None:
+    """Write (x, y) in LIBSVM text format (sparse: zeros are omitted).
+
+    ``append=True`` adds rows to an existing file — the chunked writing path:
+    dump a dataset chunk-by-chunk without ever materializing it whole, then
+    read it back with ``iter_libsvm_chunks`` / ``repro.data.stream.LibsvmChunks``.
+    """
+    with open(path, "a" if append else "w") as f:
         for xi, yi in zip(x, y):
             feats = " ".join(f"{j+1}:{v:.6g}" for j, v in enumerate(xi) if v != 0)
             f.write(f"{int(yi):+d} {feats}\n")
+
+
+def iter_libsvm_chunks(path: str, chunk_rows: int, n_features: int, *,
+                       binary: bool = True):
+    """Yield ``(x, y)`` chunks of up to ``chunk_rows`` parsed incrementally.
+
+    One sequential pass with O(chunk) memory — the no-random-access
+    counterpart of ``repro.data.stream.LibsvmChunks`` (which scans offsets
+    once so chunks can be loaded in shuffled order).  ``n_features`` is
+    required: a chunk cannot infer the full feature width on its own.
+    """
+    if chunk_rows < 1:
+        raise ValueError(f"chunk_rows={chunk_rows} < 1")
+    buf = []
+    with open(path) as f:
+        for line in f:
+            if not line.strip():
+                continue
+            buf.append(line)
+            if len(buf) == chunk_rows:
+                yield parse_libsvm(buf, n_features=n_features, binary=binary)
+                buf = []
+    if buf:
+        yield parse_libsvm(buf, n_features=n_features, binary=binary)

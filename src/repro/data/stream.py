@@ -1,0 +1,285 @@
+"""Chunked host-side data pipeline for out-of-core (streaming) training.
+
+The budgeted state is the only thing that must stay resident during BSGD
+training (Zhao et al. 2012; Picard 2018) — the data itself can stream.  This
+module provides the host side of that: *chunk sources* exposing a dataset as
+``n_chunks`` independently-loadable ``(x, y)`` numpy blocks, and the
+deterministic shuffle used by the streaming trainers in ``core.bsgd`` /
+``core.multiclass``.
+
+Chunk sources (all share the same small interface — ``n_chunks``,
+``chunk_lens``, ``n_rows``, ``dim``, ``load(i) -> (x, y)``, iteration):
+
+  * ``ArrayChunks``  — view over in-memory arrays (testing / ``--stream``
+    flags on the examples; no copy until a chunk is loaded);
+  * ``FileChunks``   — sharded ``.npz`` files (keys ``x``/``y``) or
+    ``(x.npy, y.npy)`` path pairs, one shard per chunk; only the shard being
+    trained on is ever resident (``write_npz_chunks`` is the writer);
+  * ``LibsvmChunks`` — incremental ``parse_libsvm`` straight from a LIBSVM
+    text file: init scans the file once recording chunk byte offsets (and the
+    feature count if not given), ``load(i)`` seeks and parses one chunk.
+
+Deterministic shuffle contract (DESIGN.md §9): an epoch's order is the
+composition of a *chunk-order* permutation and one *intra-chunk* permutation
+per chunk, both derived from the epoch key — ``chunk_order(key, n_chunks)``
+and ``intra_perm(key, chunk_id, len)``.  Intra-chunk permutations are keyed
+by chunk *id*, not stream position, so the realized global row order
+(``epoch_permutation``) depends only on the key.  This is what makes streamed
+training reproducible, resumable from a chunk cursor, and comparable
+row-for-row against the in-memory ``train_epoch`` (the equivalence tests).
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from .libsvm import parse_libsvm
+
+
+class ChunkSource:
+    """Base chunk source: a dataset as independently-loadable (x, y) blocks.
+
+    Subclasses populate ``chunk_lens`` (rows per chunk) and ``dim`` in
+    ``__init__`` and implement ``load(i)``.  Iterating yields chunks in
+    natural order; shuffled iteration is the trainers' job (``chunk_order`` /
+    ``intra_perm``).
+    """
+
+    chunk_lens: list[int]
+    dim: int
+
+    @property
+    def n_chunks(self) -> int:
+        return len(self.chunk_lens)
+
+    @property
+    def n_rows(self) -> int:
+        return int(sum(self.chunk_lens))
+
+    def load(self, i: int):
+        """Return chunk ``i`` as ``(x (rows, dim) float32, y (rows,))``."""
+        raise NotImplementedError
+
+    def __iter__(self):
+        for i in range(self.n_chunks):
+            yield self.load(i)
+
+    def chunk_offsets(self) -> np.ndarray:
+        """Global row id of each chunk's first row; shape (n_chunks + 1,)."""
+        return np.concatenate([[0], np.cumsum(self.chunk_lens)]).astype(np.int64)
+
+
+class ArrayChunks(ChunkSource):
+    """In-memory arrays viewed as ``ceil(n / chunk_rows)`` chunks (no copy)."""
+
+    def __init__(self, x, y, chunk_rows: int):
+        if chunk_rows < 1:
+            raise ValueError(f"chunk_rows={chunk_rows} < 1")
+        self.x, self.y = np.asarray(x), np.asarray(y)
+        if self.x.shape[0] != self.y.shape[0]:
+            raise ValueError(f"x rows {self.x.shape[0]} != y rows "
+                             f"{self.y.shape[0]}")
+        n = self.x.shape[0]
+        self.chunk_rows = chunk_rows
+        self.chunk_lens = [min(chunk_rows, n - s)
+                           for s in range(0, n, chunk_rows)]
+        self.dim = int(self.x.shape[1])
+
+    def load(self, i: int):
+        s = i * self.chunk_rows
+        e = s + self.chunk_lens[i]
+        return self.x[s:e], self.y[s:e]
+
+
+class FileChunks(ChunkSource):
+    """Sharded on-disk chunks: ``.npz`` paths (keys x/y) or (x.npy, y.npy)
+    pairs, one shard per chunk; only one shard is resident at a time.
+
+    Init reads each shard's ``y`` (tiny) for the chunk lengths and each
+    shard's ``x`` .npy *header* for row/dim validation — the feature blocks
+    stay on disk until ``load``.
+    """
+
+    def __init__(self, paths):
+        if not paths:
+            raise ValueError("FileChunks needs at least one shard path")
+        self.paths = list(paths)
+        self.chunk_lens = []
+        self.dim = None
+        for p in self.paths:
+            _, y = self._read(p, y_only=True)
+            x_shape = self._x_shape(p)      # header only, no data read
+            if x_shape[0] != y.shape[0]:
+                raise ValueError(f"{p}: x rows {x_shape[0]} != y rows "
+                                 f"{y.shape[0]}")
+            if self.dim is None:
+                self.dim = int(x_shape[1])
+            elif x_shape[1] != self.dim:
+                raise ValueError(f"{p}: dim {x_shape[1]} != {self.dim}")
+            self.chunk_lens.append(int(y.shape[0]))
+
+    @staticmethod
+    def _npy_shape(f) -> tuple:
+        """Shape from an open .npy stream's header alone (no data read)."""
+        from numpy.lib import format as npfmt
+
+        ver = npfmt.read_magic(f)
+        hdr = (npfmt.read_array_header_1_0 if ver == (1, 0)
+               else npfmt.read_array_header_2_0)
+        return hdr(f)[0]
+
+    @classmethod
+    def _x_shape(cls, p) -> tuple:
+        if isinstance(p, (tuple, list)):
+            with open(p[0], "rb") as f:
+                return cls._npy_shape(f)
+        import zipfile
+
+        with zipfile.ZipFile(p) as z, z.open("x.npy") as f:
+            return cls._npy_shape(f)
+
+    @staticmethod
+    def _read(p, *, y_only: bool = False):
+        if isinstance(p, (tuple, list)):
+            xp, yp = p
+            y = np.load(yp, mmap_mode="r" if y_only else None)
+            if y_only:
+                return None, y
+            return np.asarray(np.load(xp)), np.asarray(y)
+        with np.load(p) as z:
+            if y_only:
+                return None, z["y"]
+            return z["x"], z["y"]
+
+    def load(self, i: int):
+        x, y = self._read(self.paths[i])
+        return np.asarray(x), np.asarray(y)
+
+
+class LibsvmChunks(ChunkSource):
+    """Incremental LIBSVM parsing: chunk byte offsets scanned once at init,
+    ``load(i)`` seeks and parses ``chunk_rows`` lines with O(chunk) memory.
+
+    ``n_features`` fixes the feature dimension across chunks (a chunk that
+    happens to omit the trailing features must still produce full-width
+    rows); when None, the init scan infers it from the whole file.
+    ``binary`` follows ``parse_libsvm``: True maps labels to {-1, +1} by
+    sign, False keeps raw (multi-class) labels.
+    """
+
+    def __init__(self, path: str, chunk_rows: int, n_features: int | None = None,
+                 *, binary: bool = True):
+        if chunk_rows < 1:
+            raise ValueError(f"chunk_rows={chunk_rows} < 1")
+        self.path, self.binary = path, binary
+        self._offsets = [0]          # byte offset of each chunk's first line
+        self.chunk_lens = []
+        rows_in_chunk = 0
+        n_rows = 0
+        max_idx = 0
+        pos = 0
+        with open(path, "rb") as f:
+            for line in f:
+                pos += len(line)
+                if not line.strip():
+                    continue
+                n_rows += 1
+                rows_in_chunk += 1
+                if n_features is None:
+                    for tok in line.split()[1:]:
+                        max_idx = max(max_idx, int(tok.split(b":")[0]))
+                if rows_in_chunk == chunk_rows:
+                    self.chunk_lens.append(rows_in_chunk)
+                    self._offsets.append(pos)
+                    rows_in_chunk = 0
+        if rows_in_chunk:
+            self.chunk_lens.append(rows_in_chunk)
+            self._offsets.append(pos)
+        if not self.chunk_lens:
+            raise ValueError(f"{path}: no data rows")
+        self.n_features = n_features if n_features is not None else max_idx
+        self.dim = int(self.n_features)
+
+    def load(self, i: int):
+        start, end = self._offsets[i], self._offsets[i + 1]
+        with open(self.path, "rb") as f:
+            f.seek(start)
+            blob = f.read(end - start)
+        lines = blob.decode("utf-8").splitlines()
+        return parse_libsvm(lines, n_features=self.n_features,
+                            binary=self.binary)
+
+
+def write_npz_chunks(out_dir: str, x, y, chunk_rows: int, *,
+                     prefix: str = "chunk") -> list[str]:
+    """Shard (x, y) into ``.npz`` chunk files under ``out_dir``; returns the
+    ordered shard paths (feed them to ``FileChunks``)."""
+    x, y = np.asarray(x), np.asarray(y)
+    os.makedirs(out_dir, exist_ok=True)
+    paths = []
+    for c, s in enumerate(range(0, x.shape[0], chunk_rows)):
+        p = os.path.join(out_dir, f"{prefix}_{c:05d}.npz")
+        np.savez(p, x=x[s:s + chunk_rows], y=y[s:s + chunk_rows])
+        paths.append(p)
+    return paths
+
+
+def _fold_in(key, n: int):
+    import jax
+
+    return jax.random.fold_in(key, n)
+
+
+def chunk_order(key, n_chunks: int) -> np.ndarray:
+    """The epoch's chunk-order permutation (position -> chunk id)."""
+    import jax
+
+    return np.asarray(jax.random.permutation(_fold_in(key, 0), n_chunks))
+
+
+def intra_perm(key, chunk_id: int, n: int) -> np.ndarray:
+    """The intra-chunk row permutation for chunk ``chunk_id`` (keyed by id,
+    not stream position — the realized order depends only on the key)."""
+    import jax
+
+    return np.asarray(jax.random.permutation(_fold_in(key, 1 + chunk_id), n))
+
+
+def epoch_permutation(source: ChunkSource, key) -> np.ndarray:
+    """The global row order one shuffled streamed epoch realizes.
+
+    Feeding this to the in-memory ``train_epoch`` reproduces the streamed
+    pass row-for-row — the equivalence gate in tests/core/test_stream_train.py.
+    ``key=None`` is the natural (unshuffled) order.
+    """
+    offs = source.chunk_offsets()
+    if key is None:
+        return np.arange(source.n_rows, dtype=np.int64)
+    order = chunk_order(key, source.n_chunks)
+    parts = [offs[c] + intra_perm(key, int(c), source.chunk_lens[c])
+             for c in order]
+    return np.concatenate(parts).astype(np.int64)
+
+
+def iter_epoch(source: ChunkSource, key=None, *, start_chunk: int = 0,
+               end_chunk: int | None = None):
+    """Yield ``(position, x, y)`` chunks for one epoch in shuffled order.
+
+    ``key`` derives both permutations of the shuffle contract (None = natural
+    order); ``start_chunk`` skips already-trained stream positions — the
+    resume path (checkpoint cursor) of the streaming trainers — and
+    ``end_chunk`` stops before that position (exclusive; chunks past it are
+    never read from the source).
+    """
+    order = (chunk_order(key, source.n_chunks) if key is not None
+             else np.arange(source.n_chunks))
+    end = source.n_chunks if end_chunk is None else min(end_chunk,
+                                                        source.n_chunks)
+    for pos in range(start_chunk, end):
+        cid = int(order[pos])
+        x, y = source.load(cid)
+        if key is not None:
+            p = intra_perm(key, cid, x.shape[0])
+            x, y = x[p], y[p]
+        yield pos, x, y

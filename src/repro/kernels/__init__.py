@@ -1,3 +1,9 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels for the BSGD hot spots, each with a pure-jnp oracle.
+
+Layout: ``<name>.py`` holds the Pallas kernel, ``ref.py`` the semantics of
+record (and CPU/GPU fallback), ``ops.py`` the public jit'd wrappers with
+``impl`` dispatch (``auto | pallas | pallas_interpret | ref``).  Kernels:
+``rbf_kernel`` (tiled Gaussian kernel matrix), ``gss`` (batched golden
+section search), ``merge_lookup`` (fused single-partner candidate scoring),
+``merge_multi`` (P-partner multi-merge scoring).
+"""

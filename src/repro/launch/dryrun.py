@@ -45,15 +45,21 @@ def choose_strategy(cfg, shape_name: str, strategy: str) -> str:
 def run_svm_cell(*, multi_pod: bool, method: str = "lookup-wd",
                  out_dir: str | None = None, budget: int = 16384,
                  dim: int = 1024, batch: int = 8192, verbose=True,
-                 layout: str = "replicated", n_classes: int = 8) -> dict:
-    """The paper-technique cell: distributed minibatch BSGD on the mesh."""
+                 layout: str = "replicated", n_classes: int = 8,
+                 stream_steps: int = 0) -> dict:
+    """The paper-technique cell: distributed minibatch BSGD on the mesh.
+
+    ``stream_steps > 0`` lowers the streaming-epoch chunk program (one
+    resident chunk = a ``stream_steps``-minibatch donated-state scan) instead
+    of the single-step cell."""
     from ..core.distributed import lower_svm_cell
 
     mesh = make_production_mesh(multi_pod=multi_pod)
     t0 = time.time()
     lowered, cfg = lower_svm_cell(mesh, budget=budget, dim=dim, batch=batch,
                                   method=method, layout=layout,
-                                  n_classes=n_classes)
+                                  n_classes=n_classes,
+                                  stream_steps=stream_steps)
     t_lower = time.time() - t0
     t0 = time.time()
     compiled = lowered.compile()
@@ -64,6 +70,8 @@ def run_svm_cell(*, multi_pod: bool, method: str = "lookup-wd",
     model_flops = 2.0 * batch * (budget + batch) * dim
     if layout == "class":
         model_flops *= n_classes
+    if stream_steps > 0:
+        model_flops *= stream_steps
     rec = rl.analyze(compiled, arch=f"svm_bsgd_{method}", shape=f"b{budget}",
                      mesh=mesh, strategy=layout, model_flops_global=model_flops)
     result = rec.to_json()
@@ -82,6 +90,8 @@ def run_svm_cell(*, multi_pod: bool, method: str = "lookup-wd",
     if out_dir:
         os.makedirs(out_dir, exist_ok=True)
         tag = f"svm_bsgd_{method}.b{budget}.{'pod2' if multi_pod else 'pod1'}.{layout}"
+        if stream_steps > 0:
+            tag += f".stream{stream_steps}"
         with open(os.path.join(out_dir, tag + ".json"), "w") as f:
             json.dump(result, f, indent=2)
     return result
@@ -153,6 +163,9 @@ def main() -> None:
                     choices=["replicated", "slots", "class"])
     ap.add_argument("--svm-classes", type=int, default=8,
                     help="n_classes for --svm-layout=class")
+    ap.add_argument("--svm-stream-steps", type=int, default=0,
+                    help="> 0: lower the streaming chunk program (a "
+                         "stream-steps-minibatch donated-state scan)")
     ap.add_argument("--seq-shard-attn", action="store_true",
                     help="context-parallel attention (hillclimb variant)")
     ap.add_argument("--keep-scan", action="store_true",
@@ -174,7 +187,8 @@ def main() -> None:
     if args.arch == "svm_bsgd":
         run_svm_cell(multi_pod=args.multi_pod, method=args.svm_method,
                      out_dir=args.out, layout=args.svm_layout,
-                     n_classes=args.svm_classes)
+                     n_classes=args.svm_classes,
+                     stream_steps=args.svm_stream_steps)
         return
 
     failures = []

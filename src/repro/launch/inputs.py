@@ -38,6 +38,26 @@ def batch_specs(cfg, shape_name: str):
     return spec
 
 
+def svm_chunk_specs(dim: int, chunk_steps: int, batch_size: int, *,
+                    n_classes: int | None = None, x_dtype="float32",
+                    y_dtype="float32"):
+    """Abstract streamed chunk for the SVM cells: ``(steps, batch, ...)``.
+
+    The streaming engine feeds ONE chunk-sized program per resident chunk
+    (``core.distributed.make_distributed_chunk_step``); this is its abstract
+    input — x as ``(chunk_steps, batch, dim)`` in the SV storage dtype
+    (``cfg.sv_dtype or cfg.dtype``), y as ``(chunk_steps, batch)`` (float ±1
+    targets in ``cfg.dtype`` for binary, int32 class ids when ``n_classes``
+    is set).  The launch stream test pins this against the chunk program's
+    real abstract arguments.
+    """
+    return {
+        "xc": sds((chunk_steps, batch_size, dim), jnp.dtype(x_dtype)),
+        "yc": sds((chunk_steps, batch_size),
+                  jnp.int32 if n_classes else jnp.dtype(y_dtype)),
+    }
+
+
 def abstract_params(cfg):
     """(params, axes) with ShapeDtypeStruct leaves (axes tree is concrete —
     ``Axes`` markers are static objects created during tracing)."""

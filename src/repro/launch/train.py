@@ -130,6 +130,94 @@ def train_loop(cfg, *, steps: int = 100, batch_size: int = 8, seq_len: int = 128
             "params": params}
 
 
+def svm_stream_loop(source, *, layout: str = "replicated", n_classes: int = 8,
+                    budget: int = 128, batch_size: int = 8,
+                    method: str = "lookup-wd", gamma: float = 0.5,
+                    lambda_: float = 1e-4, epochs: int = 1, seed: int = 0,
+                    mesh=None, ckpt_dir: str | None = None,
+                    ckpt_every: int = 0, max_chunks: int | None = None,
+                    verbose: bool = True):
+    """Streamed SVM training on the production mesh: the distributed path
+    consuming the same chunk stream as the single-device trainers.
+
+    ``source`` is any ``repro.data.stream.ChunkSource``.  Each resident chunk
+    runs as ONE pjit'd donated-state program
+    (``core.distributed.make_distributed_chunk_step``) with the chunk's batch
+    axis sharded over the data axes and the SV state laid out per ``layout``
+    — ``replicated`` / ``slots`` for binary, ``class`` for one-vs-rest
+    multi-class (classes over ``model``, ``n_classes`` problems).  Epoch
+    shuffling, remainder carry, every-K-chunks checkpointing and mid-epoch
+    resume are exactly the ``fit_stream`` contract (the drivers are shared).
+
+    Returns ``(state, cfg)``.
+    """
+    from ..core.bsgd import BSGDConfig, fit_stream, init_state
+    from ..core.distributed import make_distributed_chunk_step
+    from ..core.multiclass import (MulticlassSVMConfig, check_labels,
+                                   fit_multiclass_stream,
+                                   init_multiclass_state)
+    from .mesh import make_mesh
+
+    if mesh is None:
+        mesh = make_mesh((len(jax.devices()), 1), ("data", "model"))
+    bcfg = BSGDConfig(budget=budget, lambda_=lambda_, gamma=gamma,
+                      method=method, batch_size=batch_size)
+    is_class = layout == "class"
+    cfg = (MulticlassSVMConfig(n_classes=n_classes, binary=bcfg) if is_class
+           else bcfg)
+    table = cfg.table()
+
+    compiled = {}   # chunk_steps -> pjit'd donated-state chunk program
+
+    def chunk_fn(state, xc, yc):
+        if is_class:
+            check_labels(yc, n_classes)
+        steps = xc.shape[0]
+        if steps not in compiled:
+            fn, _, in_sh, out_sh = make_distributed_chunk_step(
+                cfg, mesh, source.dim, steps, table, layout=layout)
+            with mesh:
+                compiled[steps] = jax.jit(fn, in_shardings=in_sh,
+                                          out_shardings=out_sh,
+                                          donate_argnums=(0,))
+        with mesh:
+            return compiled[steps](state, table, xc, yc)
+
+    if is_class:
+        state = init_multiclass_state(cfg, source.dim)
+        state = fit_multiclass_stream(cfg, source, epochs=epochs, seed=seed,
+                                      state=state, ckpt_dir=ckpt_dir,
+                                      ckpt_every=ckpt_every,
+                                      max_chunks=max_chunks,
+                                      chunk_fn=chunk_fn)
+    else:
+        state = init_state(cfg, source.dim)
+        state = fit_stream(cfg, source, epochs=epochs, seed=seed, state=state,
+                           ckpt_dir=ckpt_dir, ckpt_every=ckpt_every,
+                           max_chunks=max_chunks, chunk_fn=chunk_fn)
+    if verbose:
+        counts = np.asarray(state.count).tolist()
+        print(f"[train] svm stream done: layout={layout} "
+              f"chunks={source.n_chunks} rows={source.n_rows} "
+              f"sv_count={counts}", flush=True)
+    return state, cfg
+
+
+def _open_stream(path: str, *, chunk_rows: int, n_features: int | None,
+                 binary: bool):
+    """CLI helper: a shard directory (*.npz) or a LIBSVM text file."""
+    import glob
+
+    from ..data.stream import FileChunks, LibsvmChunks
+
+    if os.path.isdir(path):
+        shards = sorted(glob.glob(os.path.join(path, "*.npz")))
+        if not shards:
+            raise SystemExit(f"{path}: no .npz shards")
+        return FileChunks(shards)
+    return LibsvmChunks(path, chunk_rows, n_features, binary=binary)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -143,7 +231,30 @@ def main() -> None:
     ap.add_argument("--deadline", type=float, default=None)
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--stream", default=None, metavar="PATH",
+                    help="svm_bsgd only: chunk source — a directory of .npz "
+                         "shards or a LIBSVM text file")
+    ap.add_argument("--svm-layout", default="replicated",
+                    choices=("replicated", "slots", "class"))
+    ap.add_argument("--svm-classes", type=int, default=8)
+    ap.add_argument("--svm-budget", type=int, default=128)
+    ap.add_argument("--chunk-rows", type=int, default=4096,
+                    help="rows per chunk for LIBSVM streams")
+    ap.add_argument("--n-features", type=int, default=None)
+    ap.add_argument("--epochs", type=int, default=1)
     args = ap.parse_args()
+    if args.arch == "svm_bsgd":
+        if not args.stream:
+            raise SystemExit("--arch svm_bsgd needs --stream PATH")
+        source = _open_stream(args.stream, chunk_rows=args.chunk_rows,
+                              n_features=args.n_features,
+                              binary=args.svm_layout != "class")
+        svm_stream_loop(source, layout=args.svm_layout,
+                        n_classes=args.svm_classes, budget=args.svm_budget,
+                        batch_size=args.batch_size, epochs=args.epochs,
+                        seed=args.seed, ckpt_dir=args.ckpt_dir,
+                        ckpt_every=args.ckpt_every)
+        return
     cfg = get_smoke(args.arch) if args.smoke else get(args.arch)
     metrics = train_loop(cfg, steps=args.steps, batch_size=args.batch_size,
                          seq_len=args.seq_len, ckpt_dir=args.ckpt_dir,

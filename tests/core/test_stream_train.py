@@ -1,0 +1,182 @@
+"""Streaming-epoch engine gates (ISSUE 3 acceptance):
+
+  * a streamed one-pass run is allclose to the in-memory ``train_epoch`` on
+    the same realized shuffled order — binary and multi-class, including the
+    ragged-chunk carry path;
+  * a run killed mid-epoch resumes from its checkpoint and finishes BITWISE
+    identical to the uninterrupted run.
+"""
+import os
+
+import jax
+import numpy as np
+
+from repro import checkpoint as ckpt
+from repro.core import (BSGDConfig, MulticlassSVMConfig, fit_multiclass_stream,
+                        fit_stream, init_multiclass_state, init_state,
+                        train_epoch, train_epoch_multiclass,
+                        train_epoch_stream)
+from repro.data import (ArrayChunks, FileChunks, epoch_permutation, make_blobs,
+                        make_blobs_multiclass, write_npz_chunks)
+
+# one shared config -> the jitted chunk/step programs compile once per module
+CFG = BSGDConfig(budget=16, lambda_=1e-4, gamma=0.5, batch_size=4)
+MCFG = MulticlassSVMConfig(n_classes=3, binary=CFG)
+DIM = 6
+
+
+def _binary(n=200, seed=0):
+    x, y = make_blobs(jax.random.PRNGKey(seed), n, DIM)
+    return np.asarray(x), np.asarray(y)
+
+
+def _leaves_equal(a, b, *, exact, atol=1e-6):
+    for name, la, lb in zip(a._fields, a, b):
+        if la is None:
+            assert lb is None
+            continue
+        la, lb = np.asarray(la), np.asarray(lb)
+        if exact:
+            assert np.array_equal(la, lb), name
+        else:
+            np.testing.assert_allclose(la, lb, atol=atol, err_msg=name)
+
+
+def test_stream_matches_inmemory_binary():
+    x, y = _binary()
+    src = ArrayChunks(x, y, 40)                   # 5 even chunks
+    seed = 7
+    st_stream = fit_stream(CFG, src, epochs=1, seed=seed)
+    perm = epoch_permutation(src, jax.random.fold_in(jax.random.PRNGKey(seed), 0))
+    st_mem = train_epoch(CFG, CFG.table(), init_state(CFG, DIM), x, y, perm)
+    _leaves_equal(st_mem, st_stream, exact=False)
+
+
+def test_stream_matches_inmemory_ragged_carry():
+    """Chunk lens not divisible by batch_size: remainder rows carry into the
+    next chunk, so the realized batch sequence equals the in-memory one."""
+    x, y = _binary(n=197)
+    src = ArrayChunks(x, y, 37)
+    assert any(c % CFG.batch_size for c in src.chunk_lens)
+    st_stream = fit_stream(CFG, src, epochs=1, seed=3)
+    perm = epoch_permutation(src, jax.random.fold_in(jax.random.PRNGKey(3), 0))
+    st_mem = train_epoch(CFG, CFG.table(), init_state(CFG, DIM), x, y, perm)
+    _leaves_equal(st_mem, st_stream, exact=False)
+
+
+def test_stream_matches_inmemory_multiclass():
+    x, y = make_blobs_multiclass(jax.random.PRNGKey(1), 180, DIM, 3)
+    x, y = np.asarray(x), np.asarray(y)
+    src = ArrayChunks(x, y, 36)
+    st_stream = fit_multiclass_stream(MCFG, src, epochs=1, seed=5)
+    perm = epoch_permutation(src, jax.random.fold_in(jax.random.PRNGKey(5), 0))
+    st_mem = train_epoch_multiclass(MCFG, MCFG.table(),
+                                    init_multiclass_state(MCFG, DIM), x, y,
+                                    jax.numpy.asarray(perm))
+    _leaves_equal(st_mem, st_stream, exact=False)
+
+
+def test_kill_and_resume_bitwise(tmp_path):
+    """Killed after N chunks (no final checkpoint written — a hard kill),
+    resumed from the every-2-chunks checkpoint: bitwise-identical end state,
+    across an epoch boundary and with ragged chunks."""
+    x, y = _binary(n=230)
+    src = ArrayChunks(x, y, 37)                   # 7 ragged chunks
+    ref = fit_stream(CFG, src, epochs=2, seed=5)
+    ck = os.path.join(tmp_path, "ck")
+    fit_stream(CFG, src, epochs=2, seed=5, ckpt_dir=ck, ckpt_every=2,
+               max_chunks=9)                      # dies mid-epoch-2
+    steps = ckpt.all_steps(ck)
+    assert steps and max(steps) <= 9
+    meta = ckpt.load_metadata(ck, max(steps))
+    assert meta["kind"] == "stream-epoch" and meta["epoch"] == 1
+    resumed = fit_stream(CFG, src, epochs=2, seed=5, ckpt_dir=ck,
+                         ckpt_every=2)
+    _leaves_equal(ref, resumed, exact=True)
+
+
+def test_kill_between_checkpoints_replays_chunks(tmp_path):
+    """A kill BETWEEN checkpoints replays the since-last-checkpoint chunks on
+    resume — still bitwise (the replayed programs are deterministic)."""
+    x, y = _binary(n=200)
+    src = ArrayChunks(x, y, 40)
+    ref = fit_stream(CFG, src, epochs=1, seed=11)
+    ck = os.path.join(tmp_path, "ck")
+    fit_stream(CFG, src, epochs=1, seed=11, ckpt_dir=ck, ckpt_every=2,
+               max_chunks=3)                      # ckpt at 2, killed at 3
+    assert ckpt.latest_step(ck) == 2
+    resumed = fit_stream(CFG, src, epochs=1, seed=11, ckpt_dir=ck,
+                         ckpt_every=2)
+    _leaves_equal(ref, resumed, exact=True)
+
+
+def test_resume_multiclass_bitwise(tmp_path):
+    x, y = make_blobs_multiclass(jax.random.PRNGKey(2), 180, DIM, 3)
+    x, y = np.asarray(x), np.asarray(y)
+    src = ArrayChunks(x, y, 36)
+    ref = fit_multiclass_stream(MCFG, src, epochs=1, seed=4)
+    ck = os.path.join(tmp_path, "ck")
+    fit_multiclass_stream(MCFG, src, epochs=1, seed=4, ckpt_dir=ck,
+                          ckpt_every=1, max_chunks=2)
+    resumed = fit_multiclass_stream(MCFG, src, epochs=1, seed=4, ckpt_dir=ck,
+                                    ckpt_every=1)
+    _leaves_equal(ref, resumed, exact=True)
+
+
+def test_resume_refuses_mismatched_seed_or_chunking(tmp_path):
+    """The checkpoint cursor is only meaningful against the same shuffle and
+    chunking; resuming with a different seed or a re-chunked source must
+    raise, not silently train a corrupted epoch."""
+    import pytest
+
+    x, y = _binary(n=200)
+    src = ArrayChunks(x, y, 40)
+    ck = os.path.join(tmp_path, "ck")
+    fit_stream(CFG, src, epochs=1, seed=5, ckpt_dir=ck, ckpt_every=2,
+               max_chunks=2)
+    with pytest.raises(ValueError, match="seed"):
+        fit_stream(CFG, src, epochs=1, seed=6, ckpt_dir=ck)
+    with pytest.raises(ValueError, match="chunks"):
+        fit_stream(CFG, ArrayChunks(x, y, 50), epochs=1, seed=5, ckpt_dir=ck)
+
+
+def test_file_chunks_end_to_end(tmp_path):
+    """On-disk shards through fit_stream == in-memory arrays through
+    fit_stream (the source kind must not matter)."""
+    x, y = _binary(n=160)
+    paths = write_npz_chunks(str(tmp_path), x, y, 40)
+    st_disk = fit_stream(CFG, FileChunks(paths), epochs=1, seed=2)
+    st_mem = fit_stream(CFG, ArrayChunks(x, y, 40), epochs=1, seed=2)
+    _leaves_equal(st_mem, st_disk, exact=True)
+
+
+def test_fit_stream_does_not_consume_caller_state():
+    """fit_stream donates state into the chunk programs but must copy a
+    caller-provided state first — same non-destructive contract as fit."""
+    x, y = _binary(n=160)
+    src = ArrayChunks(x, y, 40)
+    st0 = fit_stream(CFG, src, epochs=1, seed=0)
+    st1 = fit_stream(CFG, src, epochs=1, seed=1, state=st0)
+    st2 = fit_stream(CFG, src, epochs=1, seed=1, state=st0)  # st0 still alive
+    assert int(st0.count) >= 0                               # not deleted
+    _leaves_equal(st1, st2, exact=True)
+
+
+def test_train_epoch_stream_cursor_contract():
+    """train_epoch_stream returns (state, next_chunk, carry); max_chunks cuts
+    the epoch short at the right cursor and a manual continuation finishes it
+    identically to the one-shot epoch."""
+    x, y = _binary(n=200)
+    src = ArrayChunks(x, y, 40)
+    table = CFG.table()
+    key = jax.random.PRNGKey(13)
+    full, nc, _ = train_epoch_stream(CFG, table, init_state(CFG, DIM), src,
+                                     key=key)
+    assert nc == src.n_chunks
+    st, nc, carry = train_epoch_stream(CFG, table, init_state(CFG, DIM), src,
+                                       key=key, max_chunks=2)
+    assert nc == 2
+    st, nc, _ = train_epoch_stream(CFG, table, st, src, key=key,
+                                   start_chunk=nc, carry=carry)
+    assert nc == src.n_chunks
+    _leaves_equal(full, st, exact=True)

@@ -1,0 +1,85 @@
+"""Streaming SVM through the launch layer: the pjit'd chunk program lowers
+on a multi-device mesh and ``svm_stream_loop`` reproduces the single-device
+streamed trainer (subprocess with forced host devices, cf. test_svm_class_layout)."""
+import os
+import subprocess
+import sys
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+
+
+def run_py(code: str, n_devices: int = 8, timeout: int = 900):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    # force CPU: a jax[tpu] install otherwise probes the TPU metadata service
+    env["JAX_PLATFORMS"] = "cpu"
+    proc = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                          text=True, timeout=timeout, env=env)
+    assert proc.returncode == 0, f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
+    return proc.stdout
+
+
+def test_chunk_cell_lowers_replicated_and_class():
+    """make_distributed_chunk_step lowers + compiles for both layouts
+    (reduced sizes; the production sizing is dryrun-only)."""
+    out = run_py(r"""
+import jax
+from repro.core.distributed import lower_svm_cell, make_distributed_chunk_step
+from repro.core import BSGDConfig, MulticlassSVMConfig
+from repro.launch.inputs import svm_chunk_specs
+from repro.launch.mesh import make_mesh
+
+mesh = make_mesh((2, 4), ("data", "model"))
+for layout in ("replicated", "class"):
+    lowered, cfg = lower_svm_cell(mesh, budget=64, dim=32, batch=16,
+                                  layout=layout, n_classes=8, stream_steps=4)
+    mem = lowered.compile().memory_analysis()
+    assert mem.argument_size_in_bytes > 0
+    # inputs.svm_chunk_specs must agree with the chunk program's abstract args
+    b = cfg.binary if layout == "class" else cfg
+    _, cargs, _, _ = make_distributed_chunk_step(cfg, mesh, 32, 4,
+                                                 cfg.table(), layout=layout)
+    spec = svm_chunk_specs(32, 4, b.batch_size,
+                           n_classes=cfg.n_classes if layout == "class" else None,
+                           x_dtype=b.sv_dtype or b.dtype, y_dtype=b.dtype)
+    for got, want in ((cargs[2], spec["xc"]), (cargs[3], spec["yc"])):
+        assert got.shape == want.shape and got.dtype == want.dtype, (got, want)
+    print("OK", layout)
+""")
+    assert "OK replicated" in out and "OK class" in out
+
+
+def test_svm_stream_loop_matches_single_device():
+    """svm_stream_loop on an 8-device mesh == single-device fit_stream on the
+    same source/seed (binary), and the class layout trains per-class models."""
+    out = run_py(r"""
+import numpy as np, jax, tempfile, os
+from repro.data import make_blobs, make_blobs_multiclass, write_npz_chunks
+from repro.data.stream import FileChunks
+from repro.launch.train import svm_stream_loop
+from repro.core import BSGDConfig, fit_stream
+
+x, y = map(np.asarray, make_blobs(jax.random.PRNGKey(0), 256, 8))
+with tempfile.TemporaryDirectory() as d:
+    src = FileChunks(write_npz_chunks(d, x, y, 64))
+    st, cfg = svm_stream_loop(src, budget=16, batch_size=8, gamma=0.5,
+                              epochs=1, seed=2, verbose=False)
+    ref = fit_stream(BSGDConfig(budget=16, batch_size=8, gamma=0.5), src,
+                     epochs=1, seed=2)
+    for name, a, b in zip(ref._fields, ref, st):
+        if a is not None:
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-5, err_msg=name)
+print("OK binary")
+
+xm, ym = map(np.asarray, make_blobs_multiclass(jax.random.PRNGKey(1), 192, 8, 4))
+with tempfile.TemporaryDirectory() as d:
+    src = FileChunks(write_npz_chunks(d, xm, ym, 48))
+    st, cfg = svm_stream_loop(src, layout="class", n_classes=4, budget=12,
+                              batch_size=8, gamma=0.3, epochs=1, verbose=False)
+    assert np.asarray(st.count).shape == (4,)
+    assert (np.asarray(st.count) > 0).all()
+print("OK class")
+""")
+    assert "OK binary" in out and "OK class" in out
