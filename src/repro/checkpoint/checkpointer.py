@@ -20,6 +20,7 @@ import os
 import re
 import shutil
 import threading
+import zipfile
 from typing import Any
 
 import jax
@@ -101,10 +102,25 @@ def load_metadata(ckpt_dir: str, step: int) -> dict:
     Consumers that resume from *inside* a logical unit of work store their
     cursor here — e.g. the streaming trainers save ``{"epoch", "next_chunk"}``
     so a mid-epoch restart replays the exact remaining chunk sequence.
+
+    Raises ``ValueError`` (never a raw traceback type) when the step has no
+    manifest or the manifest is corrupt — by the atomic-rename contract a
+    fully-written checkpoint always has one, so either means the directory
+    is not a checkpoint this library wrote.
     """
     path = os.path.join(ckpt_dir, f"step_{step:08d}", "manifest.json")
-    with open(path) as f:
-        return json.load(f).get("metadata", {})
+    try:
+        with open(path) as f:
+            return json.load(f).get("metadata", {})
+    except FileNotFoundError:
+        raise ValueError(
+            f"{ckpt_dir}: step {step} has no manifest ({path} missing) — "
+            "not a checkpoint written by repro.checkpoint") from None
+    except json.JSONDecodeError as e:
+        raise ValueError(
+            f"{ckpt_dir}: step {step} manifest is corrupt ({e}) — "
+            "the checkpoint directory was tampered with or truncated "
+            "outside the atomic-rename path") from None
 
 
 def load(ckpt_dir: str, step: int, target_tree, *, shardings=None):
@@ -115,12 +131,24 @@ def load(ckpt_dir: str, step: int, target_tree, *, shardings=None):
     one that saved (elastic restart).
     """
     path = os.path.join(ckpt_dir, f"step_{step:08d}", "arrays.npz")
-    with np.load(path) as z:
-        stored = {k: z[k] for k in z.files}
+    try:
+        with np.load(path) as z:
+            stored = {k: z[k] for k in z.files}
+    except FileNotFoundError:
+        raise ValueError(
+            f"{ckpt_dir}: step {step} has no arrays.npz — not a complete "
+            "checkpoint (atomic saves always write one)") from None
+    except (ValueError, OSError, EOFError, zipfile.BadZipFile) as e:
+        # truncated / corrupt zip
+        raise ValueError(
+            f"{ckpt_dir}: step {step} arrays.npz is unreadable ({e}) — "
+            "truncated or corrupt tree") from None
     keys = list(_flatten(target_tree).keys())
     missing = [k for k in keys if k not in stored]
     if missing:
-        raise KeyError(f"checkpoint missing leaves: {missing[:5]}...")
+        raise ValueError(
+            f"{ckpt_dir}: step {step} checkpoint is missing leaves "
+            f"{missing[:5]} — truncated tree or a different state layout")
     leaves, treedef = jax.tree_util.tree_flatten(target_tree)
     flat_shardings = (jax.tree_util.tree_flatten(shardings)[0]
                       if shardings is not None else [None] * len(leaves))

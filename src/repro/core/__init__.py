@@ -1,5 +1,12 @@
 """Core paper contribution: budgeted SGD SVM with precomputed merge lookup."""
 from . import budget, kernel_cache, merge_math
+# the serving module imports first: its submodule import binds the package
+# attribute ``predict`` to the module, and the ``from .bsgd import`` below
+# then restores ``repro.core.predict`` to the binary predict *function*
+# (the public API since PR 0) — import serving symbols from ``repro.core``
+# directly, never via ``repro.core.predict.<name>``
+from .predict import (BatchQueue, ServeModel, default_buckets, drive_trace, export_model, load_serve_model,
+                      predict_labels, ragged_trace_sizes, serve_requests, serve_scores)
 from .bsgd import (BSGDConfig, SVMState, accuracy, decision_function, fit, fit_stream, init_state, predict,
                    train_chunk, train_epoch, train_epoch_stream, train_step, train_step_from_rows)
 from .budget import METHODS, STRATEGIES, MaintenanceInfo, maintenance_step, run_maintenance
@@ -12,17 +19,20 @@ from .merge_math import (EPS_PRECISE, EPS_STANDARD, KAPPA_UNIMODAL, golden_secti
                          merge_alpha_z, merge_point, s_objective, solve_merge, wd_norm_at, weight_degradation)
 
 __all__ = [
-    "BSGDConfig", "SVMState", "MaintenanceInfo", "MergeLookupTable", "METHODS",
-    "MulticlassSVMConfig", "STRATEGIES", "accuracy", "accuracy_multiclass",
+    "BSGDConfig", "BatchQueue", "SVMState", "MaintenanceInfo", "MergeLookupTable", "METHODS",
+    "MulticlassSVMConfig", "STRATEGIES", "ServeModel", "accuracy", "accuracy_multiclass",
     "bilinear_lookup", "budget", "build_lookup_table",
     "build_merge_tables", "check_labels", "class_kernel_rows", "decision_function",
-    "decision_function_multiclass", "default_table", "fit", "fit_multiclass",
+    "decision_function_multiclass", "default_buckets", "default_table",
+    "drive_trace", "export_model", "fit", "fit_multiclass",
     "fit_multiclass_loop", "fit_multiclass_stream", "fit_stream",
     "golden_section_search", "gss_num_iters",
     "init_multiclass_state", "init_state", "kernel_cache",
-    "maintenance_step", "merge_alpha_z", "merge_math", "merge_point",
-    "ovr_targets", "predict", "predict_multiclass",
-    "run_maintenance", "s_objective", "solve_merge", "train_chunk",
+    "load_serve_model", "maintenance_step", "merge_alpha_z", "merge_math",
+    "merge_point", "ovr_targets", "predict", "predict_labels",
+    "predict_multiclass", "ragged_trace_sizes",
+    "run_maintenance", "s_objective", "serve_requests", "serve_scores",
+    "solve_merge", "train_chunk",
     "train_chunk_multiclass", "train_epoch",
     "train_epoch_multiclass", "train_epoch_multiclass_stream",
     "train_epoch_stream", "train_step", "train_step_from_rows",

@@ -31,6 +31,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from .bsgd import BSGDConfig, SVMState, train_step
 from .lookup import MergeLookupTable
 from .multiclass import MulticlassSVMConfig, train_step_multiclass
+from .predict import ServeModel, predict_labels
 
 
 def sv_shardings(cfg: BSGDConfig, mesh, dim: int, *, layout: str = "replicated"):
@@ -117,6 +118,57 @@ def _make_multiclass_step(cfg: MulticlassSVMConfig, mesh, dim: int,
     )
     in_sh = (state_sh, table_sh, x_sh, y_sh)
     return step, args, in_sh, state_sh
+
+
+def serve_shardings(mesh, *, binary: bool = False):
+    """``layout="serve"``: the exported bank replicated per device, the
+    request batch sharded over EVERY mesh axis.
+
+    The serving contract (DESIGN.md §10): each device scores its request
+    shard against its own full copy of the (C, slots, dim) bank, the
+    per-class contraction and the argmax stay local, and the output labels
+    inherit the batch sharding — ZERO collectives in the whole cell.  The
+    bank is small by construction (the budget exists so it is), so
+    replication is the right trade at serving batch sizes.
+    Returns ``(model_shardings, x_sharding, labels_sharding)``.
+    """
+    repl = NamedSharding(mesh, P())
+    batch_axes = mesh.axis_names          # e.g. ("data", "model")
+    model_sh = ServeModel(sv_x=repl, alpha=repl, count=repl, gamma=repl,
+                          binary=binary)
+    return (model_sh, NamedSharding(mesh, P(batch_axes, None)),
+            NamedSharding(mesh, P(batch_axes)))
+
+
+def make_distributed_predict(mesh, *, dim: int, batch: int, slots: int,
+                             n_classes: int | None = None,
+                             bank_dtype="bfloat16"):
+    """The fused serve cell on the production mesh.
+
+    ``n_classes=None`` builds the binary cell (C = 1 bank, ±1 sign labels);
+    otherwise the multiclass argmax cell.  Returns ``(predict_fn,
+    args_abstract, in_shardings, out_sharding)`` with ``predict_fn(model, x)
+    -> labels``; jit it with the shardings and hand it to ``BatchQueue`` as
+    ``predict_fn`` (wrapped to close over the resident model) — the queue's
+    bucket set then bounds the pjit cache exactly as on one device.
+    """
+    binary = n_classes is None
+    c = 1 if binary else n_classes
+    model_sh, x_sh, y_sh = serve_shardings(mesh, binary=binary)
+
+    def predict_fn(model: ServeModel, x):
+        return predict_labels(model, x, impl="ref")
+
+    args = (
+        ServeModel(
+            sv_x=jax.ShapeDtypeStruct((c, slots, dim), jnp.dtype(bank_dtype)),
+            alpha=jax.ShapeDtypeStruct((c, slots), jnp.float32),
+            count=jax.ShapeDtypeStruct((c,), jnp.int32),
+            gamma=jax.ShapeDtypeStruct((), jnp.float32),
+            binary=binary),
+        jax.ShapeDtypeStruct((batch, dim), jnp.float32),
+    )
+    return predict_fn, args, (model_sh, x_sh), y_sh
 
 
 def make_distributed_step(cfg, mesh, dim: int,
@@ -207,7 +259,7 @@ def make_distributed_chunk_step(cfg, mesh, dim: int, chunk_steps: int,
 def lower_svm_cell(mesh, *, budget: int = 16384, dim: int = 1024,
                    batch: int = 8192, method: str = "lookup-wd",
                    layout: str = "replicated", n_classes: int = 8,
-                   stream_steps: int = 0):
+                   stream_steps: int = 0, step: str = "train"):
     """AOT-lower the production-scale BSGD cell (the paper-technique cell).
 
     Production sizing: budget 16k SVs, 1k features, 8k-example global
@@ -217,11 +269,27 @@ def lower_svm_cell(mesh, *, budget: int = 16384, dim: int = 1024,
     classes sharded over ``model``).  ``stream_steps > 0`` lowers the
     streaming-epoch chunk program instead — the ``stream_steps``-minibatch
     scan one resident chunk runs as (``make_distributed_chunk_step``).
+    ``step="predict"`` lowers the SERVING cell instead of a training step:
+    the fused multiclass scoring program on the exported bfloat16 bank,
+    bank replicated and the request batch sharded over every axis
+    (``layout="serve"``; ``layout="class"`` here selects the multiclass
+    bank, anything else the binary one) — the dryrun roofline for
+    ``launch.serve --arch svm_bsgd``.
     """
     cfg = BSGDConfig(budget=budget, lambda_=1e-6, gamma=2.0**-7, method=method,
                      batch_size=batch, dtype="float32", sv_dtype="bfloat16")
     if layout == "class":
         cfg = MulticlassSVMConfig(n_classes=n_classes, binary=cfg)
+    if step == "predict":
+        b = cfg.binary if layout == "class" else cfg
+        fn, args, in_sh, out_sh = make_distributed_predict(
+            mesh, dim=dim, batch=batch, slots=b.slots,
+            n_classes=n_classes if layout == "class" else None,
+            bank_dtype=b.sv_dtype or b.dtype)
+        with mesh:
+            lowered = jax.jit(fn, in_shardings=in_sh,
+                              out_shardings=out_sh).lower(*args)
+        return lowered, cfg
     table = cfg.table()
     if stream_steps > 0:
         step, args, in_sh, out_sh = make_distributed_chunk_step(

@@ -120,11 +120,14 @@ def class_kernel_rows(sv_x, x, gamma, *, impl: str = "auto"):
 
 def decision_function_multiclass(state: SVMState, x, gamma, *,
                                  impl: str = "auto"):
-    """Per-class scores f_c(x); x: (n, d) -> (C, n)."""
-    k = class_kernel_rows(state.sv_x, x, gamma, impl=impl)        # (C, n, slots)
+    """Per-class scores f_c(x); x: (n, d) -> (C, n).
+
+    Same fused fold as the serving cell (``kernels.ops.class_scores``): one
+    kernel launch against the flattened (C * slots, dim) bank.
+    """
     active = jnp.arange(state.alpha.shape[-1])[None, :] < state.count[:, None]
     alpha = jnp.where(active, state.alpha, 0.0)                   # (C, slots)
-    return jnp.einsum("cns,cs->cn", k.astype(alpha.dtype), alpha)
+    return kops.class_scores(x, state.sv_x, alpha, gamma, impl=impl)
 
 
 def predict_multiclass(state: SVMState, x, gamma, **kw):

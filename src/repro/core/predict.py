@@ -1,0 +1,391 @@
+"""Serving path: fused multiclass scoring + batched request queue.
+
+The paper's end product is a model that is cheap to *evaluate* — merging
+exists precisely so the SV bank stays small enough for fast prediction
+(Picard 2018 builds budgeted SV banks expressly for high-throughput batched
+scoring).  This module is the inference half of that bargain:
+
+  * ``ServeModel`` — the exported, inference-only view of a trained
+    ``SVMState``: the (C, slots, dim) SV bank (optionally quantized to
+    bfloat16 — halves the bank's HBM and gather traffic), fp32 alphas with
+    the active-count mask FOLDED IN at export time (inactive slots zeroed
+    once, so the hot scoring path carries no masking), and the kernel width.
+    Binary models export as C = 1 with ``binary=True`` (labels are ±1 signs
+    instead of argmax ids).
+  * ``predict_labels`` — ONE fused scoring program per microbatch: a single
+    ``rbf_matrix`` launch against the flattened (C * slots, dim) bank
+    (``kernels.ops.class_scores``, the same fold ``class_kernel_rows`` uses
+    for training margins), fp32 alpha accumulation, argmax on device.
+  * ``BatchQueue`` — microbatch assembly for a request stream: rows from
+    submitted requests are packed into full ``max_batch`` microbatches in
+    arrival order (a request may span microbatches; a microbatch may span
+    requests), and the ragged tail pads up to a power-of-two *bucket* so the
+    jit/pjit cache holds at most ``len(buckets)`` compiled shapes.  Because
+    each row's scores depend only on that row and the bank, queue labels are
+    bitwise the labels of one direct ``predict_labels`` call on the same
+    rows — any arrival pattern, any bucket geometry (pinned by
+    ``tests/core/test_serve_predict.py``).
+  * ``load_serve_model`` — reads a ``fit_stream`` / ``fit_multiclass_stream``
+    checkpoint (``repro.checkpoint`` layout) straight into a ``ServeModel``:
+    the state template is reconstructed from the manifest's recorded leaf
+    shapes/dtypes, so serving needs no training config object.
+
+The distributed form (bank replicated per device, requests sharded over
+every mesh axis — zero-collective scoring) is ``core.distributed``'s
+``layout="serve"``; ``launch.serve --arch svm_bsgd`` is the driver and
+``benchmarks/bench_serve.py`` the throughput/latency artifact.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from collections import deque
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .bsgd import SVMState
+from ..kernels import ops as kops
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeModel:
+    """Inference-only view of a trained budgeted SVM.
+
+    Attributes:
+      sv_x: (C, slots, dim) SV bank in the serving dtype (``bank_dtype`` at
+        export; bfloat16 halves bank HBM).  Binary models are C = 1.
+      alpha: (C, slots) float32 coefficients with inactive slots already
+        zeroed — scoring never masks.
+      count: (C,) int32 active-SV watermarks (reporting only).
+      gamma: () float32 RBF width.
+      binary: static — True when the model was a binary ``SVMState``; labels
+        are then ±1 signs (``bsgd.predict`` convention) instead of argmax
+        class ids.
+    """
+
+    sv_x: jax.Array
+    alpha: jax.Array
+    count: jax.Array
+    gamma: jax.Array
+    binary: bool = False
+
+    @property
+    def n_classes(self) -> int:
+        return self.sv_x.shape[0]
+
+    @property
+    def label_dtype(self):
+        return np.float32 if self.binary else np.int32
+
+
+jax.tree_util.register_dataclass(
+    ServeModel, ["sv_x", "alpha", "count", "gamma"], ["binary"])
+
+
+def export_model(state: SVMState, gamma, *, bank_dtype=None) -> ServeModel:
+    """Trained ``SVMState`` (binary or stacked multiclass) -> ``ServeModel``.
+
+    ``bank_dtype`` quantizes the SV bank (e.g. ``"bfloat16"``); alphas are
+    always carried in float32 and accumulation in scoring stays fp32, so
+    quantization touches only the kernel's inputs.  The active-count mask is
+    folded into alpha here — exactly the ``where(active, alpha, 0)`` the
+    training-side decision functions apply per call.
+    """
+    binary = state.sv_x.ndim == 2
+    sv_x, alpha, count = state.sv_x, state.alpha, state.count
+    if binary:
+        sv_x, alpha, count = sv_x[None], alpha[None], count[None]
+    active = jnp.arange(alpha.shape[-1])[None, :] < count[:, None]
+    alpha = jnp.where(active, alpha, 0.0).astype(jnp.float32)
+    if bank_dtype is not None:
+        sv_x = sv_x.astype(jnp.dtype(bank_dtype))
+    return ServeModel(sv_x=sv_x, alpha=alpha,
+                      count=count.astype(jnp.int32),
+                      gamma=jnp.asarray(gamma, jnp.float32), binary=binary)
+
+
+def serve_scores(model: ServeModel, x, *, impl: str = "auto"):
+    """Per-class decision scores for a request batch: (n, d) -> (C, n).
+
+    One fused kernel launch against the flattened (C * slots, dim) bank with
+    fp32 accumulation (``kernels.ops.class_scores``).
+    """
+    return kops.class_scores(x, model.sv_x, model.alpha, model.gamma,
+                             impl=impl)
+
+
+@partial(jax.jit, static_argnames=("impl",))
+def predict_labels(model: ServeModel, x, *, impl: str = "auto"):
+    """The fused serve cell: labels for a request batch, argmax on device.
+
+    Multiclass models return (n,) int32 class ids; binary models return the
+    (n,) float32 ±1 signs of ``bsgd.predict``.
+    """
+    scores = serve_scores(model, x, impl=impl)
+    if model.binary:
+        return jnp.sign(scores[0]).astype(jnp.float32)
+    return jnp.argmax(scores, axis=0).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Batched request queue
+# ---------------------------------------------------------------------------
+
+def default_buckets(max_batch: int, min_bucket: int = 8) -> tuple[int, ...]:
+    """Power-of-two pad targets up to (and always including) ``max_batch``."""
+    if min_bucket < 1:
+        raise ValueError(f"min_bucket={min_bucket} < 1")
+    buckets = []
+    b = min_bucket
+    while b < max_batch:
+        buckets.append(b)
+        b *= 2
+    buckets.append(max_batch)
+    return tuple(buckets)
+
+
+class BatchQueue:
+    """Microbatch assembly over a request stream, one fused cell per batch.
+
+    Requests (``(n_i, dim)`` row blocks) are packed into ``max_batch``-row
+    microbatches in arrival order; a full microbatch runs immediately at
+    ``submit`` (host memory stays O(max_batch), not O(stream)), and
+    ``drain`` flushes the ragged remainder padded up to the smallest bucket
+    that fits — so the set of compiled shapes is exactly ``buckets``, never
+    one-per-request-size.  Pad rows are zeros and their labels are dropped;
+    every real row's label is bitwise what one direct ``predict_labels``
+    call on the concatenated stream would produce.
+
+    ``predict_fn`` overrides the compute (the distributed serve path passes
+    a pjit'd cell over the mesh — ``make_distributed_predict``); it must map
+    a (b, dim) device/host array to (b,) labels.  Per-microbatch wall times
+    (including dispatch + host sync) land in ``latencies_s`` for the bench.
+    """
+
+    def __init__(self, model: ServeModel, *, max_batch: int = 256,
+                 min_bucket: int = 8, impl: str = "auto", predict_fn=None):
+        if max_batch < 1:
+            raise ValueError(f"max_batch={max_batch} < 1")
+        self.model = model
+        self.max_batch = max_batch
+        self.buckets = default_buckets(max_batch, min_bucket)
+        self._predict = (predict_fn if predict_fn is not None
+                         else partial(predict_labels, model, impl=impl))
+        self._pending: deque = deque()   # (ticket, rows ndarray, row_offset)
+        self._pending_rows = 0
+        self._need: dict[int, int] = {}          # ticket -> total rows
+        self._parts: dict[int, list] = {}        # ticket -> [(offset, labels)]
+        self._done: dict[int, np.ndarray] = {}
+        self._next_ticket = 0
+        self.latencies_s: list[float] = []
+        self.stats = {"rows": 0, "microbatches": 0, "padded_rows": 0,
+                      "bucket_counts": {}}
+
+    def warmup(self, dtype=np.float32) -> None:
+        """Pay every bucket shape's compile up front (honest tail latencies).
+
+        Runs the queue's OWN ``predict_fn`` — a warm call through any other
+        route can still miss the jit cache (a static arg passed explicitly
+        and the same value as a default key separate entries).
+        """
+        dim = self.model.sv_x.shape[-1]
+        for b in self.buckets:
+            jax.block_until_ready(self._predict(np.zeros((b, dim), dtype)))
+
+    def _bucket_for(self, n: int) -> int:
+        for b in self.buckets:
+            if n <= b:
+                return b
+        return self.max_batch
+
+    def submit(self, x) -> int:
+        """Enqueue one request of rows; returns its ticket."""
+        x = np.asarray(x)
+        if x.ndim != 2:
+            raise ValueError(f"request must be (n, dim), got {x.shape}")
+        ticket = self._next_ticket
+        self._next_ticket += 1
+        self._need[ticket] = x.shape[0]
+        self._parts[ticket] = []
+        if x.shape[0] == 0:
+            self._finish(ticket)
+        else:
+            self._pending.append((ticket, x, 0))
+            self._pending_rows += x.shape[0]
+        while self._pending_rows >= self.max_batch:
+            self._run_microbatch(self.max_batch)
+        return ticket
+
+    def drain(self) -> None:
+        """Flush the ragged tail (padded to its bucket); all tickets resolve."""
+        while self._pending_rows >= self.max_batch:
+            self._run_microbatch(self.max_batch)
+        if self._pending_rows:
+            self._run_microbatch(self._pending_rows)
+
+    def take(self, ticket: int) -> np.ndarray:
+        """Labels for a resolved ticket (``drain`` first for partial tails)."""
+        if ticket not in self._done:
+            raise KeyError(f"ticket {ticket} not resolved — drain() first")
+        return self._done.pop(ticket)
+
+    def _finish(self, ticket: int) -> None:
+        parts = sorted(self._parts.pop(ticket), key=lambda p: p[0])
+        got = np.concatenate([p[1] for p in parts]) if parts else \
+            np.zeros((0,), self.model.label_dtype)
+        assert got.shape[0] == self._need.pop(ticket)
+        self._done[ticket] = got
+
+    def _run_microbatch(self, n_real: int) -> None:
+        pad_to = self._bucket_for(n_real)
+        slices, rows = [], []
+        need = n_real
+        while need:
+            ticket, x, off = self._pending.popleft()
+            take = min(need, x.shape[0])
+            rows.append(x[:take])
+            slices.append((ticket, off, take))
+            if take < x.shape[0]:
+                self._pending.appendleft((ticket, x[take:], off + take))
+            need -= take
+        self._pending_rows -= n_real
+        xb = np.concatenate(rows) if len(rows) > 1 else rows[0]
+        if pad_to > n_real:
+            xb = np.concatenate(
+                [xb, np.zeros((pad_to - n_real, xb.shape[1]), xb.dtype)])
+        t0 = time.perf_counter()
+        labels = self._predict(xb)
+        labels = np.asarray(jax.block_until_ready(labels))
+        self.latencies_s.append(time.perf_counter() - t0)
+        self.stats["rows"] += n_real
+        self.stats["microbatches"] += 1
+        self.stats["padded_rows"] += pad_to - n_real
+        self.stats["bucket_counts"][pad_to] = \
+            self.stats["bucket_counts"].get(pad_to, 0) + 1
+        pos = 0
+        for ticket, off, take in slices:
+            self._parts[ticket].append((off, labels[pos:pos + take]))
+            pos += take
+            done = sum(p[1].shape[0] for p in self._parts[ticket])
+            if done == self._need[ticket]:
+                self._finish(ticket)
+
+
+def serve_requests(model: ServeModel, requests, **queue_kw) -> list[np.ndarray]:
+    """Convenience wrapper: run a whole request list through a fresh
+    ``BatchQueue``; returns per-request label arrays in submission order."""
+    q = BatchQueue(model, **queue_kw)
+    tickets = [q.submit(r) for r in requests]
+    q.drain()
+    return [q.take(t) for t in tickets]
+
+
+def ragged_trace_sizes(total_rows: int, max_batch: int, rng) -> list[int]:
+    """A deterministic ragged request-size trace summing to ``total_rows``
+    (sizes drawn in [1, max_batch] from the caller's ``rng``)."""
+    sizes, left = [], total_rows
+    while left:
+        s = int(min(left, rng.integers(1, max_batch + 1)))
+        sizes.append(s)
+        left -= s
+    return sizes
+
+
+def drive_trace(model: ServeModel, req_x, sizes, *, max_batch: int = 256,
+                min_bucket: int = 8, impl: str = "auto",
+                predict_fn=None) -> dict:
+    """Push one request trace through a fresh warmed queue and measure it.
+
+    The shared serve-loop used by ``launch.serve_svm`` and
+    ``benchmarks.bench_serve``: submits ``sizes``-shaped requests from
+    ``req_x`` in order, drains, ASSERTS the labels are bitwise one direct
+    ``predict_labels`` call (the parity gate runs on every invocation), and
+    returns rows/sec + p50/p99 microbatch latency + queue stats.
+    """
+    queue = BatchQueue(model, max_batch=max_batch, min_bucket=min_bucket,
+                       impl=impl, predict_fn=predict_fn)
+    queue.warmup()
+    t0 = time.perf_counter()
+    tickets, off = [], 0
+    for s in sizes:
+        tickets.append(queue.submit(req_x[off:off + s]))
+        off += s
+    queue.drain()
+    labels = np.concatenate([queue.take(t) for t in tickets])
+    wall = time.perf_counter() - t0
+    direct = np.asarray(predict_labels(model, req_x[:off], impl=impl))
+    assert (labels == direct).all(), "queue/direct parity violated"
+    lat = np.asarray(queue.latencies_s)
+    return {
+        "rows": off, "requests": len(sizes),
+        "bank_dtype": str(model.sv_x.dtype),
+        "rows_per_s": round(off / wall, 1),
+        "microbatches": queue.stats["microbatches"],
+        "padded_rows": queue.stats["padded_rows"],
+        "bucket_counts": queue.stats["bucket_counts"],
+        "p50_ms": round(float(np.percentile(lat, 50)) * 1e3, 3),
+        "p99_ms": round(float(np.percentile(lat, 99)) * 1e3, 3),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint -> ServeModel
+# ---------------------------------------------------------------------------
+
+def load_serve_model(ckpt_dir: str, gamma, *, step: int | None = None,
+                     bank_dtype=None) -> ServeModel:
+    """Export a ``ServeModel`` straight from a training checkpoint.
+
+    Works on any ``repro.checkpoint`` directory whose tree carries an
+    ``SVMState`` under the ``state`` key — which is exactly what
+    ``fit_stream`` / ``fit_multiclass_stream`` write (mid-epoch checkpoints
+    included: serving ignores the epoch cursor/carry leaves).  The state
+    template is rebuilt from the manifest's recorded leaf shapes/dtypes, so
+    no training config is needed; binary vs multiclass is inferred from the
+    bank's rank.  ``gamma`` is a hyperparameter, not a checkpointed array —
+    pass the training value.
+    """
+    from .. import checkpoint as ckpt
+
+    if step is None:
+        step = ckpt.latest_step(ckpt_dir)
+        if step is None:
+            raise ValueError(f"{ckpt_dir}: no complete checkpoint found")
+    manifest = os.path.join(ckpt_dir, f"step_{step:08d}", "manifest.json")
+    try:
+        with open(manifest) as f:
+            leaves = json.load(f).get("leaves")
+    except FileNotFoundError:
+        raise ValueError(f"{ckpt_dir}: step {step} has no manifest — not a "
+                         "complete checkpoint") from None
+    except json.JSONDecodeError as e:
+        raise ValueError(f"{ckpt_dir}: step {step} manifest is corrupt "
+                         f"({e})") from None
+    if not isinstance(leaves, dict):
+        raise ValueError(f"{ckpt_dir}: step {step} manifest records no "
+                         "leaves — not a checkpoint this library wrote")
+    needed = ("state/sv_x", "state/alpha", "state/count", "state/step",
+              "state/n_inserts", "state/n_merges")
+    missing = [k for k in needed if k not in leaves]
+    if missing:
+        raise ValueError(
+            f"{ckpt_dir}: step {step} is not an SVM training checkpoint "
+            f"(missing leaves {missing})")
+
+    def sds(key):
+        spec = leaves[key]
+        return jax.ShapeDtypeStruct(tuple(spec["shape"]),
+                                    jnp.dtype(spec["dtype"]))
+
+    template = SVMState(
+        sv_x=sds("state/sv_x"), alpha=sds("state/alpha"),
+        count=sds("state/count"), step=sds("state/step"),
+        n_inserts=sds("state/n_inserts"), n_merges=sds("state/n_merges"),
+        kmat=sds("state/kmat") if "state/kmat" in leaves else None)
+    state = ckpt.load(ckpt_dir, step, {"state": template})["state"]
+    return export_model(state, gamma, bank_dtype=bank_dtype)

@@ -76,6 +76,28 @@ def rbf_row(sv_x, x, gamma, *, impl: str = "auto"):
 
 
 # --------------------------------------------------------------------------
+# Class-batched decision scoring (the serving cell's contraction)
+# --------------------------------------------------------------------------
+@partial(jax.jit, static_argnames=("impl",))
+def class_scores(x, sv_x, alpha, gamma, *, impl: str = "auto"):
+    """All-class decision scores from ONE kernel launch: (C, n).
+
+    x: (n, d) request rows; sv_x: (C, slots, d) stacked SV bank; alpha:
+    (C, slots) coefficients (inactive slots zeroed by the caller).  The
+    class axis folds into the SV axis so the kernel block is a single
+    (n, C * slots) ``rbf_matrix`` — one Pallas launch / one XLA matmul no
+    matter how many classes — then a per-class contraction over slots with
+    accumulation in ``alpha``'s dtype (fp32 in the serving path, so a
+    bfloat16 bank only quantizes the kernel's *inputs*).  Oracle:
+    ``ref.class_scores`` (C sequential kernel calls).
+    """
+    c, slots, d = sv_x.shape
+    k = rbf_matrix(x, sv_x.reshape(c * slots, d), gamma, impl=impl)
+    k = k.reshape(x.shape[0], c, slots)
+    return jnp.einsum("ncs,cs->cn", k.astype(alpha.dtype), alpha)
+
+
+# --------------------------------------------------------------------------
 # Merge-candidate scoring against a precomputed table (Lookup-WD / Lookup-h)
 # --------------------------------------------------------------------------
 @partial(jax.jit, static_argnames=("impl", "block_s"))

@@ -102,6 +102,18 @@ def multi_merge_scores(alpha, kappa_rows, valid, a_min, h_table, wd_table):
                                    h_table, wd_table)
 
 
+def class_scores(x, sv_x, alpha, gamma):
+    """Per-class decision scores, scored class-by-class (the serving oracle).
+
+    x: (n, d); sv_x: (C, slots, d); alpha: (C, slots) with inactive slots
+    already zeroed -> (C, n).  C sequential kernel calls — the semantics
+    the fused ``ops.class_scores`` fold is tested against.
+    """
+    return jnp.stack([
+        rbf_matrix(x, sv_x[c], gamma).astype(alpha.dtype) @ alpha[c]
+        for c in range(sv_x.shape[0])])
+
+
 def multi_merge_scores_classes(alpha, kappa_rows, valid, a_min, h_table,
                                wd_table):
     """Class-batched oracle: alpha (C, s); kappa_rows, valid (C, P, s);

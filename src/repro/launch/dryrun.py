@@ -46,12 +46,13 @@ def run_svm_cell(*, multi_pod: bool, method: str = "lookup-wd",
                  out_dir: str | None = None, budget: int = 16384,
                  dim: int = 1024, batch: int = 8192, verbose=True,
                  layout: str = "replicated", n_classes: int = 8,
-                 stream_steps: int = 0) -> dict:
+                 stream_steps: int = 0, step: str = "train") -> dict:
     """The paper-technique cell: distributed minibatch BSGD on the mesh.
 
     ``stream_steps > 0`` lowers the streaming-epoch chunk program (one
     resident chunk = a ``stream_steps``-minibatch donated-state scan) instead
-    of the single-step cell."""
+    of the single-step cell.  ``step="predict"`` lowers the serving cell
+    (fused scoring on the exported bank, ``layout="serve"`` sharding)."""
     from ..core.distributed import lower_svm_cell
 
     mesh = make_production_mesh(multi_pod=multi_pod)
@@ -59,7 +60,7 @@ def run_svm_cell(*, multi_pod: bool, method: str = "lookup-wd",
     lowered, cfg = lower_svm_cell(mesh, budget=budget, dim=dim, batch=batch,
                                   method=method, layout=layout,
                                   n_classes=n_classes,
-                                  stream_steps=stream_steps)
+                                  stream_steps=stream_steps, step=step)
     t_lower = time.time() - t0
     t0 = time.time()
     compiled = lowered.compile()
@@ -73,7 +74,9 @@ def run_svm_cell(*, multi_pod: bool, method: str = "lookup-wd",
     if stream_steps > 0:
         model_flops *= stream_steps
     rec = rl.analyze(compiled, arch=f"svm_bsgd_{method}", shape=f"b{budget}",
-                     mesh=mesh, strategy=layout, model_flops_global=model_flops)
+                     mesh=mesh,
+                     strategy="serve" if step == "predict" else layout,
+                     model_flops_global=model_flops)
     result = rec.to_json()
     result.update(lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
                   multi_pod=multi_pod)
@@ -92,6 +95,8 @@ def run_svm_cell(*, multi_pod: bool, method: str = "lookup-wd",
         tag = f"svm_bsgd_{method}.b{budget}.{'pod2' if multi_pod else 'pod1'}.{layout}"
         if stream_steps > 0:
             tag += f".stream{stream_steps}"
+        if step == "predict":
+            tag += ".predict"
         with open(os.path.join(out_dir, tag + ".json"), "w") as f:
             json.dump(result, f, indent=2)
     return result
@@ -166,6 +171,10 @@ def main() -> None:
     ap.add_argument("--svm-stream-steps", type=int, default=0,
                     help="> 0: lower the streaming chunk program (a "
                          "stream-steps-minibatch donated-state scan)")
+    ap.add_argument("--svm-step", default="train",
+                    choices=["train", "predict"],
+                    help="predict: lower the serving cell (fused scoring on "
+                         "the exported bank, layout='serve' sharding)")
     ap.add_argument("--seq-shard-attn", action="store_true",
                     help="context-parallel attention (hillclimb variant)")
     ap.add_argument("--keep-scan", action="store_true",
@@ -188,7 +197,7 @@ def main() -> None:
         run_svm_cell(multi_pod=args.multi_pod, method=args.svm_method,
                      out_dir=args.out, layout=args.svm_layout,
                      n_classes=args.svm_classes,
-                     stream_steps=args.svm_stream_steps)
+                     stream_steps=args.svm_stream_steps, step=args.svm_step)
         return
 
     failures = []

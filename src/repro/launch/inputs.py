@@ -58,6 +58,26 @@ def svm_chunk_specs(dim: int, chunk_steps: int, batch_size: int, *,
     }
 
 
+def svm_serve_specs(dim: int, batch: int, slots: int, *,
+                    n_classes: int | None = None, bank_dtype="bfloat16"):
+    """Abstract serving inputs for the SVM predict cell.
+
+    The serve cell scores a ``(batch, dim)`` float32 request block against an
+    exported ``(C, slots, dim)`` bank in ``bank_dtype`` with fp32 alphas
+    (``core.predict.ServeModel``); ``n_classes=None`` is the binary C = 1
+    bank.  The launch serve test pins this against
+    ``make_distributed_predict``'s real abstract arguments.
+    """
+    c = 1 if n_classes is None else n_classes
+    return {
+        "sv_x": sds((c, slots, dim), jnp.dtype(bank_dtype)),
+        "alpha": sds((c, slots), jnp.float32),
+        "count": sds((c,), jnp.int32),
+        "gamma": sds((), jnp.float32),
+        "x": sds((batch, dim), jnp.float32),
+    }
+
+
 def abstract_params(cfg):
     """(params, axes) with ShapeDtypeStruct leaves (axes tree is concrete —
     ``Axes`` markers are static objects created during tracing)."""

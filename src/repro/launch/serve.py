@@ -1,12 +1,24 @@
-"""Serving driver: prefill + batched decode against any arch config.
+"""Serving driver: LM prefill/decode, and the budgeted-SVM request server.
 
 CPU-runnable with smoke configs; the same step functions are what the
-dry-run lowers for the production mesh.  Supports the exact cache (ring
-buffer for SWA archs) and the --budgeted-kv option (the paper-technique
-transfer: merge-based cache maintenance, core/budgeted_kv.py).
+dry-run lowers for the production mesh.  Two arms:
+
+  * LM archs — prefill + batched decode with the exact cache (ring buffer
+    for SWA archs); see ``serve``.
+  * ``--arch svm_bsgd`` — the trained budgeted model as a scoring service
+    (``serve_svm``): a ``core.predict.BatchQueue`` assembles request rows
+    into bucket-padded microbatches and each microbatch runs the fused
+    multiclass predict cell (one ``rbf_matrix`` launch against the exported
+    bank, argmax on device).  ``--model`` points at a ``fit_stream`` /
+    ``fit_multiclass_stream`` checkpoint directory (mid-epoch checkpoints
+    serve fine); without it a small in-process model is trained first (the
+    smoke/demo path).  ``--bank-dtype bfloat16`` serves the quantized bank.
 
     PYTHONPATH=src python -m repro.launch.serve --arch smollm_360m --smoke \
         --batch 4 --prompt-len 32 --gen 32
+    PYTHONPATH=src python -m repro.launch.serve --arch svm_bsgd --smoke
+    PYTHONPATH=src python -m repro.launch.serve --arch svm_bsgd \
+        --model ckpts/run1 --gamma 0.5 --bank-dtype bfloat16
 """
 from __future__ import annotations
 
@@ -15,6 +27,7 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..configs import get, get_smoke
 from ..models import decode_step, init_cache, init_lm, prefill
@@ -68,6 +81,63 @@ def serve(cfg, *, batch: int = 4, prompt_len: int = 32, gen: int = 32,
     return toks_out
 
 
+def serve_svm(*, model_dir: str | None = None, gamma: float = 0.5,
+              bank_dtype: str | None = None, n_classes: int = 8,
+              budget: int = 64, dim: int = 16, train_rows: int = 2048,
+              rows: int = 4096, max_batch: int = 256, min_bucket: int = 8,
+              seed: int = 0, verbose: bool = True) -> dict:
+    """Serve a budgeted SVM: batched request queue over the fused predict cell.
+
+    Loads ``model_dir`` (any ``repro.checkpoint`` dir holding an ``SVMState``
+    — what the streaming trainers write) or, without one, trains a small
+    ``n_classes``-blob model in-process.  A deterministic request trace of
+    ``rows`` total rows with ragged request sizes is pushed through a
+    ``BatchQueue`` (``max_batch`` microbatches, power-of-two pad buckets) and
+    the labels are checked bitwise against one direct ``predict_labels``
+    call — the parity gate runs on every invocation, not just in tests.
+    Returns the stats dict (rows/sec, p50/p99 microbatch latency, bucket
+    histogram).
+    """
+    from ..core import (MulticlassSVMConfig, drive_trace, export_model,
+                        fit_multiclass, load_serve_model, ragged_trace_sizes)
+    from ..data import make_blobs_multiclass
+
+    if model_dir:
+        model = load_serve_model(model_dir, gamma, bank_dtype=bank_dtype)
+        if verbose:
+            print(f"[serve] loaded {model_dir}: C={model.n_classes} "
+                  f"slots={model.sv_x.shape[1]} dim={model.sv_x.shape[2]} "
+                  f"bank={model.sv_x.dtype} "
+                  f"sv_count={np.asarray(model.count).tolist()}")
+    else:
+        cfg = MulticlassSVMConfig.create(
+            n_classes, budget=budget, lambda_=1e-3, gamma=gamma, batch_size=8)
+        x, y = make_blobs_multiclass(jax.random.PRNGKey(seed), train_rows,
+                                     dim, n_classes=n_classes, sep=2.5)
+        state = fit_multiclass(cfg, x, y, epochs=1, seed=seed)
+        model = export_model(state, gamma, bank_dtype=bank_dtype)
+        if verbose:
+            print(f"[serve] trained in-process: C={n_classes} budget={budget} "
+                  f"dim={dim} bank={model.sv_x.dtype}")
+
+    dim = model.sv_x.shape[2]
+    rng = np.random.default_rng(seed)
+    req_x = rng.standard_normal((rows, dim)).astype(np.float32)
+    result = drive_trace(model, req_x, ragged_trace_sizes(rows, max_batch, rng),
+                         max_batch=max_batch, min_bucket=min_bucket)
+    result.update(dim=dim, n_classes=model.n_classes)
+    if verbose:
+        print(f"[serve] {result['rows']} rows in {result['requests']} "
+              f"requests -> "
+              f"{result['microbatches']} microbatches "
+              f"(buckets {result['bucket_counts']}, "
+              f"{result['padded_rows']} pad rows)")
+        print(f"[serve] {result['rows_per_s']} rows/s; batch latency "
+              f"p50={result['p50_ms']} ms p99={result['p99_ms']} ms; "
+              f"queue == direct predict (bitwise)")
+    return result
+
+
 def _cache_compatible(cache, pf_cache) -> bool:
     try:
         return (pf_cache is not None and
@@ -83,7 +153,31 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=32)
+    # svm_bsgd arm
+    ap.add_argument("--model", default=None, metavar="CKPT_DIR",
+                    help="svm_bsgd: checkpoint directory to serve "
+                         "(fit_stream / fit_multiclass_stream layout)")
+    ap.add_argument("--gamma", type=float, default=0.5,
+                    help="svm_bsgd: RBF width the model was trained with")
+    ap.add_argument("--bank-dtype", default=None,
+                    choices=(None, "float32", "bfloat16"),
+                    help="svm_bsgd: quantize the served SV bank")
+    ap.add_argument("--rows", type=int, default=4096,
+                    help="svm_bsgd: total request rows in the trace")
+    ap.add_argument("--max-batch", type=int, default=256,
+                    help="svm_bsgd: microbatch rows per fused predict call")
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    if args.arch == "svm_bsgd":
+        kw = {}
+        if args.smoke:
+            kw = dict(rows=1024, max_batch=64, budget=32, train_rows=1024,
+                      n_classes=4, bank_dtype=args.bank_dtype or "bfloat16")
+        serve_svm(model_dir=args.model, gamma=args.gamma, seed=args.seed,
+                  **(kw if args.smoke else
+                     dict(rows=args.rows, max_batch=args.max_batch,
+                          bank_dtype=args.bank_dtype)))
+        return
     cfg = get_smoke(args.arch) if args.smoke else get(args.arch)
     with make_host_mesh():
         serve(cfg, batch=args.batch, prompt_len=args.prompt_len, gen=args.gen)

@@ -1,9 +1,62 @@
 import os
+import subprocess
 import sys
 
+import pytest
+
 # Tests import the package from src/ (works with or without PYTHONPATH=src).
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+sys.path.insert(0, SRC)
 
 # Tests must see the single real CPU device (the 512-device env is exclusive
 # to repro.launch.dryrun subprocesses).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+
+def subprocess_env(n_devices: int = 8, env_extra: dict | None = None) -> dict:
+    """Env for multi-device ``python -c`` children, shared by every
+    launch/distributed/serve subprocess test.
+
+    Forces ``JAX_PLATFORMS=cpu``: with it unset, a jax[tpu] install probes
+    the cloud TPU metadata service and stalls for ~8 minutes per child on
+    machines without one — the forced host-device count is a CPU-platform
+    feature anyway.  Centralized here so a new subprocess test cannot
+    reintroduce the hang by forgetting the variable.
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = os.path.abspath(SRC) + os.pathsep + env.get(
+        "PYTHONPATH", "")
+    env["JAX_PLATFORMS"] = "cpu"
+    if env_extra:
+        env.update(env_extra)
+    return env
+
+
+@pytest.fixture(name="subprocess_env")
+def subprocess_env_fixture():
+    """The env-builder itself, for tests that spawn CLI children directly
+    (``python -m repro.launch.serve ...``) rather than ``python -c`` code."""
+    return subprocess_env
+
+
+@pytest.fixture
+def run_py():
+    """Run a code string in an isolated multi-device child; returns stdout.
+
+    The one sanctioned way to run multi-device scenarios from the suite
+    (smoke tests must keep seeing 1 device, so every such scenario is an
+    isolated ``python -c`` child with its own forced host-device count and
+    the TPU probe disabled — see ``subprocess_env``).
+    """
+
+    def _run(code: str, n_devices: int = 8, timeout: int = 900,
+             env_extra: dict | None = None) -> str:
+        proc = subprocess.run(
+            [sys.executable, "-c", code], capture_output=True, text=True,
+            timeout=timeout, env=subprocess_env(n_devices, env_extra))
+        assert proc.returncode == 0, \
+            f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
+        return proc.stdout
+
+    return _run

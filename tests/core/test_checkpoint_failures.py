@@ -1,0 +1,141 @@
+"""Checkpoint failure modes surface as clear ``ValueError``s, and the
+donated-state streaming path stays safe.
+
+The streaming trainers and the serving loader both resume from on-disk
+state written by someone else (possibly a dead process, possibly a human
+moving directories around); every way that state can be wrong must produce
+an actionable ``ValueError`` naming the file and the mismatch — never a
+raw ``FileNotFoundError`` / ``JSONDecodeError`` / ``BadZipFile`` traceback
+from three layers down.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint as ckpt
+from repro.core import BSGDConfig, fit_stream, init_state, train_chunk
+from repro.data import ArrayChunks, make_blobs
+
+
+def _saved(tmp_path, step=3):
+    d = str(tmp_path / "ck")
+    ckpt.save(d, step, {"w": jnp.arange(6.0).reshape(2, 3)},
+              metadata={"kind": "test", "cursor": 7})
+    return d
+
+
+def test_load_metadata_roundtrip(tmp_path):
+    d = _saved(tmp_path)
+    assert ckpt.load_metadata(d, 3) == {"kind": "test", "cursor": 7}
+
+
+def test_load_metadata_missing_manifest(tmp_path):
+    d = _saved(tmp_path)
+    os.remove(os.path.join(d, "step_00000003", "manifest.json"))
+    with pytest.raises(ValueError, match="no manifest"):
+        ckpt.load_metadata(d, 3)
+
+
+def test_load_metadata_missing_step(tmp_path):
+    d = _saved(tmp_path)
+    with pytest.raises(ValueError, match="no manifest"):
+        ckpt.load_metadata(d, 99)
+
+
+def test_load_metadata_corrupt_manifest(tmp_path):
+    d = _saved(tmp_path)
+    path = os.path.join(d, "step_00000003", "manifest.json")
+    with open(path, "w") as f:
+        f.write('{"metadata": {"trunc')       # mid-write truncation
+    with pytest.raises(ValueError, match="corrupt"):
+        ckpt.load_metadata(d, 3)
+
+
+def test_load_truncated_arrays(tmp_path):
+    d = _saved(tmp_path)
+    path = os.path.join(d, "step_00000003", "arrays.npz")
+    data = open(path, "rb").read()
+    with open(path, "wb") as f:
+        f.write(data[: len(data) // 2])       # torn zip
+    with pytest.raises(ValueError, match="truncated or corrupt"):
+        ckpt.load(d, 3, {"w": jnp.zeros((2, 3))})
+
+
+def test_load_missing_arrays(tmp_path):
+    d = _saved(tmp_path)
+    os.remove(os.path.join(d, "step_00000003", "arrays.npz"))
+    with pytest.raises(ValueError, match="no arrays.npz"):
+        ckpt.load(d, 3, {"w": jnp.zeros((2, 3))})
+
+
+def test_load_missing_leaves_is_valueerror(tmp_path):
+    d = _saved(tmp_path)
+    with pytest.raises(ValueError, match="missing leaves"):
+        ckpt.load(d, 3, {"w": jnp.zeros((2, 3)), "extra": jnp.zeros(())})
+
+
+def _stream_fixture(tmp_path, *, seed=0, chunk_rows=64):
+    cfg = BSGDConfig(budget=12, lambda_=1e-3, gamma=0.5, batch_size=4)
+    x, y = make_blobs(jax.random.PRNGKey(0), 256, 5, sep=1.5)
+    source = ArrayChunks(np.asarray(x), np.asarray(y), chunk_rows=chunk_rows)
+    d = str(tmp_path / "stream_ck")
+    fit_stream(cfg, source, epochs=1, seed=seed, ckpt_dir=d, ckpt_every=2,
+               max_chunks=2)
+    return cfg, d
+
+
+def test_stream_resume_cursor_seed_mismatch(tmp_path):
+    """The cursor is only meaningful against the same shuffle: resuming with
+    another seed must refuse, not silently re-train / skip rows."""
+    cfg, d = _stream_fixture(tmp_path)
+    x, y = make_blobs(jax.random.PRNGKey(0), 256, 5, sep=1.5)
+    source = ArrayChunks(np.asarray(x), np.asarray(y), chunk_rows=64)
+    with pytest.raises(ValueError, match="seed"):
+        fit_stream(cfg, source, epochs=1, seed=1, ckpt_dir=d)
+
+
+def test_stream_resume_rechunked_source_mismatch(tmp_path):
+    cfg, d = _stream_fixture(tmp_path)
+    x, y = make_blobs(jax.random.PRNGKey(0), 256, 5, sep=1.5)
+    rechunked = ArrayChunks(np.asarray(x), np.asarray(y), chunk_rows=32)
+    with pytest.raises(ValueError, match="re-chunked"):
+        fit_stream(cfg, rechunked, epochs=1, seed=0, ckpt_dir=d)
+
+
+def test_stream_resume_foreign_checkpoint_kind(tmp_path):
+    """A non-streaming checkpoint in the directory must refuse cleanly."""
+    cfg = BSGDConfig(budget=12, lambda_=1e-3, gamma=0.5, batch_size=4)
+    x, y = make_blobs(jax.random.PRNGKey(0), 128, 5, sep=1.5)
+    source = ArrayChunks(np.asarray(x), np.asarray(y), chunk_rows=64)
+    d = str(tmp_path / "foreign")
+    ckpt.save(d, 5, {"params": jnp.zeros((2,))})   # no stream metadata
+    with pytest.raises(ValueError, match="not a .*streaming checkpoint"):
+        fit_stream(cfg, source, epochs=1, seed=0, ckpt_dir=d)
+
+
+def test_init_state_counter_buffers_are_distinct():
+    """Regression (PR 3): the streaming path donates the whole state and XLA
+    rejects one buffer donated twice — the zero-initialized counters must
+    not share storage."""
+    cfg = BSGDConfig(budget=8, lambda_=1e-3, gamma=0.5, batch_size=4)
+    st = init_state(cfg, 5)
+    ptrs = {a.unsafe_buffer_pointer()
+            for a in (st.count, st.n_inserts, st.n_merges)}
+    assert len(ptrs) == 3
+
+
+def test_train_chunk_double_donation_safe():
+    """The donated chunk program runs on a fresh ``init_state`` (this is the
+    exact call that crashed when counters aliased) — twice, to cover the
+    donate-the-result path too."""
+    cfg = BSGDConfig(budget=8, lambda_=1e-3, gamma=0.5, batch_size=4)
+    x, y = make_blobs(jax.random.PRNGKey(2), 32, 5, sep=1.5)
+    xc = jnp.asarray(x).reshape(8, 4, 5)
+    yc = jnp.asarray(y).reshape(8, 4)
+    st = init_state(cfg, 5)
+    st = train_chunk(cfg, cfg.table(), st, xc, yc)
+    st = train_chunk(cfg, cfg.table(), st, xc, yc)
+    assert int(st.count) > 0

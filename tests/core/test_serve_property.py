@@ -1,0 +1,96 @@
+"""Hypothesis property tests for the serving engine.
+
+Decision-identity of the fused serve cell against per-class scoring loops
+across random states / budgets / class counts, queue bitwise parity across
+arbitrary arrival patterns, and bf16-bank decision stability on
+margin-separated rows.  Ties are excluded the principled way: label equality
+is asserted only where the reference top-2 score gap exceeds float noise
+(the fused fold may differ from the loop by ULPs, and a ULP can legally
+flip an exact tie).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need the 'test' extra")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (SVMState, decision_function, export_model,
+                        predict_labels, serve_requests, serve_scores)
+
+COMMON = dict(deadline=None, max_examples=25)
+GAMMA = 0.7
+
+
+def random_stacked_state(seed: int, c: int, slots: int, dim: int) -> SVMState:
+    """A synthetic trained-looking stacked state: random bank/coefficients,
+    per-class active counts anywhere in [0, slots]."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    z = jnp.zeros((c,), jnp.int32)
+    return SVMState(
+        sv_x=jax.random.normal(ks[0], (c, slots, dim)),
+        alpha=jax.random.normal(ks[1], (c, slots)) * 0.5,
+        count=jax.random.randint(ks[2], (c,), 0, slots + 1),
+        step=jnp.ones((c,), jnp.int32), n_inserts=z, n_merges=z)
+
+
+@given(seed=st.integers(0, 2**30), c=st.integers(2, 6),
+       slots=st.integers(2, 24), dim=st.integers(1, 8))
+@settings(**COMMON)
+def test_fused_cell_decision_identical_to_class_loop(seed, c, slots, dim):
+    state = random_stacked_state(seed, c, slots, dim)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (17, dim))
+    model = export_model(state, GAMMA)
+
+    # reference: C sequential binary decision functions (the class loop)
+    loop_scores = np.stack([
+        np.asarray(decision_function(
+            SVMState(sv_x=state.sv_x[q], alpha=state.alpha[q],
+                     count=state.count[q], step=state.step[q],
+                     n_inserts=state.n_inserts[q], n_merges=state.n_merges[q]),
+            x, GAMMA)) for q in range(c)])
+    fused_scores = np.asarray(serve_scores(model, x))
+    np.testing.assert_allclose(fused_scores, loop_scores, rtol=1e-5, atol=1e-5)
+
+    top2 = np.sort(loop_scores, axis=0)[-2:]
+    clear = (top2[1] - top2[0]) > 1e-4            # exclude near-ties
+    got = np.asarray(predict_labels(model, x))
+    np.testing.assert_array_equal(got[clear], loop_scores.argmax(0)[clear])
+
+
+@given(seed=st.integers(0, 2**30),
+       sizes=st.lists(st.integers(0, 40), min_size=1, max_size=12),
+       max_batch=st.integers(1, 48), min_bucket=st.integers(1, 8))
+@settings(**COMMON)
+def test_queue_bitwise_parity_any_arrival_pattern(seed, sizes, max_batch,
+                                                  min_bucket):
+    state = random_stacked_state(seed, 3, 8, 4)
+    model = export_model(state, GAMMA)
+    n = sum(sizes)
+    x = np.asarray(jax.random.normal(jax.random.PRNGKey(seed + 2), (n + 1, 4)))
+    reqs, off = [], 0
+    for s in sizes:
+        reqs.append(x[off:off + s])
+        off += s
+    labels = serve_requests(model, reqs, max_batch=max_batch,
+                            min_bucket=min_bucket)
+    assert [l.shape[0] for l in labels] == sizes
+    if n:
+        direct = np.asarray(predict_labels(model, x[:n]))
+        np.testing.assert_array_equal(np.concatenate(labels), direct)
+
+
+@given(seed=st.integers(0, 2**30))
+@settings(**COMMON)
+def test_bf16_bank_matches_fp32_decisions_off_the_margin(seed):
+    state = random_stacked_state(seed, 4, 16, 6)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 3), (64, 6))
+    fp32 = export_model(state, GAMMA)
+    bf16 = export_model(state, GAMMA, bank_dtype="bfloat16")
+    scores = np.asarray(serve_scores(fp32, x))
+    top2 = np.sort(scores, axis=0)[-2:]
+    clear = (top2[1] - top2[0]) > 0.05            # margin-separated rows
+    l32 = np.asarray(predict_labels(fp32, x))
+    l16 = np.asarray(predict_labels(bf16, x))
+    np.testing.assert_array_equal(l16[clear], l32[clear])

@@ -1,33 +1,12 @@
 """Distributed correctness, run in subprocesses with 8 host devices.
 
 Smoke tests must see 1 device, so every multi-device scenario is an isolated
-``python -c`` child with its own ``--xla_force_host_platform_device_count=8``.
+``python -c`` child with its own ``--xla_force_host_platform_device_count=8``
+(the ``run_py`` fixture in ``tests/conftest.py``).
 """
-import os
-import subprocess
-import sys
-
-SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "..", "src"))
 
 
-def run_py(code: str, n_devices: int = 8, timeout: int = 600, env_extra=None):
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
-    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
-    # force the CPU platform: with JAX_PLATFORMS unset, a jax[tpu] install
-    # probes the cloud TPU metadata service and stalls for minutes on
-    # machines without one; the forced host-device count is a CPU-platform
-    # feature anyway
-    env["JAX_PLATFORMS"] = "cpu"
-    if env_extra:
-        env.update(env_extra)
-    proc = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                          text=True, timeout=timeout, env=env)
-    assert proc.returncode == 0, f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
-    return proc.stdout
-
-
-def test_dp_tp_train_step_matches_single_device():
+def test_dp_tp_train_step_matches_single_device(run_py):
     """The pjit'd train step on a 2x4 mesh reproduces single-device math."""
     run_py(r"""
 import jax, jax.numpy as jnp, numpy as np
@@ -68,7 +47,7 @@ print("OK dp+tp parity", float(loss1), err)
 """)
 
 
-def test_fsdp_strategy_matches_tp():
+def test_fsdp_strategy_matches_tp(run_py):
     run_py(r"""
 import jax, jax.numpy as jnp
 from repro.configs import get_smoke
@@ -101,7 +80,7 @@ print("OK fsdp parity", losses)
 """)
 
 
-def test_compressed_psum_within_quantization_error():
+def test_compressed_psum_within_quantization_error(run_py):
     run_py(r"""
 import jax, jax.numpy as jnp, numpy as np
 from functools import partial
@@ -128,7 +107,7 @@ print("OK compressed psum", err, scale)
 """)
 
 
-def test_pipeline_forward_matches_sequential():
+def test_pipeline_forward_matches_sequential(run_py):
     run_py(r"""
 import jax, jax.numpy as jnp, numpy as np
 from repro.launch.mesh import make_mesh
@@ -157,7 +136,7 @@ print("OK pipeline parity", err)
 """)
 
 
-def test_elastic_restart_with_fault_injection(tmp_path):
+def test_elastic_restart_with_fault_injection(run_py, tmp_path):
     """Child crashes at step 12 (hard exit), supervisor restarts, training
     resumes from the atomic checkpoint and completes."""
     ckdir = str(tmp_path / "ck")
@@ -175,7 +154,7 @@ print("OK elastic restart", restarts)
     assert "OK elastic restart" in out
 
 
-def test_elastic_reshard_across_device_counts(tmp_path):
+def test_elastic_reshard_across_device_counts(run_py, tmp_path):
     """Save params sharded on 8 devices, restore on 2 (different mesh)."""
     ckdir = str(tmp_path / "ck")
     run_py(rf"""

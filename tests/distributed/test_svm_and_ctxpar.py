@@ -1,27 +1,7 @@
 """Distributed BSGD parity + context-parallel attention numerics (8 devices)."""
-import os
-import subprocess
-import sys
-
-SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "..", "src"))
 
 
-def run_py(code: str, n_devices: int = 8, timeout: int = 900):
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
-    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
-    # force the CPU platform: with JAX_PLATFORMS unset, a jax[tpu] install
-    # probes the cloud TPU metadata service and stalls for minutes on
-    # machines without one; the forced host-device count is a CPU-platform
-    # feature anyway
-    env["JAX_PLATFORMS"] = "cpu"
-    proc = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                          text=True, timeout=timeout, env=env)
-    assert proc.returncode == 0, f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
-    return proc.stdout
-
-
-def test_distributed_bsgd_matches_single_device():
+def test_distributed_bsgd_matches_single_device(run_py):
     """Both SVM layouts reproduce the single-device BSGD step exactly."""
     run_py(r"""
 import jax, jax.numpy as jnp
@@ -53,7 +33,7 @@ for layout in ("replicated", "slots"):
 """)
 
 
-def test_seq_shard_attn_preserves_numerics():
+def test_seq_shard_attn_preserves_numerics(run_py):
     """Context-parallel attention (§Perf cell B) is a pure sharding change."""
     run_py(r"""
 import dataclasses

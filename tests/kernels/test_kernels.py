@@ -192,3 +192,22 @@ def test_multi_merge_scores_rows_match_single_kernel():
             np.asarray(h_m[q]),
             np.asarray(ref.bilinear_lookup(tbl.h_table, *ref.merge_coords(
                 a_min[q], alpha, kappa[q]))), rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("c,slots,n,d", [(1, 16, 8, 4), (5, 33, 70, 11),
+                                         (8, 128, 130, 32)])
+def test_class_scores_fused_matches_per_class_oracle(c, slots, n, d):
+    """The serving contraction: one fused (n, C*slots) launch == C
+    sequential kernel calls, for fp32 and quantized bf16 banks."""
+    keys = jax.random.split(jax.random.PRNGKey(c * 7 + n), 3)
+    sv = jax.random.normal(keys[0], (c, slots, d))
+    alpha = jax.random.normal(keys[1], (c, slots))
+    x = jax.random.normal(keys[2], (n, d))
+    for bank_dtype, tol in ((jnp.float32, 1e-5), (jnp.bfloat16, 3e-2)):
+        bank = sv.astype(bank_dtype)
+        for impl in ("ref", "pallas_interpret"):
+            got = ops.class_scores(x, bank, alpha, 0.4, impl=impl)
+            assert got.shape == (c, n) and got.dtype == alpha.dtype
+            want = ref.class_scores(x, bank.astype(jnp.float32), alpha, 0.4)
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       rtol=tol, atol=tol)

@@ -1,31 +1,12 @@
 """Launch-layer structural tests: cell plans lower+compile on a small mesh
 (subprocess with 8 host devices — the cheap rehearsal of the 512-dev dryrun),
 and the roofline HLO parsers on synthetic text."""
-import os
-import subprocess
-import sys
 
 from repro.launch import roofline as rl
 
-SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "..", "src"))
 
 
-def run_py(code: str, n_devices: int = 8, timeout: int = 900):
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
-    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
-    # force the CPU platform: with JAX_PLATFORMS unset, a jax[tpu] install
-    # probes the cloud TPU metadata service and stalls for minutes on
-    # machines without one; the forced host-device count is a CPU-platform
-    # feature anyway
-    env["JAX_PLATFORMS"] = "cpu"
-    proc = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                          text=True, timeout=timeout, env=env)
-    assert proc.returncode == 0, f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
-    return proc.stdout
-
-
-def test_every_family_lowers_and_compiles_every_step_kind():
+def test_every_family_lowers_and_compiles_every_step_kind(run_py):
     """One arch per family x {train, prefill, decode} on a 2x4 mesh with
     reduced configs — catches sharding-plan bugs without 512-dev compiles."""
     out = run_py(r"""

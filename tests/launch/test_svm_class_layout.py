@@ -1,28 +1,8 @@
 """Multi-class SVM cell on the production mesh: ``layout="class"`` lowers,
 compiles, and reproduces the single-device lockstep step (8 host devices)."""
-import os
-import subprocess
-import sys
-
-SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "..", "src"))
 
 
-def run_py(code: str, n_devices: int = 8, timeout: int = 900):
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
-    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
-    # force the CPU platform: with JAX_PLATFORMS unset, a jax[tpu] install
-    # probes the cloud TPU metadata service and stalls for minutes on
-    # machines without one; the forced host-device count is a CPU-platform
-    # feature anyway
-    env["JAX_PLATFORMS"] = "cpu"
-    proc = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                          text=True, timeout=timeout, env=env)
-    assert proc.returncode == 0, f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
-    return proc.stdout
-
-
-def test_lower_svm_cell_class_layout():
+def test_lower_svm_cell_class_layout(run_py):
     """lower_svm_cell lowers + compiles the multi-class cell with classes
     sharded over `model` (reduced sizes; the 512-dev sizing is dryrun-only)."""
     out = run_py(r"""
@@ -41,7 +21,7 @@ print("OK class cell", mem.argument_size_in_bytes)
     assert "OK class cell" in out
 
 
-def test_distributed_class_step_matches_single_device():
+def test_distributed_class_step_matches_single_device(run_py):
     """The pjit'd class-layout step == the single-device lockstep step."""
     out = run_py(r"""
 import jax, jax.numpy as jnp, numpy as np

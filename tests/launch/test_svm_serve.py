@@ -1,0 +1,122 @@
+"""Serving on the production mesh: the ``layout="serve"`` predict cell
+lowers + compiles, the sharded queue path is bitwise the single-device one
+(8 host devices via the shared ``run_py`` fixture), and the CLI arm runs."""
+import subprocess
+import sys
+
+
+def test_serve_cell_lowers_binary_and_class(run_py):
+    """lower_svm_cell(step="predict") compiles for the C=1 and multiclass
+    banks; the abstract serving inputs match ``inputs.svm_serve_specs``."""
+    out = run_py(r"""
+from repro.core.distributed import lower_svm_cell, make_distributed_predict
+from repro.launch.inputs import svm_serve_specs
+from repro.launch.mesh import make_mesh
+
+mesh = make_mesh((2, 4), ("data", "model"))
+for layout in ("replicated", "class"):
+    lowered, cfg = lower_svm_cell(mesh, budget=64, dim=32, batch=16,
+                                  layout=layout, n_classes=8, step="predict")
+    mem = lowered.compile().memory_analysis()
+    assert mem.argument_size_in_bytes > 0
+    b = cfg.binary if layout == "class" else cfg
+    n_classes = 8 if layout == "class" else None
+    _, args, _, _ = make_distributed_predict(
+        mesh, dim=32, batch=16, slots=b.slots, n_classes=n_classes)
+    spec = svm_serve_specs(32, 16, b.slots, n_classes=n_classes)
+    model_abs, x_abs = args
+    for name in ("sv_x", "alpha", "count", "gamma"):
+        got = getattr(model_abs, name)
+        assert (got.shape, got.dtype) == (spec[name].shape, spec[name].dtype), name
+    assert (x_abs.shape, x_abs.dtype) == (spec["x"].shape, spec["x"].dtype)
+    print("OK serve cell", layout, mem.argument_size_in_bytes)
+""")
+    assert "OK serve cell replicated" in out
+    assert "OK serve cell class" in out
+
+
+def test_sharded_queue_bitwise_matches_direct(run_py):
+    """The acceptance gate on 8 devices: a BatchQueue driving the pjit'd
+    serve cell (bank replicated, batch sharded over every axis) returns
+    bitwise the labels of the single-device direct predict."""
+    run_py(r"""
+import jax, numpy as np
+from repro.core import (MulticlassSVMConfig, BatchQueue, export_model,
+                        fit_multiclass, predict_labels)
+from repro.core.distributed import make_distributed_predict
+from repro.data import make_blobs_multiclass
+from repro.launch.mesh import make_mesh
+
+x, y = make_blobs_multiclass(jax.random.PRNGKey(0), 512, 8, n_classes=4,
+                             sep=2.0)
+cfg = MulticlassSVMConfig.create(4, budget=16, lambda_=1e-3, gamma=0.5,
+                                 batch_size=8)
+state = fit_multiclass(cfg, x, y)
+model = export_model(state, 0.5, bank_dtype="bfloat16")
+direct = np.asarray(predict_labels(model, x))          # single-device path
+
+mesh = make_mesh((2, 4), ("data", "model"))
+fn, args, in_sh, out_sh = make_distributed_predict(
+    mesh, dim=8, batch=64, slots=cfg.slots, n_classes=4)
+with mesh:
+    jfn = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+    q = BatchQueue(model, max_batch=64, min_bucket=8,
+                   predict_fn=lambda xb: jfn(model, xb))
+    sizes = [10, 100, 3, 0, 143, 64, 65, 127]
+    tickets, off = [], 0
+    xs = np.asarray(x)
+    for s in sizes:
+        tickets.append(q.submit(xs[off:off + s])); off += s
+    q.drain()
+    got = np.concatenate([q.take(t) for t in tickets])
+assert (got == direct[:off]).all()
+assert set(q.stats["bucket_counts"]) <= set(q.buckets)
+print("OK sharded queue bitwise", q.stats)
+""")
+
+
+def test_serve_cli_svm_smoke(subprocess_env):
+    """``serve --arch svm_bsgd --smoke`` runs end-to-end (its internal
+    queue/direct parity assert is part of the run)."""
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--arch", "svm_bsgd",
+         "--smoke"],
+        capture_output=True, text=True, timeout=900,
+        env=subprocess_env(n_devices=1))
+    assert proc.returncode == 0, f"{proc.stdout}\n{proc.stderr}"
+    assert "queue == direct predict (bitwise)" in proc.stdout
+
+
+def test_serve_cli_from_stream_checkpoint(subprocess_env, tmp_path):
+    """Train via the streaming CLI path, then serve the written checkpoint:
+    the full train -> checkpoint -> export -> queue pipeline as processes."""
+    import glob
+    import os
+
+    import numpy as np
+
+    from repro.data import make_blobs_multiclass, write_npz_chunks
+    import jax
+
+    x, y = make_blobs_multiclass(jax.random.PRNGKey(0), 512, 6, n_classes=4,
+                                 sep=2.0)
+    shards = str(tmp_path / "shards")
+    write_npz_chunks(shards, np.asarray(x), np.asarray(y), 128)
+    ck = str(tmp_path / "ck")
+    env = subprocess_env(n_devices=1)
+    train = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch", "svm_bsgd",
+         "--stream", shards, "--svm-layout", "class", "--svm-classes", "4",
+         "--svm-budget", "16", "--batch-size", "8", "--ckpt-dir", ck,
+         "--ckpt-every", "2"],
+        capture_output=True, text=True, timeout=900, env=env)
+    assert train.returncode == 0, f"{train.stdout}\n{train.stderr}"
+    assert glob.glob(os.path.join(ck, "step_*")), "no checkpoint written"
+    serve = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--arch", "svm_bsgd",
+         "--model", ck, "--gamma", "0.5", "--rows", "512",
+         "--max-batch", "64"],
+        capture_output=True, text=True, timeout=900, env=env)
+    assert serve.returncode == 0, f"{serve.stdout}\n{serve.stderr}"
+    assert "queue == direct predict (bitwise)" in serve.stdout
+    assert "loaded" in serve.stdout and "C=4" in serve.stdout

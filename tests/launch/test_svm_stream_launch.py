@@ -1,26 +1,9 @@
 """Streaming SVM through the launch layer: the pjit'd chunk program lowers
 on a multi-device mesh and ``svm_stream_loop`` reproduces the single-device
 streamed trainer (subprocess with forced host devices, cf. test_svm_class_layout)."""
-import os
-import subprocess
-import sys
-
-SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "..", "src"))
 
 
-def run_py(code: str, n_devices: int = 8, timeout: int = 900):
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
-    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
-    # force CPU: a jax[tpu] install otherwise probes the TPU metadata service
-    env["JAX_PLATFORMS"] = "cpu"
-    proc = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                          text=True, timeout=timeout, env=env)
-    assert proc.returncode == 0, f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
-    return proc.stdout
-
-
-def test_chunk_cell_lowers_replicated_and_class():
+def test_chunk_cell_lowers_replicated_and_class(run_py):
     """make_distributed_chunk_step lowers + compiles for both layouts
     (reduced sizes; the production sizing is dryrun-only)."""
     out = run_py(r"""
@@ -50,7 +33,7 @@ for layout in ("replicated", "class"):
     assert "OK replicated" in out and "OK class" in out
 
 
-def test_svm_stream_loop_matches_single_device():
+def test_svm_stream_loop_matches_single_device(run_py):
     """svm_stream_loop on an 8-device mesh == single-device fit_stream on the
     same source/seed (binary), and the class layout trains per-class models."""
     out = run_py(r"""
