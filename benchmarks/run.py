@@ -2,6 +2,9 @@
 
 ``python -m benchmarks.run``          — quick pass over every benchmark
 ``python -m benchmarks.run --full``   — paper-scale settings (slow on CPU)
+``python -m benchmarks.run --smoke``  — the CI entry point: every smoke
+    bench in one invocation, JSON artifacts (``BENCH_*.json``) at the repo
+    root so the perf trajectory accumulates run over run.
 
 Prints ``name,us_per_call,derived`` CSV summary lines per benchmark plus the
 benchmark's own CSV.
@@ -9,13 +12,38 @@ benchmark's own CSV.
 from __future__ import annotations
 
 import argparse
+import subprocess
+import sys
 import time
+
+# the CI smoke set: (module, artifact) — each runs as its own child process
+# (bench_stream measures child-process RSS; isolation also keeps one bench's
+# jit cache from warming another's timings)
+SMOKE_BENCHES = (
+    ("benchmarks.bench_table2_accuracy", "BENCH_table2_accuracy.json"),
+    ("benchmarks.bench_maintenance", "BENCH_maintenance.json"),
+    ("benchmarks.bench_stream", "BENCH_stream.json"),
+    ("benchmarks.bench_serve", "BENCH_serve.json"),
+)
+
+
+def run_smoke() -> None:
+    """Run every smoke bench; artifacts land in the current directory."""
+    for mod, out in SMOKE_BENCHES:
+        print(f"== {mod} --smoke -> {out} ==", flush=True)
+        subprocess.run([sys.executable, "-m", mod, "--smoke", "--out", out],
+                       check=True)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="the consolidated CI smoke set -> BENCH_*.json")
     args = ap.parse_args()
+    if args.smoke:
+        run_smoke()
+        return
     quick = not args.full
 
     from . import (bench_fig3_breakdown, bench_roofline, bench_table2_accuracy,
@@ -38,7 +66,7 @@ def main() -> None:
                                      datasets=["SUSY", "ADULT"],
                                      stats_steps=400)
             if quick else bench_table3_speedup.run())
-    imps = [r[6] for r in rows if isinstance(r[6], (int, float))]
+    imps = [r[-1] for r in rows if isinstance(r[-1], (int, float))]
     summary.append(("table3_speedup", (time.perf_counter() - t0) * 1e6,
                     f"improv_wd_pct={imps}"))
 

@@ -6,10 +6,13 @@ from . import budget, kernel_cache, merge_math
 # (the public API since PR 0) — import serving symbols from ``repro.core``
 # directly, never via ``repro.core.predict.<name>``
 from .predict import (BatchQueue, ServeModel, default_buckets, drive_trace, export_model, load_serve_model,
-                      predict_labels, ragged_trace_sizes, serve_requests, serve_scores)
-from .bsgd import (BSGDConfig, SVMState, accuracy, decision_function, fit, fit_stream, init_state, predict,
-                   train_chunk, train_epoch, train_epoch_stream, train_step, train_step_from_rows)
-from .budget import METHODS, STRATEGIES, MaintenanceInfo, maintenance_step, run_maintenance
+                      predict_labels, predict_proba, ragged_trace_sizes, serve_requests, serve_scores,
+                      top_k_labels)
+from .bsgd import (BSGDConfig, SVMState, accuracy, decision_function, fit, fit_stream, init_state,
+                   insert_from_rows, predict, train_chunk, train_epoch, train_epoch_stream, train_step,
+                   train_step_from_rows)
+from .budget import (METHODS, STRATEGIES, MaintenanceInfo, maintenance_step, run_maintenance,
+                     run_maintenance_classes)
 from .lookup import MergeLookupTable, bilinear_lookup, build_lookup_table, build_merge_tables, default_table
 from .multiclass import (MulticlassSVMConfig, accuracy_multiclass, check_labels, class_kernel_rows,
                          decision_function_multiclass, fit_multiclass, fit_multiclass_loop, fit_multiclass_stream,
@@ -27,12 +30,13 @@ __all__ = [
     "drive_trace", "export_model", "fit", "fit_multiclass",
     "fit_multiclass_loop", "fit_multiclass_stream", "fit_stream",
     "golden_section_search", "gss_num_iters",
-    "init_multiclass_state", "init_state", "kernel_cache",
+    "init_multiclass_state", "init_state", "insert_from_rows", "kernel_cache",
     "load_serve_model", "maintenance_step", "merge_alpha_z", "merge_math",
     "merge_point", "ovr_targets", "predict", "predict_labels",
-    "predict_multiclass", "ragged_trace_sizes",
-    "run_maintenance", "s_objective", "serve_requests", "serve_scores",
-    "solve_merge", "train_chunk",
+    "predict_multiclass", "predict_proba", "ragged_trace_sizes",
+    "run_maintenance", "run_maintenance_classes", "s_objective",
+    "serve_requests", "serve_scores",
+    "solve_merge", "top_k_labels", "train_chunk",
     "train_chunk_multiclass", "train_epoch",
     "train_epoch_multiclass", "train_epoch_multiclass_stream",
     "train_epoch_stream", "train_step", "train_step_from_rows",

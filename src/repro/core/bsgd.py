@@ -77,6 +77,13 @@ class BSGDConfig:
       unroll_maintenance: inline ``batch_size`` masked events instead of the
         while_loop — bitwise loop-parity under vmap (DESIGN.md §5);
         compile size grows with ``batch_size``.
+      maintenance_engine: how maintenance events execute — ``"xla"`` (the
+        per-class engine in ``core.budget``; vmapped over the class axis by
+        the multi-class step) or ``"pallas"`` (the fused maintenance-event
+        engine: one ``kernels.ops.merge_event`` round per event, classes
+        folded onto the kernel grid, sorted-excess schedule — DESIGN.md
+        §11).  ``"pallas"`` requires ``use_kernel_cache=True``,
+        ``maintenance="merge"`` and ``method="lookup-wd"``.
     """
 
     budget: int = 100
@@ -96,6 +103,9 @@ class BSGDConfig:
                                        # of a while_loop: bitwise loop-parity
                                        # under vmap (core.budget docstring);
                                        # compile size grows with batch_size
+    maintenance_engine: str = "xla"    # xla | pallas — pallas runs the fused
+                                       # all-class merge-event kernel on the
+                                       # sorted-excess schedule (DESIGN.md §11)
 
     def __post_init__(self):
         if self.maintenance not in budget_mod.STRATEGIES:
@@ -104,6 +114,17 @@ class BSGDConfig:
         if self.maintenance == "multi-merge" and not (
                 1 <= self.merge_batch <= self.budget):
             raise ValueError("multi-merge needs 1 <= merge_batch <= budget")
+        if self.maintenance_engine not in ("xla", "pallas"):
+            raise ValueError(f"maintenance_engine={self.maintenance_engine!r}"
+                             " not in ('xla', 'pallas')")
+        if self.maintenance_engine == "pallas" and not (
+                self.use_kernel_cache and self.maintenance == "merge"
+                and self.method == "lookup-wd"):
+            raise ValueError(
+                "maintenance_engine='pallas' runs the fused Lookup-WD merge "
+                "event off the kernel cache: it requires "
+                "use_kernel_cache=True, maintenance='merge' and "
+                "method='lookup-wd'")
 
     @property
     def slots(self) -> int:
@@ -143,18 +164,15 @@ def predict(state: SVMState, x, gamma, **kw):
     return jnp.sign(decision_function(state, x, gamma, **kw))
 
 
-@partial(jax.jit, static_argnames=("cfg", "impl"))
-def train_step_from_rows(cfg: BSGDConfig, table, state: SVMState, xb, yb,
-                         k_b, k_bb=None, *, impl: str = "auto") -> SVMState:
-    """Pegasos minibatch step + maintenance from precomputed kernel rows.
+def insert_from_rows(cfg: BSGDConfig, state: SVMState, xb, yb, k_b,
+                     k_bb=None) -> SVMState:
+    """The Pegasos shrink + violator insert half of a step (no maintenance).
 
-    ``k_b = k(xb, sv_x)`` of shape (batch, slots) and — only when the kernel
-    cache is on — ``k_bb = k(xb, xb)`` of shape (batch, batch).  This is the
-    seam the one-vs-rest engine (``core.multiclass``) vmaps over the class
-    axis: all classes' rows come from ONE fused ``rbf_matrix`` call against
-    the flattened (C * slots, dim) SV bank, then each class runs this
-    row-consuming step.  Everything below is vmap-clean (masked argmin/top-k,
-    scatter-with-drop — no per-example control flow).
+    Returns the post-insert state: ``count`` may exceed the budget by up to
+    ``batch_size`` — the maintenance engine drains it back.  Split out of
+    ``train_step_from_rows`` so the fused maintenance-event engine can vmap
+    ONLY this part over the class axis and run maintenance once, outside the
+    vmap, on the whole stacked state (``core.multiclass``).
     """
     slots = cfg.slots
     t = state.step
@@ -179,22 +197,51 @@ def train_step_from_rows(cfg: BSGDConfig, table, state: SVMState, xb, yb,
     new_alpha = (eta * yb / cfg.batch_size).astype(alpha.dtype)
     alpha = alpha.at[idx].set(new_alpha, mode="drop")
     n_new = jnp.sum(viol).astype(jnp.int32)
-    count = state.count + n_new
 
     kmat = state.kmat
     if cfg.use_kernel_cache:
         kmat = kernel_cache.insert_rows(kmat, idx, k_b, k_bb)
 
-    # budget maintenance until count <= budget (strategy layer: core.budget)
-    sv_x, alpha, kmat, count, n_merges = budget_mod.run_maintenance(
-        sv_x, alpha, kmat, count, state.n_merges, cfg.gamma, table,
-        budget=cfg.budget, strategy=cfg.maintenance, method=cfg.method,
-        merge_batch=cfg.merge_batch, impl=impl,
-        unroll=cfg.batch_size if cfg.unroll_maintenance else 0)
+    return SVMState(sv_x=sv_x, alpha=alpha, count=state.count + n_new,
+                    step=t + 1, n_inserts=state.n_inserts + n_new,
+                    n_merges=state.n_merges, kmat=kmat)
 
-    return SVMState(sv_x=sv_x, alpha=alpha, count=count, step=t + 1,
-                    n_inserts=state.n_inserts + n_new, n_merges=n_merges,
-                    kmat=kmat)
+
+@partial(jax.jit, static_argnames=("cfg", "impl"))
+def train_step_from_rows(cfg: BSGDConfig, table, state: SVMState, xb, yb,
+                         k_b, k_bb=None, *, impl: str = "auto") -> SVMState:
+    """Pegasos minibatch step + maintenance from precomputed kernel rows.
+
+    ``k_b = k(xb, sv_x)`` of shape (batch, slots) and — only when the kernel
+    cache is on — ``k_bb = k(xb, xb)`` of shape (batch, batch).  This is the
+    seam the one-vs-rest engine (``core.multiclass``) vmaps over the class
+    axis: all classes' rows come from ONE fused ``rbf_matrix`` call against
+    the flattened (C * slots, dim) SV bank, then each class runs this
+    row-consuming step.  Everything below is vmap-clean (masked argmin/top-k,
+    scatter-with-drop — no per-example control flow).
+    """
+    state = insert_from_rows(cfg, state, xb, yb, k_b, k_bb)
+    unroll = cfg.batch_size if cfg.unroll_maintenance else 0
+
+    if cfg.maintenance_engine == "pallas":
+        # the fused event engine is class-batched; the binary step lifts to
+        # C = 1 (same decisions and schedule, one no-op-free grid row)
+        sv_x, alpha, kmat, count, n_merges = jax.tree.map(
+            lambda a: a[0],
+            budget_mod.run_maintenance_classes(
+                state.sv_x[None], state.alpha[None], state.kmat[None],
+                state.count[None], state.n_merges[None], table,
+                budget=cfg.budget, impl=impl, unroll=unroll))
+    else:
+        # budget maintenance until count <= budget (strategy: core.budget)
+        sv_x, alpha, kmat, count, n_merges = budget_mod.run_maintenance(
+            state.sv_x, state.alpha, state.kmat, state.count, state.n_merges,
+            cfg.gamma, table, budget=cfg.budget, strategy=cfg.maintenance,
+            method=cfg.method, merge_batch=cfg.merge_batch, impl=impl,
+            unroll=unroll)
+
+    return state._replace(sv_x=sv_x, alpha=alpha, count=count,
+                          n_merges=n_merges, kmat=kmat)
 
 
 @partial(jax.jit, static_argnames=("cfg", "impl"))

@@ -46,8 +46,10 @@ STRATEGIES = ("merge", "multi-merge", "removal")
 _BIG = jnp.inf
 # Scores above this mean "no valid partner" (the Pallas scorer marks invalid
 # slots with a finite 3.4e38 so bf16 casts stay argmin-safe; real WDs are
-# bounded by (2 max|alpha|)^2 << 1e30).
-_NO_PARTNER = 1e30
+# bounded by (2 max|alpha|)^2 << 1e30).  Single-sourced from the kernels
+# package so the xla and fused-event engines cannot desynchronize their
+# merge-vs-removal threshold.
+_NO_PARTNER = kref.NO_PARTNER
 
 
 class MaintenanceInfo(NamedTuple):
@@ -417,3 +419,70 @@ def run_maintenance(sv_x, alpha, kmat, count, n_events, gamma, table, *,
         return carry
 
     return jax.lax.while_loop(lambda c: c[3] > budget, body, carry)
+
+
+# --------------------------------------------------------------------------
+# Maintenance-event engine: fused all-class rounds (sorted-excess schedule)
+# --------------------------------------------------------------------------
+@partial(jax.jit, static_argnames=("budget", "impl", "unroll"))
+def run_maintenance_classes(sv_x, alpha, kmat, count, n_events, table, *,
+                            budget: int, impl: str = "auto", unroll: int = 0):
+    """Budget maintenance for a stacked class axis as fused event rounds.
+
+    The vmapped per-class engine (``vmap(run_maintenance)``) pays two taxes
+    at scale: every class runs the while body whenever ANY class is over
+    budget, and the vmapped two-row scatters on the ``(C, slots, slots)``
+    cache defeat XLA's in-place aliasing (full-matrix copies per event).
+    This engine replaces it with the *sorted-excess schedule*: the per-class
+    excess ``count - budget`` is known up front, every round executes ONE
+    fused ``kernels.ops.merge_event`` launch in which classes still over
+    budget run a whole merge event and finished classes are bitwise no-op
+    rows, and the loop runs exactly ``max_c(count_c - budget)`` rounds —
+    total work proportional to the worst class, not ``C x worst``.  With no
+    class over budget the loop body never runs and the state is returned
+    bitwise unchanged (the early exit the engine tests pin).
+
+    Arguments carry a leading ``(C,)`` class axis (``C = 1`` lifts the
+    binary engine); ``kmat`` is REQUIRED — the event reads its kappa rows
+    from the cache (``BSGDConfig`` validation enforces
+    ``use_kernel_cache=True`` for ``maintenance_engine="pallas"``).  Scoring
+    is Lookup-WD against ``table``.  ``unroll > 0`` inlines that many masked
+    rounds instead of the while loop (same contract as ``run_maintenance``:
+    one insert minibatch bounds the excess by ``batch_size``).  Returns
+    ``(sv_x, alpha, kmat, count, n_events)`` with ``n_events`` incremented
+    per class per executed event.
+    """
+    if kmat is None:
+        raise ValueError("run_maintenance_classes needs the kernel cache "
+                         "(use_kernel_cache=True): the fused event reads "
+                         "its kappa rows from kmat")
+    if table is None:
+        raise ValueError("run_maintenance_classes scores with Lookup-WD and "
+                         "needs the precomputed table")
+
+    if sv_x.shape[0] == 1:
+        # One class: a fused round IS a single-class merge event, and the
+        # single-class engine's batched-gather body is cheaper than the
+        # class-batched forms with nothing to amortize them over (decisions
+        # are bitwise identical — the merge_event oracle is pinned against
+        # _merge_once).  gamma is never read: the cache supplies every row.
+        out = run_maintenance(sv_x[0], alpha[0], kmat[0], count[0],
+                              n_events[0], jnp.float32(0.0), table,
+                              budget=budget, strategy="merge",
+                              method="lookup-wd", impl=impl, unroll=unroll)
+        return tuple(a[None] for a in out)
+
+    def round_(carry):
+        sv_x, alpha, kmat, count, n = carry
+        over = count > budget
+        sv_x, alpha, kmat = kops.merge_event(sv_x, alpha, kmat, count, over,
+                                             table, impl=impl)
+        return (sv_x, alpha, kmat, count - over.astype(count.dtype),
+                n + over.astype(n.dtype))
+
+    carry = (sv_x, alpha, kmat, count, n_events)
+    if unroll:
+        for _ in range(unroll):
+            carry = round_(carry)
+        return carry
+    return jax.lax.while_loop(lambda c: jnp.any(c[3] > budget), round_, carry)

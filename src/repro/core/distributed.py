@@ -259,7 +259,8 @@ def make_distributed_chunk_step(cfg, mesh, dim: int, chunk_steps: int,
 def lower_svm_cell(mesh, *, budget: int = 16384, dim: int = 1024,
                    batch: int = 8192, method: str = "lookup-wd",
                    layout: str = "replicated", n_classes: int = 8,
-                   stream_steps: int = 0, step: str = "train"):
+                   stream_steps: int = 0, step: str = "train",
+                   maintenance_engine: str = "xla"):
     """AOT-lower the production-scale BSGD cell (the paper-technique cell).
 
     Production sizing: budget 16k SVs, 1k features, 8k-example global
@@ -274,10 +275,16 @@ def lower_svm_cell(mesh, *, budget: int = 16384, dim: int = 1024,
     bank replicated and the request batch sharded over every axis
     (``layout="serve"``; ``layout="class"`` here selects the multiclass
     bank, anything else the binary one) — the dryrun roofline for
-    ``launch.serve --arch svm_bsgd``.
+    ``launch.serve --arch svm_bsgd``.  ``maintenance_engine="pallas"``
+    lowers the fused maintenance-event engine instead of the vmapped
+    per-class while loop (implies the kernel cache; the event rounds stay
+    collective-free under ``layout="class"`` because every array they touch
+    is sharded along the class axis).
     """
     cfg = BSGDConfig(budget=budget, lambda_=1e-6, gamma=2.0**-7, method=method,
-                     batch_size=batch, dtype="float32", sv_dtype="bfloat16")
+                     batch_size=batch, dtype="float32", sv_dtype="bfloat16",
+                     use_kernel_cache=(maintenance_engine == "pallas"),
+                     maintenance_engine=maintenance_engine)
     if layout == "class":
         cfg = MulticlassSVMConfig(n_classes=n_classes, binary=cfg)
     if step == "predict":

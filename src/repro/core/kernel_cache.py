@@ -32,8 +32,16 @@ Invariants (see DESIGN.md §4):
       values — every consumer masks by ``count``, exactly like ``sv_x``.
 
 The cache is always fp32 regardless of ``sv_dtype`` (it is ``slots^2 * 4``
-bytes — 1 MB at a 16k budget — and fp32 keeps merge decisions stable when SV
-rows are stored in bf16).
+bytes — 4 MB at a 1k budget, ~1 GiB per class at 16k, so size it into the
+HBM plan at production budgets — and fp32 keeps merge decisions stable when
+SV rows are stored in bf16).
+
+The fused maintenance-event engine (``kernels/merge_event.py``, DESIGN.md
+§11) inlines the merge rule: the z-row log-space combine below is derived
+*inside* the kernel from the two parent rows resident in VMEM, so the
+per-event cache update never round-trips through this module on that path —
+``z_row_from_rows`` stays the shared reference form (used by the xla engine
+and the kernel's oracle, which is pinned bitwise against it).
 """
 from __future__ import annotations
 

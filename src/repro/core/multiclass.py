@@ -35,8 +35,9 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from . import budget as budget_mod
 from .bsgd import (BSGDConfig, SVMState, _fit_stream, _stream_epoch,
-                   init_state, train_step_from_rows)
+                   init_state, insert_from_rows, train_step_from_rows)
 from ..kernels import ops as kops
 
 
@@ -150,12 +151,32 @@ def train_step_multiclass(cfg: MulticlassSVMConfig, table, state: SVMState,
     One fused rbf call produces every class's margin rows; the per-class
     update (insert + budget maintenance) is vmapped over the class axis with
     the lookup table and minibatch closed over (shared, not stacked).
+
+    With ``maintenance_engine="pallas"`` only the shrink + insert half is
+    vmapped; maintenance then runs ONCE on the whole stacked state through
+    the fused merge-event engine (``budget.run_maintenance_classes``) —
+    classes fold onto the kernel grid and the sorted-excess schedule bounds
+    the rounds by the worst class's excess instead of C x worst
+    (DESIGN.md §11).
     """
     b = cfg.binary
     k_b = class_kernel_rows(state.sv_x, xb, b.gamma, impl=impl)   # (C, batch, slots)
     k_bb = (kops.rbf_matrix(xb, xb, b.gamma, impl=impl)
             if b.use_kernel_cache else None)
     y_ovr = ovr_targets(yb, cfg.n_classes, dtype=jnp.dtype(b.dtype))
+
+    if b.maintenance_engine == "pallas":
+        def one_insert(st, yc, kc):
+            return insert_from_rows(b, st, xb, yc, kc, k_bb)
+
+        mid = jax.vmap(one_insert)(state, y_ovr, k_b)
+        sv_x, alpha, kmat, count, n_merges = \
+            budget_mod.run_maintenance_classes(
+                mid.sv_x, mid.alpha, mid.kmat, mid.count, mid.n_merges,
+                table, budget=b.budget, impl=impl,
+                unroll=b.batch_size if b.unroll_maintenance else 0)
+        return mid._replace(sv_x=sv_x, alpha=alpha, count=count,
+                            n_merges=n_merges, kmat=kmat)
 
     def one_class(st, yc, kc):
         return train_step_from_rows(b, table, st, xb, yc, kc, k_bb, impl=impl)

@@ -132,6 +132,49 @@ def predict_labels(model: ServeModel, x, *, impl: str = "auto"):
     return jnp.argmax(scores, axis=0).astype(jnp.int32)
 
 
+@partial(jax.jit, static_argnames=("k", "impl"))
+def top_k_labels(model: ServeModel, x, *, k: int = 1, impl: str = "auto"):
+    """Top-k class ids + decision scores per request row.
+
+    x: (n, d) -> ``(ids, scores)`` of shape (n, k): per row, the k classes
+    with the highest one-vs-rest decision scores, best first (ties broken by
+    the lower class id, exactly like the argmax in ``predict_labels`` — so
+    ``ids[:, 0]`` is bitwise ``predict_labels``).  One fused scoring launch;
+    only the final ``lax.top_k`` is new work.  Multiclass models only: a
+    binary model has one score, rank it yourself from ``serve_scores``.
+    """
+    if model.binary:
+        raise ValueError("top_k_labels needs a multiclass model; binary "
+                         "models have a single ±1 decision (predict_labels)")
+    if not 1 <= k <= model.n_classes:
+        raise ValueError(f"k={k} not in [1, n_classes={model.n_classes}]")
+    scores = serve_scores(model, x, impl=impl)            # (C, n)
+    vals, ids = jax.lax.top_k(scores.T, k)                # (n, k) each
+    return ids.astype(jnp.int32), vals
+
+
+@partial(jax.jit, static_argnames=("temperature", "impl"))
+def predict_proba(model: ServeModel, x, *, temperature: float = 1.0,
+                  impl: str = "auto"):
+    """Calibrated softmax probabilities over the C class scores: (n, C).
+
+    ``softmax(scores / temperature)`` per row — temperature scaling is the
+    standard post-hoc calibration knob (T = 1 is the raw softmax; fit T on a
+    held-out split to calibrate confidence).  Rows sum to 1 and the argmax
+    is bitwise ``predict_labels`` for any positive temperature.  Multiclass
+    models only.  ``temperature`` is static (one compile per distinct value
+    — it is a per-deployment calibration constant, not per-request data).
+    """
+    if model.binary:
+        raise ValueError("predict_proba needs a multiclass model")
+    # T = 0 would be a silent NaN factory and T < 0 reverses the ranking
+    # the docstring promises
+    if temperature <= 0:
+        raise ValueError(f"temperature={temperature} must be > 0")
+    scores = serve_scores(model, x, impl=impl)            # (C, n)
+    return jax.nn.softmax(scores.T / temperature, axis=-1)
+
+
 # ---------------------------------------------------------------------------
 # Batched request queue
 # ---------------------------------------------------------------------------

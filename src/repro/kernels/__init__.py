@@ -5,5 +5,7 @@ record (and CPU/GPU fallback), ``ops.py`` the public jit'd wrappers with
 ``impl`` dispatch (``auto | pallas | pallas_interpret | ref``).  Kernels:
 ``rbf_kernel`` (tiled Gaussian kernel matrix), ``gss`` (batched golden
 section search), ``merge_lookup`` (fused single-partner candidate scoring),
-``merge_multi`` (P-partner multi-merge scoring).
+``merge_multi`` (P-partner multi-merge scoring), ``merge_event`` (one whole
+maintenance event per over-budget class — selection, cached-kappa Lookup-WD
+scoring, and the in-VMEM two-row/two-column cache update in one launch).
 """

@@ -1,0 +1,222 @@
+"""Fused budget-maintenance event — one launch per round, all classes.
+
+The class-axis engine's maintenance hot spot (ROADMAP: "Batched maintenance
+under vmap at scale") is NOT the merge math — it is the memory traffic around
+it: under ``vmap`` the per-event two-row/two-column scatters on the stacked
+``(C, slots, slots)`` kernel cache defeat XLA's in-place buffer aliasing, so
+every event degenerates to full-matrix copies.  This kernel folds the classes
+onto the grid axis (like ``merge_multi``) and executes ONE whole maintenance
+event per class per launch:
+
+  * argmin-|alpha| fixed-partner selection over the active watermark;
+  * the kappa row read straight from the class's VMEM-resident cache block
+    (``kmat`` is symmetric: row ``i_min`` IS ``k(x_min, .)``);
+  * Lookup-WD candidate scoring with the same gather-free hat-basis bilinear
+    trick as ``merge_lookup`` (one ``(bS, G) x (G, G)`` MXU matmul per table
+    per chunk against the VMEM-resident tables);
+  * the merged point's cache row derived IN the kernel from the two parent
+    rows (the log-space combine of ``core.kernel_cache`` — the z-row never
+    round-trips through HBM);
+  * the merge / removal-fallback two-row + two-column update applied as
+    masked selects on the VMEM blocks — no scatter, no full-matrix HBM copy
+    (outputs alias inputs, so XLA updates the stacked state in place).
+
+Classes whose ``over`` flag is clear are no-op rows: their blocks are written
+back bitwise unchanged, which is what makes the sorted-excess schedule in
+``core.budget.run_maintenance_classes`` correct — the engine runs exactly
+``max_c(count_c - budget)`` rounds and finished classes ride along for free.
+
+Scalar gathers (``alpha[i_min]`` etc.) are one-hot reductions and row gathers
+are one-hot matmuls — the TPU vector unit has no efficient per-lane gather,
+and the ``(3, S) x (S, S)`` one-hot products are trivial MXU work.  VMEM
+budget: the class's ``(S, S)`` cache + ``(S, D)`` SV blocks dominate (4 MB
+each at S = D = 1024); scoring is chunked by ``block_s`` so the hat-weight
+matrices stay small.  Keep ``slots`` and ``dim`` at multiples of 128 in
+production configs to avoid the pad/slice copy in ``ops.merge_event``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .merge_lookup import WD_INVALID, _hat_weights
+from .ref import NO_PARTNER, _safe_log
+
+
+def _first_where(pred, iota, s):
+    """Smallest index with ``pred`` true (== jnp.argmin tie-breaking)."""
+    return jnp.min(jnp.where(pred, iota, s)).astype(jnp.int32)
+
+
+def _onehot_f32(iota, i):
+    return (iota == i).astype(jnp.float32)
+
+
+def _merge_event_kernel(count_ref, over_ref, alpha_ref, sv_ref, kmat_ref,
+                        h_tab_ref, wd_tab_ref, alpha_out, sv_out, kmat_out,
+                        *, g: int, block_s: int):
+    count = count_ref[0, 0]
+    over = over_ref[0, 0] > 0
+    alpha_in = alpha_ref[0, :]
+    sv_in = sv_ref[0]
+    kmat = kmat_ref[0]                                   # (S, S) fp32
+    alpha = alpha_in.astype(jnp.float32)                 # (S,)
+    s = alpha.shape[0]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (1, s), 1)[0]
+    active = iota < count
+
+    # 1. fixed partner: active argmin |alpha| (first occurrence on ties).
+    abs_a = jnp.where(active, jnp.abs(alpha), jnp.inf)
+    mn = jnp.min(abs_a)
+    i_min = _first_where(abs_a == mn, iota, s)
+    oh_i = _onehot_f32(iota, i_min)
+    a_min = jnp.sum(jnp.where(iota == i_min, alpha, 0.0))
+
+    # 2. kappa row = cache row i_min (one-hot MXU product, no gather).
+    kappa_row = jax.lax.dot_general(
+        oh_i[None, :], kmat, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)[0]           # (S,)
+
+    # 3. Lookup-WD scoring in block_s chunks (hat-basis bilinear, both
+    #    tables interpolated per chunk — merge_lookup's trick).
+    wd_parts, h_parts = [], []
+    for start in range(0, s, block_s):
+        al_c = alpha[start:start + block_s]
+        kap_c = kappa_row[start:start + block_s]
+        denom = a_min + al_c
+        m = jnp.clip(a_min / jnp.where(denom == 0.0, 1.0, denom), 0.0, 1.0)
+        kap = jnp.clip(kap_c, 0.0, 1.0)
+        w_m = _hat_weights(m, g)                         # (bS, G)
+        w_k = _hat_weights(kap, g)
+        rows_wd = jax.lax.dot_general(
+            w_m, wd_tab_ref[...], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        rows_h = jax.lax.dot_general(
+            w_m, h_tab_ref[...], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        wd_parts.append(denom * denom * jnp.sum(rows_wd * w_k, axis=1))
+        h_parts.append(jnp.sum(rows_h * w_k, axis=1))
+    wd = jnp.concatenate(wd_parts)
+    h = jnp.concatenate(h_parts)
+    valid = active & (alpha * a_min > 0) & (iota != i_min)
+    wd = jnp.where(valid, wd, WD_INVALID)
+
+    # best partner; removal fallback when every candidate is invalid
+    wd_mn = jnp.min(wd)
+    j_star = _first_where(wd == wd_mn, iota, s)
+    has_partner = wd_mn < NO_PARTNER
+    last = count - 1
+
+    # 4. merge math on the chosen pair (scalars via one-hot reductions,
+    #    parent rows via one (2, S) one-hot MXU product).
+    sel_j = iota == j_star
+    sel_last = iota == last
+    h_m = jnp.sum(jnp.where(sel_j, h, 0.0))
+    k_ij = jnp.sum(jnp.where(sel_j, kappa_row, 0.0))
+    kap_m = jnp.clip(k_ij, 0.0, 1.0)
+    a_j = jnp.sum(jnp.where(sel_j, alpha, 0.0))
+    a_last = jnp.sum(jnp.where(sel_last, alpha, 0.0))
+    lk = _safe_log(kap_m)
+    a_z = (a_min * jnp.exp((1.0 - h_m) ** 2 * lk)
+           + a_j * jnp.exp(h_m**2 * lk))
+    oh_jl = jnp.stack([_onehot_f32(iota, j_star),
+                       _onehot_f32(iota, last)])         # (2, S)
+    rows_jl = jax.lax.dot_general(oh_jl, kmat, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    row_j, row_last = rows_jl[0], rows_jl[1]
+    sv_rows = jax.lax.dot_general(
+        jnp.stack([oh_i, oh_jl[0], oh_jl[1]]), sv_in.astype(jnp.float32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    x_i, x_j, v_last = sv_rows[0], sv_rows[1], sv_rows[2]
+    z = h_m * x_i + (1.0 - h_m) * x_j                    # (D,)
+
+    # z's cache row from the parent rows (kernel_cache's log-space combine)
+    lz = (h_m * _safe_log(kappa_row) + (1.0 - h_m) * _safe_log(row_j)
+          - h_m * (1.0 - h_m) * _safe_log(k_ij))
+    z_row = jnp.exp(jnp.minimum(lz, 0.0))
+
+    # 5. the branch-free two-row + two-column update as masked selects on
+    #    the VMEM blocks (budget._merge_once's fused form): t1 <- z (or the
+    #    old ``last`` on removal), t2 <- the old ``last``; t2 = S on removal
+    #    so its masks are empty, and a cleared ``over`` empties them all.
+    lo = jnp.minimum(i_min, j_star)
+    hi = jnp.maximum(i_min, j_star)
+    z_row_l = jnp.sum(jnp.where(sel_last, z_row, 0.0))
+    r_merge = jnp.where(iota == hi, z_row_l, z_row)
+    r_merge = jnp.where(iota == lo, 1.0, r_merge)
+    r_move = jnp.where(iota == hi, 1.0, row_last)
+    r_move = jnp.where(iota == lo, z_row_l, r_move)
+    r_remove = jnp.where(iota == i_min, 1.0, row_last)
+    t1 = jnp.where(over, jnp.where(has_partner, lo, i_min), s)
+    t2 = jnp.where(over & has_partner, hi, s)
+    r1 = jnp.where(has_partner, r_merge, r_remove)
+
+    row_ids = jax.lax.broadcasted_iota(jnp.int32, (s, s), 0)
+    col_ids = jax.lax.broadcasted_iota(jnp.int32, (s, s), 1)
+    km = jnp.where(row_ids == t1, r1[None, :], kmat)
+    km = jnp.where(row_ids == t2, r_move[None, :], km)
+    km = jnp.where(col_ids == t1, r1[:, None], km)
+    km = jnp.where(col_ids == t2, r_move[:, None], km)
+    kmat_out[0] = km
+
+    d = sv_in.shape[1]
+    sv_row_ids = jax.lax.broadcasted_iota(jnp.int32, (s, d), 0)
+    sv1 = jnp.where(has_partner, z, v_last)
+    sv = jnp.where(sv_row_ids == t1, sv1[None, :].astype(sv_in.dtype), sv_in)
+    sv = jnp.where(sv_row_ids == t2, v_last[None, :].astype(sv_in.dtype), sv)
+    sv_out[0] = sv
+
+    a1 = jnp.where(has_partner, a_z, a_last)
+    al = jnp.where(iota == t1, a1, alpha)
+    al = jnp.where(iota == t2, a_last, al)
+    al = jnp.where((iota == last) & over, 0.0, al)
+    alpha_out[0, :] = jnp.where(over, al.astype(alpha_in.dtype), alpha_in)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def merge_event_pallas(sv_x, alpha, kmat, count, over, h_table, wd_table, *,
+                       block_s: int = 256, interpret: bool = False):
+    """One maintenance event per over-budget class, one launch for them all.
+
+    sv_x: (C, S, D); alpha: (C, S); kmat: (C, S, S) fp32; count, over:
+    (C, 1) int32; tables: (G, G).  S and D must be multiples of the tile
+    sizes (``ops.merge_event`` pads).  Returns ``(sv_x, alpha, kmat)`` with
+    classes where ``over == 0`` bitwise unchanged; outputs alias the inputs
+    so the whole stacked state updates in place.  Oracle: ``ref.merge_event``.
+    """
+    c, s, d = sv_x.shape
+    g = h_table.shape[0]
+    # scoring chunk must divide the (padded) slot count; ops pads s to a
+    # multiple of 128, so 128 always works when block_s does not divide s
+    bs = block_s if s % block_s == 0 else (128 if s % 128 == 0 else s)
+    alpha_new, sv_new, kmat_new = pl.pallas_call(
+        functools.partial(_merge_event_kernel, g=g, block_s=bs),
+        grid=(c,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),      # count
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),      # over
+            pl.BlockSpec((1, s), lambda i: (i, 0)),      # alpha
+            pl.BlockSpec((1, s, d), lambda i: (i, 0, 0)),  # sv_x
+            pl.BlockSpec((1, s, s), lambda i: (i, 0, 0)),  # kmat
+            pl.BlockSpec((g, g), lambda i: (0, 0)),      # tables: whole
+            pl.BlockSpec((g, g), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, s), lambda i: (i, 0)),
+            pl.BlockSpec((1, s, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, s, s), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((c, s), alpha.dtype),
+            jax.ShapeDtypeStruct((c, s, d), sv_x.dtype),
+            jax.ShapeDtypeStruct((c, s, s), kmat.dtype),
+        ],
+        input_output_aliases={2: 0, 3: 1, 4: 2},
+        interpret=interpret,
+    )(count.astype(jnp.int32), over.astype(jnp.int32), alpha, sv_x,
+      kmat.astype(jnp.float32), h_table.astype(jnp.float32),
+      wd_table.astype(jnp.float32))
+    return sv_new, alpha_new, kmat_new

@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from . import gss as gss_kernel
+from . import merge_event as merge_event_kernel
 from . import merge_lookup as merge_lookup_kernel
 from . import merge_multi as merge_multi_kernel
 from . import rbf_kernel
@@ -137,6 +138,40 @@ def merge_scores(alpha, kappa_row, valid, a_min, table, *, impl: str = "auto",
         table, block_s=bs, interpret=(impl == "pallas_interpret"))
     wd = jnp.where(jnp.arange(wd.shape[0]) < s, wd, jnp.inf)[:s]
     return wd, interp[:s]
+
+
+# --------------------------------------------------------------------------
+# Fused maintenance event (one merge/removal per over-budget class)
+# --------------------------------------------------------------------------
+@partial(jax.jit, static_argnames=("impl", "block_s"))
+def merge_event(sv_x, alpha, kmat, count, over, table, *, impl: str = "auto",
+                block_s: int = 256):
+    """One fused maintenance-event round over stacked classes.
+
+    sv_x: (C, s, d); alpha: (C, s); kmat: (C, s, s) fp32 kernel cache;
+    count, over: (C,) int32/bool.  Every class with ``over`` set executes one
+    Lookup-WD merge event (argmin-|alpha| fixed partner, cached kappa row,
+    best same-sign partner, removal fallback) exactly as
+    ``core.budget._merge_once`` would on its slice; classes with ``over``
+    clear return bitwise unchanged.  Returns ``(sv_x, alpha, kmat)`` — the
+    caller owns ``count -= over`` and the round schedule
+    (``core.budget.run_maintenance_classes``).  Oracle: ``ref.merge_event``;
+    the Pallas path folds classes onto the grid axis and updates the blocks
+    in place in VMEM (``merge_event.merge_event_pallas``).
+    """
+    impl = _resolve(impl)
+    if impl == "ref":
+        return ref.merge_event(sv_x, alpha, kmat, count, over,
+                               table.h_table, table.wd_table)
+    c, s, d = sv_x.shape
+    sv_p = _pad_to(_pad_to(sv_x, 1, 128), 2, 128)
+    al_p = _pad_to(alpha, 1, 128)
+    km_p = _pad_to(_pad_to(kmat, 1, 128), 2, 128)
+    sv_n, al_n, km_n = merge_event_kernel.merge_event_pallas(
+        sv_p, al_p, km_p, count.reshape(c, 1).astype(jnp.int32),
+        over.reshape(c, 1).astype(jnp.int32), table.h_table, table.wd_table,
+        block_s=block_s, interpret=(impl == "pallas_interpret"))
+    return sv_n[:, :s, :d], al_n[:, :s], km_n[:, :s, :s]
 
 
 # --------------------------------------------------------------------------

@@ -122,6 +122,130 @@ def multi_merge_scores_classes(alpha, kappa_rows, valid, a_min, h_table,
         alpha, kappa_rows, valid, a_min, h_table, wd_table)
 
 
+# Scores at/above this mean "no valid partner" (shared with core.budget;
+# the Pallas scorers use a finite 3.4e38, real WDs are << 1e30 — both lose
+# every argmin and both compare < NO_PARTNER identically).
+NO_PARTNER = 1e30
+# kappa values are clipped away from 0 before log (core.merge_math.KAPPA_MIN;
+# duplicated so the kernels package stays import-clean).
+_KAPPA_MIN = 1e-30
+
+
+def _safe_log(k):
+    return jnp.log(jnp.clip(k.astype(jnp.float32), _KAPPA_MIN, 1.0))
+
+
+def _kappa_pow(kappa, expo):
+    """kappa**expo as exp(expo log kappa) — core.merge_math.kappa_pow."""
+    return jnp.exp(expo * _safe_log(kappa))
+
+
+def merge_event(sv_x, alpha, kmat, count, over, h_table, wd_table):
+    """One fused maintenance-event round over stacked classes (the oracle for
+    ``merge_event.merge_event_pallas`` and the production CPU path).
+
+    Per class ``c`` with ``over[c]`` set, executes exactly the paper's Alg. 1
+    event — the same decisions and fp formulas as one cached
+    ``core.budget._merge_once`` call on that class's slice:
+
+      1. fixed partner ``i_min`` = active argmin |alpha|;
+      2. kappa row read from the class's kernel cache (never recomputed);
+      3. all candidates scored by the Lookup-WD tables (bilinear lookup);
+      4. the merge (or the removal fallback when no same-sign partner
+         exists) applied as the shared masked two-row + two-column update,
+         with the merged point's cache row derived in closed form from the
+         two parent rows (the log-space combine of ``core.kernel_cache``);
+      5. the freed slot compacted by moving the old ``last`` row in.
+
+    sv_x: (C, s, d); alpha: (C, s); kmat: (C, s, s) fp32 cache; count, over:
+    (C,).  Classes with ``over`` False are returned BITWISE untouched (all
+    their scatters are redirected out of bounds and dropped).  Returns
+    ``(sv_x, alpha, kmat)``; the caller owns ``count -= over``.
+    """
+    c, s = alpha.shape
+    idx = jnp.arange(s)
+    carange = jnp.arange(c)
+    active = idx[None, :] < count[:, None]                        # (C, s)
+
+    # 1. fixed partners: per-class active min-|alpha| slot.
+    abs_a = jnp.where(active, jnp.abs(alpha), jnp.inf)
+    i_min = jnp.argmin(abs_a, axis=1)                             # (C,)
+    a_min = jnp.take_along_axis(alpha, i_min[:, None], 1)[:, 0]   # (C,)
+
+    # 2. kappa rows from the cache — the engine never touches sv_x for them.
+    kappa_row = jnp.take_along_axis(
+        kmat, i_min[:, None, None], 1)[:, 0, :].astype(alpha.dtype)  # (C, s)
+
+    # 3. Lookup-WD scoring, identical formulas to budget.candidate_scores.
+    same_sign = alpha * a_min[:, None] > 0
+    valid = active & same_sign & (idx[None, :] != i_min[:, None])
+    m, kap = merge_coords(a_min[:, None], alpha, kappa_row)
+    wd = (a_min[:, None] + alpha) ** 2 * bilinear_lookup(wd_table, m, kap)
+    h = bilinear_lookup(h_table, m, kap)
+    wd = jnp.where(valid, wd, jnp.inf)
+    j_star = jnp.argmin(wd, axis=1)                               # (C,)
+    has_partner = jnp.take_along_axis(wd, j_star[:, None], 1)[:, 0] < NO_PARTNER
+
+    # 4. merge math on the chosen pairs (per-class scalars).
+    last = count - 1
+    lo = jnp.minimum(i_min, j_star)
+    hi = jnp.maximum(i_min, j_star)
+    h_m = jnp.take_along_axis(h, j_star[:, None], 1)[:, 0]
+    k_ij = jnp.take_along_axis(kappa_row, j_star[:, None], 1)[:, 0]
+    kap_m = jnp.clip(k_ij, 0.0, 1.0)
+    a_j = jnp.take_along_axis(alpha, j_star[:, None], 1)[:, 0]
+    a_last = jnp.take_along_axis(alpha, last[:, None] % s, 1)[:, 0]
+    a_z = (a_min * _kappa_pow(kap_m, (1.0 - h_m) ** 2)
+           + a_j * _kappa_pow(kap_m, h_m**2)).astype(alpha.dtype)
+    gather_row = lambda a, i: jnp.take_along_axis(
+        a, (i % s)[:, None, None], 1)[:, 0]
+    x_i = gather_row(sv_x, i_min)
+    x_j = gather_row(sv_x, j_star)
+    v_last = gather_row(sv_x, last)
+    z = h_m[:, None] * x_i.astype(jnp.float32) \
+        + (1.0 - h_m[:, None]) * x_j.astype(jnp.float32)
+
+    # Merged point's cache row from the two parent rows (kernel_cache's
+    # log-space combine — the z-row derivation lives inside the event).
+    row_j = gather_row(kmat, j_star)
+    row_last = gather_row(kmat, last)
+    lz = (h_m[:, None] * _safe_log(kappa_row)
+          + (1.0 - h_m[:, None]) * _safe_log(row_j)
+          - (h_m * (1.0 - h_m))[:, None] * _safe_log(k_ij)[:, None])
+    z_row = jnp.exp(jnp.minimum(lz, 0.0)).astype(kmat.dtype)
+
+    # 5. masked two-row + two-column update (budget._merge_once's fused
+    # branch-free form, batched over classes): slot t1 <- z row (or, on the
+    # removal fallback, the old ``last``); slot t2 <- the old ``last``;
+    # non-executing classes scatter out of bounds and drop.
+    col = idx[None, :]
+    z_row_l = jnp.take_along_axis(z_row, (last % s)[:, None], 1)[:, 0]
+    r_merge = jnp.where(col == hi[:, None], z_row_l[:, None], z_row)
+    r_merge = jnp.where(col == lo[:, None], 1.0, r_merge)
+    r_move = jnp.where(col == hi[:, None], 1.0, row_last)
+    r_move = jnp.where(col == lo[:, None], z_row_l[:, None], r_move)
+    r_remove = jnp.where(col == i_min[:, None], 1.0, row_last)
+    t1 = jnp.where(has_partner, lo, i_min)
+    t2 = jnp.where(has_partner, hi, s)          # OOB on removal -> dropped
+    t1 = jnp.where(over, t1, s)                 # OOB when not over -> no-op
+    t2 = jnp.where(over, t2, s)
+    tt = jnp.stack([t1, t2], axis=1)                              # (C, 2)
+    rows = jnp.stack([jnp.where(has_partner[:, None], r_merge, r_remove),
+                      r_move], axis=1).astype(kmat.dtype)         # (C, 2, s)
+    kmat = kmat.at[carange[:, None], tt, :].set(rows, mode="drop")
+    kmat = kmat.at[carange[:, None], :, tt].set(rows, mode="drop")
+
+    sv1 = jnp.where(has_partner[:, None], z.astype(sv_x.dtype), v_last)
+    sv_x = sv_x.at[carange[:, None], tt, :].set(
+        jnp.stack([sv1, v_last], axis=1), mode="drop")
+    a1 = jnp.where(has_partner, a_z, a_last)
+    alpha = alpha.at[carange[:, None], tt].set(
+        jnp.stack([a1, a_last], axis=1).astype(alpha.dtype), mode="drop")
+    last_t = jnp.where(over, last, s)
+    alpha = alpha.at[carange, last_t].set(0.0, mode="drop")
+    return sv_x, alpha, kmat
+
+
 def gss(m, kappa, n_iters: int):
     """Vectorized golden section search maximizing the merge objective.
 

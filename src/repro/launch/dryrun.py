@@ -46,13 +46,16 @@ def run_svm_cell(*, multi_pod: bool, method: str = "lookup-wd",
                  out_dir: str | None = None, budget: int = 16384,
                  dim: int = 1024, batch: int = 8192, verbose=True,
                  layout: str = "replicated", n_classes: int = 8,
-                 stream_steps: int = 0, step: str = "train") -> dict:
+                 stream_steps: int = 0, step: str = "train",
+                 maintenance_engine: str = "xla") -> dict:
     """The paper-technique cell: distributed minibatch BSGD on the mesh.
 
     ``stream_steps > 0`` lowers the streaming-epoch chunk program (one
     resident chunk = a ``stream_steps``-minibatch donated-state scan) instead
     of the single-step cell.  ``step="predict"`` lowers the serving cell
-    (fused scoring on the exported bank, ``layout="serve"`` sharding)."""
+    (fused scoring on the exported bank, ``layout="serve"`` sharding).
+    ``maintenance_engine="pallas"`` lowers the fused maintenance-event
+    engine (sorted-excess schedule over the class-sharded state)."""
     from ..core.distributed import lower_svm_cell
 
     mesh = make_production_mesh(multi_pod=multi_pod)
@@ -60,7 +63,8 @@ def run_svm_cell(*, multi_pod: bool, method: str = "lookup-wd",
     lowered, cfg = lower_svm_cell(mesh, budget=budget, dim=dim, batch=batch,
                                   method=method, layout=layout,
                                   n_classes=n_classes,
-                                  stream_steps=stream_steps, step=step)
+                                  stream_steps=stream_steps, step=step,
+                                  maintenance_engine=maintenance_engine)
     t_lower = time.time() - t0
     t0 = time.time()
     compiled = lowered.compile()
@@ -97,6 +101,8 @@ def run_svm_cell(*, multi_pod: bool, method: str = "lookup-wd",
             tag += f".stream{stream_steps}"
         if step == "predict":
             tag += ".predict"
+        if maintenance_engine != "xla":
+            tag += f".{maintenance_engine}"
         with open(os.path.join(out_dir, tag + ".json"), "w") as f:
             json.dump(result, f, indent=2)
     return result
@@ -175,6 +181,10 @@ def main() -> None:
                     choices=["train", "predict"],
                     help="predict: lower the serving cell (fused scoring on "
                          "the exported bank, layout='serve' sharding)")
+    ap.add_argument("--svm-engine", default="xla",
+                    choices=["xla", "pallas"],
+                    help="pallas: lower the fused maintenance-event engine "
+                         "(kernel cache + sorted-excess event rounds)")
     ap.add_argument("--seq-shard-attn", action="store_true",
                     help="context-parallel attention (hillclimb variant)")
     ap.add_argument("--keep-scan", action="store_true",
@@ -197,7 +207,8 @@ def main() -> None:
         run_svm_cell(multi_pod=args.multi_pod, method=args.svm_method,
                      out_dir=args.out, layout=args.svm_layout,
                      n_classes=args.svm_classes,
-                     stream_steps=args.svm_stream_steps, step=args.svm_step)
+                     stream_steps=args.svm_stream_steps, step=args.svm_step,
+                     maintenance_engine=args.svm_engine)
         return
 
     failures = []

@@ -85,7 +85,8 @@ def serve_svm(*, model_dir: str | None = None, gamma: float = 0.5,
               bank_dtype: str | None = None, n_classes: int = 8,
               budget: int = 64, dim: int = 16, train_rows: int = 2048,
               rows: int = 4096, max_batch: int = 256, min_bucket: int = 8,
-              seed: int = 0, verbose: bool = True) -> dict:
+              top_k: int | None = None, seed: int = 0,
+              verbose: bool = True) -> dict:
     """Serve a budgeted SVM: batched request queue over the fused predict cell.
 
     Loads ``model_dir`` (any ``repro.checkpoint`` dir holding an ``SVMState``
@@ -95,11 +96,15 @@ def serve_svm(*, model_dir: str | None = None, gamma: float = 0.5,
     ``BatchQueue`` (``max_batch`` microbatches, power-of-two pad buckets) and
     the labels are checked bitwise against one direct ``predict_labels``
     call — the parity gate runs on every invocation, not just in tests.
-    Returns the stats dict (rows/sec, p50/p99 microbatch latency, bucket
-    histogram).
+    ``top_k`` additionally serves the k-best class ids + calibrated softmax
+    probabilities for a sample of the trace (``core.predict.top_k_labels`` /
+    ``predict_proba``) and re-asserts that rank 1 is bitwise the argmax
+    labels.  Returns the stats dict (rows/sec, p50/p99 microbatch latency,
+    bucket histogram, top-k sample when requested).
     """
     from ..core import (MulticlassSVMConfig, drive_trace, export_model,
-                        fit_multiclass, load_serve_model, ragged_trace_sizes)
+                        fit_multiclass, load_serve_model, predict_labels,
+                        predict_proba, ragged_trace_sizes, top_k_labels)
     from ..data import make_blobs_multiclass
 
     if model_dir:
@@ -126,6 +131,25 @@ def serve_svm(*, model_dir: str | None = None, gamma: float = 0.5,
     result = drive_trace(model, req_x, ragged_trace_sizes(rows, max_batch, rng),
                          max_batch=max_batch, min_bucket=min_bucket)
     result.update(dim=dim, n_classes=model.n_classes)
+    if top_k:
+        n_sample = min(64, rows)
+        ids, vals = top_k_labels(model, req_x[:n_sample], k=top_k)
+        probs = predict_proba(model, req_x[:n_sample])
+        direct = predict_labels(model, req_x[:n_sample])
+        assert (np.asarray(ids[:, 0]) == np.asarray(direct)).all(), \
+            "top-1 of top_k_labels diverged from predict_labels"
+        p_np = np.asarray(probs)
+        assert np.allclose(p_np.sum(axis=1), 1.0, atol=1e-5)
+        result.update(top_k=int(top_k),
+                      top1_prob_mean=round(float(p_np.max(axis=1).mean()), 4))
+        if verbose:
+            head = [(np.asarray(ids[i]).tolist(),
+                     np.round(np.asarray(vals[i]), 3).tolist(),
+                     round(float(p_np[i].max()), 3))
+                    for i in range(min(3, n_sample))]
+            print(f"[serve] top-{top_k} sample (ids, scores, p_top1): {head}; "
+                  f"mean top-1 prob {result['top1_prob_mean']}; "
+                  f"rank 1 == argmax labels (bitwise)")
     if verbose:
         print(f"[serve] {result['rows']} rows in {result['requests']} "
               f"requests -> "
@@ -166,17 +190,25 @@ def main() -> None:
                     help="svm_bsgd: total request rows in the trace")
     ap.add_argument("--max-batch", type=int, default=256,
                     help="svm_bsgd: microbatch rows per fused predict call")
+    ap.add_argument("--top-k", type=int, default=None, metavar="K",
+                    help="svm_bsgd: also serve the K best class ids + "
+                         "calibrated softmax probabilities (sampled; rank 1 "
+                         "re-asserted bitwise against the argmax labels)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.arch == "svm_bsgd":
         kw = {}
         if args.smoke:
+            # default the top-k drive only for the in-process 4-class model;
+            # --model may point at a binary (or 2-class) checkpoint where an
+            # unasked-for top_k=3 would be an error
             kw = dict(rows=1024, max_batch=64, budget=32, train_rows=1024,
-                      n_classes=4, bank_dtype=args.bank_dtype or "bfloat16")
+                      n_classes=4, bank_dtype=args.bank_dtype or "bfloat16",
+                      top_k=args.top_k or (None if args.model else 3))
         serve_svm(model_dir=args.model, gamma=args.gamma, seed=args.seed,
                   **(kw if args.smoke else
                      dict(rows=args.rows, max_batch=args.max_batch,
-                          bank_dtype=args.bank_dtype)))
+                          bank_dtype=args.bank_dtype, top_k=args.top_k)))
         return
     cfg = get_smoke(args.arch) if args.smoke else get(args.arch)
     with make_host_mesh():

@@ -20,10 +20,11 @@ import numpy as np
 import pytest
 
 from repro.core import (BSGDConfig, BatchQueue, MulticlassSVMConfig,
-                        export_model, fit, fit_multiclass,
-                        fit_multiclass_stream, fit_stream, load_serve_model,
-                        predict, predict_labels, predict_multiclass,
-                        serve_requests)
+                        decision_function_multiclass, export_model, fit,
+                        fit_multiclass, fit_multiclass_stream, fit_stream,
+                        load_serve_model, predict, predict_labels,
+                        predict_multiclass, predict_proba, serve_requests,
+                        top_k_labels)
 from repro.data import ArrayChunks, make_blobs, make_blobs_multiclass
 
 GAMMA = 0.5
@@ -77,6 +78,61 @@ def test_fused_serve_cell_matches_train_side_predict(mc_model):
     want = np.asarray(predict_multiclass(state, x, GAMMA))
     np.testing.assert_array_equal(got, want)
     assert (got == y.astype(np.int32)).mean() > 0.9  # the model is real
+
+
+@pytest.mark.parametrize("k", [1, 2, 5])
+def test_top_k_rank1_is_argmax_and_scores_sorted(mc_model, k):
+    """top_k_labels: rank 1 bitwise == predict_labels; scores descend; every
+    row's id set is k distinct valid classes; ids/scores agree with the
+    training-side per-class decision functions."""
+    cfg, state, x, _ = mc_model
+    model = export_model(state, GAMMA)
+    ids, vals = top_k_labels(model, x[:100], k=k)
+    ids, vals = np.asarray(ids), np.asarray(vals)
+    assert ids.shape == vals.shape == (100, k) and ids.dtype == np.int32
+    np.testing.assert_array_equal(ids[:, 0],
+                                  np.asarray(predict_labels(model, x[:100])))
+    assert (np.diff(vals, axis=1) <= 0).all()            # best first
+    assert ((ids >= 0) & (ids < 5)).all()
+    assert all(len(set(r)) == k for r in ids)            # distinct classes
+    scores = np.asarray(decision_function_multiclass(state, x[:100], GAMMA)).T
+    np.testing.assert_allclose(np.take_along_axis(scores, ids, axis=1), vals,
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_predict_proba_calibrated_softmax(mc_model):
+    """Rows sum to 1, argmax == predict_labels, temperature reorders nothing
+    but flattens confidence monotonically."""
+    cfg, state, x, _ = mc_model
+    model = export_model(state, GAMMA)
+    probs = np.asarray(predict_proba(model, x[:100]))
+    assert probs.shape == (100, 5)
+    np.testing.assert_allclose(probs.sum(axis=1), 1.0, atol=1e-5)
+    np.testing.assert_array_equal(
+        probs.argmax(axis=1).astype(np.int32),
+        np.asarray(predict_labels(model, x[:100])))
+    hot = np.asarray(predict_proba(model, x[:100], temperature=10.0))
+    np.testing.assert_array_equal(probs.argmax(axis=1), hot.argmax(axis=1))
+    assert (hot.max(axis=1) <= probs.max(axis=1) + 1e-6).all()
+
+
+def test_top_k_and_proba_reject_binary_and_bad_k(bin_model, mc_model):
+    cfg, state, x, _ = bin_model
+    bmodel = export_model(state, GAMMA)
+    with pytest.raises(ValueError):
+        top_k_labels(bmodel, x[:4])
+    with pytest.raises(ValueError):
+        predict_proba(bmodel, x[:4])
+    _, mstate, mx, _ = mc_model
+    mmodel = export_model(mstate, GAMMA)
+    with pytest.raises(ValueError):
+        top_k_labels(mmodel, mx[:4], k=6)                # > n_classes
+    with pytest.raises(ValueError):
+        top_k_labels(mmodel, mx[:4], k=0)
+    with pytest.raises(ValueError):
+        predict_proba(mmodel, mx[:4], temperature=0.0)   # NaN factory
+    with pytest.raises(ValueError):
+        predict_proba(mmodel, mx[:4], temperature=-1.0)  # reversed ranking
 
 
 ARRIVALS = [

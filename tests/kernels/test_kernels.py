@@ -194,6 +194,59 @@ def test_multi_merge_scores_rows_match_single_kernel():
                 a_min[q], alpha, kappa[q]))), rtol=1e-4, atol=1e-5)
 
 
+@pytest.mark.parametrize("c,s,d", [(1, 16, 4), (3, 40, 9), (4, 130, 33)])
+def test_merge_event_kernel_matches_ref(c, s, d):
+    """The fused maintenance-event kernel (interpret) vs its oracle: random
+    stacked over-budget states, mixed over/at-budget classes."""
+    from repro.core import kernel_cache
+
+    key = jax.random.PRNGKey(c * 31 + s)
+    k1, k2, k3 = jax.random.split(key, 3)
+    sv = jax.random.normal(k1, (c, s, d))
+    counts = jax.random.randint(k2, (c,), s // 2, s + 1).astype(jnp.int32)
+    alpha = 0.1 * jax.random.normal(k3, (c, s))
+    alpha = jnp.where(jnp.arange(s)[None, :] < counts[:, None], alpha, 0.0)
+    kmat = jax.vmap(lambda v: kernel_cache.exact_cache(v, 0.5))(sv)
+    over = jnp.arange(c) % 2 == 0                    # every other class runs
+    tbl = default_table()
+    got = ops.merge_event(sv, alpha, kmat, counts, over, tbl,
+                          impl="pallas_interpret")
+    want = ops.merge_event(sv, alpha, kmat, counts, over, tbl, impl="ref")
+    for g, w, name in zip(got, want, ("sv_x", "alpha", "kmat")):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-5, atol=1e-5, err_msg=name)
+    # classes with over clear are bitwise untouched on BOTH impls
+    for arrs, orig in ((got, (sv, alpha, kmat)), (want, (sv, alpha, kmat))):
+        for g, o in zip(arrs, orig):
+            np.testing.assert_array_equal(np.asarray(g)[1::2],
+                                          np.asarray(o)[1::2])
+
+
+def test_merge_event_kernel_bf16_bank():
+    """bf16 SV banks round-trip the kernel: untouched rows stay bitwise, the
+    merged row matches the oracle's bf16 cast."""
+    from repro.core import kernel_cache
+
+    c, s, d = 2, 24, 8
+    sv = jax.random.normal(jax.random.PRNGKey(0), (c, s, d)).astype(jnp.bfloat16)
+    alpha = 0.1 * jnp.abs(jax.random.normal(jax.random.PRNGKey(1), (c, s))) + 0.01
+    counts = jnp.asarray([20, 18], jnp.int32)
+    alpha = jnp.where(jnp.arange(s)[None, :] < counts[:, None], alpha, 0.0)
+    kmat = jax.vmap(lambda v: kernel_cache.exact_cache(
+        v.astype(jnp.float32), 0.5))(sv)
+    tbl = default_table()
+    got = ops.merge_event(sv, alpha, kmat, counts, counts > 0, tbl,
+                          impl="pallas_interpret")
+    want = ops.merge_event(sv, alpha, kmat, counts, counts > 0, tbl,
+                           impl="ref")
+    assert got[0].dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(got[0]).astype(np.float32),
+                               np.asarray(want[0]).astype(np.float32),
+                               rtol=2e-2, atol=2e-2)
+    np.testing.assert_allclose(np.asarray(got[1]), np.asarray(want[1]),
+                               rtol=1e-4, atol=1e-5)
+
+
 @pytest.mark.parametrize("c,slots,n,d", [(1, 16, 8, 4), (5, 33, 70, 11),
                                          (8, 128, 130, 32)])
 def test_class_scores_fused_matches_per_class_oracle(c, slots, n, d):
