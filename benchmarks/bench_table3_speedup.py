@@ -34,6 +34,8 @@ ENGINE_VARIANTS = {
                           maintenance="multi-merge", merge_batch=4),
     "lookup-wd+evt": dict(method="lookup-wd", use_kernel_cache=True,
                           maintenance_engine="pallas"),
+    "fused-step": dict(method="lookup-wd", use_kernel_cache=True,
+                       step_engine="pallas"),
 }
 
 
@@ -128,7 +130,8 @@ def run(n: int = 4000, budgets=(50, 150), epochs: int = 2, datasets=None,
     if verbose:
         print(csv_row("dataset", "budget", "t_gss_s", "t_lookup_h_s",
                       "t_lookup_wd_s", "t_lwd_cache_s", "t_lwd_mm4_s",
-                      "t_lwd_evt_s", "improv_h_%", "improv_wd_%"))
+                      "t_lwd_evt_s", "t_fused_step_s", "improv_h_%",
+                      "improv_wd_%"))
     for name in names:
         dim, gen, gamma, lam = DATASETS[name]
         # stable digest, not hash(): str hashing is salted per process
@@ -151,6 +154,7 @@ def run(n: int = 4000, budgets=(50, 150), epochs: int = 2, datasets=None,
                    round(times["lookup-wd+cache"], 3),
                    round(times["lookup-wd+mm4"], 3),
                    round(times["lookup-wd+evt"], 3),
+                   round(times["fused-step"], 3),
                    round(imp_h, 2), round(imp_wd, 2))
             rows.append(row)
             if verbose:

@@ -22,6 +22,7 @@ import time
 SMOKE_BENCHES = (
     ("benchmarks.bench_table2_accuracy", "BENCH_table2_accuracy.json"),
     ("benchmarks.bench_maintenance", "BENCH_maintenance.json"),
+    ("benchmarks.bench_train_step", "BENCH_train_step.json"),
     ("benchmarks.bench_stream", "BENCH_stream.json"),
     ("benchmarks.bench_serve", "BENCH_serve.json"),
 )

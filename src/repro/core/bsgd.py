@@ -84,6 +84,16 @@ class BSGDConfig:
         folded onto the kernel grid, sorted-excess schedule — DESIGN.md
         §11).  ``"pallas"`` requires ``use_kernel_cache=True``,
         ``maintenance="merge"`` and ``method="lookup-wd"``.
+      step_engine: how a WHOLE train step executes — ``"composed"`` (margin
+        rbf -> shrink/insert -> maintenance engine, three phase launches) or
+        ``"pallas"`` (the fused train-step megakernel
+        ``kernels/train_step.py``: margin + insert + event rounds chained in
+        one launch per class block, the kernel cache maintained in VMEM
+        across phases — DESIGN.md §12).  ``"pallas"`` requires
+        ``use_kernel_cache=True``, ``method="lookup-wd"`` and
+        ``maintenance`` in ``("merge", "multi-merge")``; on non-TPU backends
+        it dispatches to the fused reference path ``ref.train_step_fused``
+        (one XLA program instead of three phase launches).
     """
 
     budget: int = 100
@@ -106,6 +116,10 @@ class BSGDConfig:
     maintenance_engine: str = "xla"    # xla | pallas — pallas runs the fused
                                        # all-class merge-event kernel on the
                                        # sorted-excess schedule (DESIGN.md §11)
+    step_engine: str = "composed"      # composed | pallas — pallas fuses the
+                                       # whole step (margin + insert + event
+                                       # rounds) into one launch chain per
+                                       # class block (DESIGN.md §12)
 
     def __post_init__(self):
         if self.maintenance not in budget_mod.STRATEGIES:
@@ -125,6 +139,21 @@ class BSGDConfig:
                 "event off the kernel cache: it requires "
                 "use_kernel_cache=True, maintenance='merge' and "
                 "method='lookup-wd'")
+        if self.maintenance == "removal-project" and not self.use_kernel_cache:
+            raise ValueError(
+                "maintenance='removal-project' projects dropped mass via "
+                "cached kernel rows: it requires use_kernel_cache=True")
+        if self.step_engine not in ("composed", "pallas"):
+            raise ValueError(f"step_engine={self.step_engine!r} not in "
+                             "('composed', 'pallas')")
+        if self.step_engine == "pallas" and not (
+                self.use_kernel_cache and self.method == "lookup-wd"
+                and self.maintenance in ("merge", "multi-merge")):
+            raise ValueError(
+                "step_engine='pallas' runs the fused train-step megakernel "
+                "off the kernel cache: it requires use_kernel_cache=True, "
+                "method='lookup-wd' and maintenance in "
+                "('merge', 'multi-merge')")
 
     @property
     def slots(self) -> int:
@@ -251,6 +280,21 @@ def train_step(cfg: BSGDConfig, table, state: SVMState, xb, yb, *,
 
     xb: (batch, dim), yb: (batch,) in {-1, +1}.
     """
+    if cfg.step_engine == "pallas":
+        # the fused megakernel is class-batched; the binary step lifts to
+        # C = 1 (margin + insert + event rounds in one launch chain)
+        k_bb = kops.rbf_matrix(xb, xb, cfg.gamma, impl=impl)
+        sv, al, km, cnt, st_, nin, nmg = (a[0] for a in kops.train_step(
+            state.sv_x[None], state.alpha[None], state.kmat[None],
+            state.count[None], state.step[None], state.n_inserts[None],
+            state.n_merges[None], xb, yb[None], k_bb, table,
+            budget=cfg.budget, lambda_=cfg.lambda_, gamma=cfg.gamma,
+            batch_size=cfg.batch_size, maintenance=cfg.maintenance,
+            merge_batch=cfg.merge_batch,
+            unroll=cfg.batch_size if cfg.unroll_maintenance else 0,
+            impl=impl))
+        return SVMState(sv_x=sv, alpha=al, count=cnt, step=st_,
+                        n_inserts=nin, n_merges=nmg, kmat=km)
     k_b = kops.rbf_matrix(xb, state.sv_x, cfg.gamma, impl=impl)   # (batch, slots)
     k_bb = (kops.rbf_matrix(xb, xb, cfg.gamma, impl=impl)         # (batch, batch)
             if cfg.use_kernel_cache else None)

@@ -17,6 +17,11 @@ Two orthogonal axes (DESIGN.md §5):
                           count -= P per event
       - ``removal``     — drop the ``count - budget`` smallest-|alpha| SVs in
                           one permutation (cheapest, largest degradation)
+      - ``removal-project`` — BOGD-style removal (Zhao et al., arXiv
+                          1206.4633): drop the same SVs but first project
+                          each dropped SV's mass onto the survivors via its
+                          cached kernel row — closed form, zero new kernel
+                          evaluations, requires the cache
 
 Every strategy reads its kappa rows ``k(x_fixed, .)`` from the persistent
 SV-SV kernel cache (``core.kernel_cache``) when one is passed, and keeps it
@@ -42,7 +47,7 @@ from ..kernels import ops as kops
 from ..kernels import ref as kref
 
 METHODS = ("gss", "gss-precise", "lookup-h", "lookup-wd")
-STRATEGIES = ("merge", "multi-merge", "removal")
+STRATEGIES = ("merge", "multi-merge", "removal", "removal-project")
 _BIG = jnp.inf
 # Scores above this mean "no valid partner" (the Pallas scorer marks invalid
 # slots with a finite 3.4e38 so bf16 casts stay argmin-safe; real WDs are
@@ -357,6 +362,44 @@ def _removal_all(sv_x, alpha, kmat, count, budget: int):
     return sv_x, alpha, kmat, new_count
 
 
+def _removal_project_all(sv_x, alpha, kmat, count, budget: int):
+    """BOGD-style removal+projection (arXiv 1206.4633, closed form).
+
+    Same holes as ``_removal_all`` (the ``count - budget`` smallest-|alpha|
+    active SVs), but before compaction each dropped SV's coefficient mass is
+    projected onto the survivors: survivor ``j`` gains
+
+        sum_i  alpha_i * k(x_i, x_j) / sum_j' k(x_i, x_j')
+
+    over dropped SVs ``i`` — every ``k`` read straight from the cached
+    kernel rows, so the projection costs one masked matmul and no kernel
+    evaluations.  Degrades the weight vector less than plain removal while
+    staying a pure cache read (no new kernels, no solver).
+    """
+    slots = alpha.shape[0]
+    idx = jnp.arange(slots)
+    active = idx < count
+    excess = jnp.maximum(count - budget, 0)
+    abs_a = jnp.where(active, jnp.abs(alpha), _BIG)
+    order = jnp.argsort(abs_a, stable=True)        # smallest |alpha| first
+    rank = jnp.zeros((slots,), jnp.int32).at[order].set(idx.astype(jnp.int32))
+    hole_mask = active & (rank < excess)
+    surv = active & ~hole_mask
+    # dropped-row x survivor-column slice of the cache, everything else 0
+    k_hs = jnp.where(hole_mask[:, None] & surv[None, :],
+                     kmat.astype(jnp.float32), 0.0)
+    denom = jnp.maximum(jnp.sum(k_hs, axis=1), 1e-12)
+    w = jnp.where(hole_mask, alpha.astype(jnp.float32), 0.0) / denom
+    gain = w @ k_hs                                # (slots,) survivor gains
+    alpha = jnp.where(surv, alpha + gain.astype(alpha.dtype), alpha)
+    perm = _compaction_perm(hole_mask)
+    new_count = count - excess
+    sv_x = sv_x[perm]
+    alpha = jnp.where(idx < new_count, alpha[perm], 0.0)
+    kmat = kernel_cache.permute(kmat, perm)
+    return sv_x, alpha, kmat, new_count
+
+
 # --------------------------------------------------------------------------
 # Engine entry point: loop a strategy until count <= budget
 # --------------------------------------------------------------------------
@@ -387,11 +430,16 @@ def run_maintenance(sv_x, alpha, kmat, count, n_events, gamma, table, *,
         raise ValueError(
             f"unknown strategy {strategy!r}; expected one of {STRATEGIES}")
 
-    if strategy == "removal":
+    if strategy in ("removal", "removal-project"):
+        if strategy == "removal-project" and kmat is None:
+            raise ValueError("strategy='removal-project' projects dropped "
+                             "mass via cached kernel rows and needs the "
+                             "kernel cache (use_kernel_cache=True)")
+        fn = _removal_all if strategy == "removal" else _removal_project_all
         over = count > budget
         sv_x, alpha, kmat, count = jax.lax.cond(
             over,
-            lambda args: _removal_all(*args, budget),
+            lambda args: fn(*args, budget),
             lambda args: args,
             (sv_x, alpha, kmat, count))
         return sv_x, alpha, kmat, count, n_events + over.astype(n_events.dtype)

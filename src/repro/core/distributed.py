@@ -260,7 +260,8 @@ def lower_svm_cell(mesh, *, budget: int = 16384, dim: int = 1024,
                    batch: int = 8192, method: str = "lookup-wd",
                    layout: str = "replicated", n_classes: int = 8,
                    stream_steps: int = 0, step: str = "train",
-                   maintenance_engine: str = "xla"):
+                   maintenance_engine: str = "xla",
+                   step_engine: str = "composed"):
     """AOT-lower the production-scale BSGD cell (the paper-technique cell).
 
     Production sizing: budget 16k SVs, 1k features, 8k-example global
@@ -279,12 +280,21 @@ def lower_svm_cell(mesh, *, budget: int = 16384, dim: int = 1024,
     lowers the fused maintenance-event engine instead of the vmapped
     per-class while loop (implies the kernel cache; the event rounds stay
     collective-free under ``layout="class"`` because every array they touch
-    is sharded along the class axis).
+    is sharded along the class axis).  ``step_engine="pallas"`` lowers the
+    fused train-step megakernel (DESIGN.md §12) — the whole step is one
+    launch chain per class block; under ``layout="class"`` every array the
+    fused step touches (bank, alpha, cache, counters) stays sharded along
+    the class axis and the cell adds NO collectives over the §11
+    event-engine cell (identical collective breakdown in the dryrun — the
+    shared all-gathers belong to the kernel-cache-carrying step, not the
+    fusion).
     """
     cfg = BSGDConfig(budget=budget, lambda_=1e-6, gamma=2.0**-7, method=method,
                      batch_size=batch, dtype="float32", sv_dtype="bfloat16",
-                     use_kernel_cache=(maintenance_engine == "pallas"),
-                     maintenance_engine=maintenance_engine)
+                     use_kernel_cache=(maintenance_engine == "pallas"
+                                       or step_engine == "pallas"),
+                     maintenance_engine=maintenance_engine,
+                     step_engine=step_engine)
     if layout == "class":
         cfg = MulticlassSVMConfig(n_classes=n_classes, binary=cfg)
     if step == "predict":

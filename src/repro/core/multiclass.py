@@ -158,8 +158,25 @@ def train_step_multiclass(cfg: MulticlassSVMConfig, table, state: SVMState,
     classes fold onto the kernel grid and the sorted-excess schedule bounds
     the rounds by the worst class's excess instead of C x worst
     (DESIGN.md §11).
+
+    With ``step_engine="pallas"`` the WHOLE step — margin rows, shrink +
+    insert, event rounds — is one ``kernels.ops.train_step`` launch chain:
+    classes fold onto the kernel grid and the cache stays VMEM-resident
+    across all three phases (DESIGN.md §12).
     """
     b = cfg.binary
+    if b.step_engine == "pallas":
+        k_bb = kops.rbf_matrix(xb, xb, b.gamma, impl=impl)
+        y_ovr = ovr_targets(yb, cfg.n_classes, dtype=jnp.dtype(b.dtype))
+        sv, al, km, cnt, st_, nin, nmg = kops.train_step(
+            state.sv_x, state.alpha, state.kmat, state.count, state.step,
+            state.n_inserts, state.n_merges, xb, y_ovr, k_bb, table,
+            budget=b.budget, lambda_=b.lambda_, gamma=b.gamma,
+            batch_size=b.batch_size, maintenance=b.maintenance,
+            merge_batch=b.merge_batch,
+            unroll=b.batch_size if b.unroll_maintenance else 0, impl=impl)
+        return SVMState(sv_x=sv, alpha=al, count=cnt, step=st_,
+                        n_inserts=nin, n_merges=nmg, kmat=km)
     k_b = class_kernel_rows(state.sv_x, xb, b.gamma, impl=impl)   # (C, batch, slots)
     k_bb = (kops.rbf_matrix(xb, xb, b.gamma, impl=impl)
             if b.use_kernel_cache else None)

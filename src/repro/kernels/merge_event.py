@@ -55,14 +55,17 @@ def _onehot_f32(iota, i):
     return (iota == i).astype(jnp.float32)
 
 
-def _merge_event_kernel(count_ref, over_ref, alpha_ref, sv_ref, kmat_ref,
-                        h_tab_ref, wd_tab_ref, alpha_out, sv_out, kmat_out,
-                        *, g: int, block_s: int):
-    count = count_ref[0, 0]
-    over = over_ref[0, 0] > 0
-    alpha_in = alpha_ref[0, :]
-    sv_in = sv_ref[0]
-    kmat = kmat_ref[0]                                   # (S, S) fp32
+def _merge_event_body(count, over, alpha_in, sv_in, kmat, h_tab, wd_tab,
+                      *, g: int, block_s: int):
+    """One whole merge event on VMEM-resident values (no refs).
+
+    count: () int32; over: () bool; alpha_in: (S,) storage dtype; sv_in:
+    (S, D) storage dtype; kmat: (S, S) fp32; tables: (G, G) fp32 arrays.
+    Returns ``(alpha, sv, kmat)`` — bitwise unchanged when ``over`` is
+    clear.  Shared by ``_merge_event_kernel`` (one event per launch) and
+    the fused train-step megakernel (``kernels.train_step``), which chains
+    these bodies as its maintenance rounds without leaving VMEM.
+    """
     alpha = alpha_in.astype(jnp.float32)                 # (S,)
     s = alpha.shape[0]
     iota = jax.lax.broadcasted_iota(jnp.int32, (1, s), 1)[0]
@@ -92,10 +95,10 @@ def _merge_event_kernel(count_ref, over_ref, alpha_ref, sv_ref, kmat_ref,
         w_m = _hat_weights(m, g)                         # (bS, G)
         w_k = _hat_weights(kap, g)
         rows_wd = jax.lax.dot_general(
-            w_m, wd_tab_ref[...], (((1,), (0,)), ((), ())),
+            w_m, wd_tab, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
         rows_h = jax.lax.dot_general(
-            w_m, h_tab_ref[...], (((1,), (0,)), ((), ())),
+            w_m, h_tab, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
         wd_parts.append(denom * denom * jnp.sum(rows_wd * w_k, axis=1))
         h_parts.append(jnp.sum(rows_h * w_k, axis=1))
@@ -160,20 +163,30 @@ def _merge_event_kernel(count_ref, over_ref, alpha_ref, sv_ref, kmat_ref,
     km = jnp.where(row_ids == t2, r_move[None, :], km)
     km = jnp.where(col_ids == t1, r1[:, None], km)
     km = jnp.where(col_ids == t2, r_move[:, None], km)
-    kmat_out[0] = km
 
     d = sv_in.shape[1]
     sv_row_ids = jax.lax.broadcasted_iota(jnp.int32, (s, d), 0)
     sv1 = jnp.where(has_partner, z, v_last)
     sv = jnp.where(sv_row_ids == t1, sv1[None, :].astype(sv_in.dtype), sv_in)
     sv = jnp.where(sv_row_ids == t2, v_last[None, :].astype(sv_in.dtype), sv)
-    sv_out[0] = sv
 
     a1 = jnp.where(has_partner, a_z, a_last)
     al = jnp.where(iota == t1, a1, alpha)
     al = jnp.where(iota == t2, a_last, al)
     al = jnp.where((iota == last) & over, 0.0, al)
-    alpha_out[0, :] = jnp.where(over, al.astype(alpha_in.dtype), alpha_in)
+    al_out = jnp.where(over, al.astype(alpha_in.dtype), alpha_in)
+    return al_out, sv, km
+
+
+def _merge_event_kernel(count_ref, over_ref, alpha_ref, sv_ref, kmat_ref,
+                        h_tab_ref, wd_tab_ref, alpha_out, sv_out, kmat_out,
+                        *, g: int, block_s: int):
+    al, sv, km = _merge_event_body(
+        count_ref[0, 0], over_ref[0, 0] > 0, alpha_ref[0, :], sv_ref[0],
+        kmat_ref[0], h_tab_ref[...], wd_tab_ref[...], g=g, block_s=block_s)
+    alpha_out[0, :] = al
+    sv_out[0] = sv
+    kmat_out[0] = km
 
 
 @functools.partial(jax.jit, static_argnames=("block_s", "interpret"))

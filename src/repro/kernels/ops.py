@@ -25,6 +25,7 @@ from . import merge_lookup as merge_lookup_kernel
 from . import merge_multi as merge_multi_kernel
 from . import rbf_kernel
 from . import ref
+from . import train_step as train_step_kernel
 
 IMPLS = ("auto", "pallas", "pallas_interpret", "ref")
 
@@ -47,6 +48,25 @@ def _pad_to(x, axis: int, multiple: int, value=0.0):
     return jnp.pad(x, widths, constant_values=value)
 
 
+def _pad_to_lane(x, axes, multiple=128, value=0.0):
+    """Pad ``axes`` of ``x`` up to tile multiples (the shared dispatcher
+    plumbing: every kernel wrapper pads with this, slices back after).
+
+    ``axes`` is an axis or tuple of axes; ``multiple`` is one int for all of
+    them or a tuple matched positionally.  Padding is appended (never
+    prepended) with ``value``, so ``out[..slices of the original shape..]``
+    round-trips to ``x`` exactly.
+    """
+    axes = (axes,) if isinstance(axes, int) else tuple(axes)
+    mults = ((multiple,) * len(axes) if isinstance(multiple, int)
+             else tuple(multiple))
+    if len(mults) != len(axes):
+        raise ValueError(f"got {len(axes)} axes but {len(mults)} multiples")
+    for ax, m in zip(axes, mults):
+        x = _pad_to(x, ax, m, value)
+    return x
+
+
 # --------------------------------------------------------------------------
 # RBF kernel matrix / row
 # --------------------------------------------------------------------------
@@ -59,8 +79,8 @@ def rbf_matrix(x, y, gamma, *, impl: str = "auto", block_n: int = 128,
         return ref.rbf_matrix(x, y, gamma)
     n, m = x.shape[0], y.shape[0]
     bd = min(block_d, max(128, x.shape[1]))
-    xp = _pad_to(_pad_to(x, 0, block_n), 1, bd)
-    yp = _pad_to(_pad_to(y, 0, block_m), 1, bd)
+    xp = _pad_to_lane(x, (0, 1), (block_n, bd))
+    yp = _pad_to_lane(y, (0, 1), (block_m, bd))
     out = rbf_kernel.rbf_matrix_pallas(
         xp, yp, gamma, block_n=block_n, block_m=block_m, block_d=bd,
         interpret=(impl == "pallas_interpret"))
@@ -132,7 +152,7 @@ def merge_scores(alpha, kappa_row, valid, a_min, table, *, impl: str = "auto",
         return wd, interp
     s = alpha.shape[0]
     bs = min(block_s, max(128, s))
-    pad = lambda a: _pad_to(a, 0, bs)
+    pad = lambda a: _pad_to_lane(a, 0, bs)
     wd, interp = merge_lookup_kernel.merge_scores_pallas(
         pad(alpha), pad(kappa_row), pad(valid.astype(jnp.float32)), a_min,
         table, block_s=bs, interpret=(impl == "pallas_interpret"))
@@ -164,9 +184,9 @@ def merge_event(sv_x, alpha, kmat, count, over, table, *, impl: str = "auto",
         return ref.merge_event(sv_x, alpha, kmat, count, over,
                                table.h_table, table.wd_table)
     c, s, d = sv_x.shape
-    sv_p = _pad_to(_pad_to(sv_x, 1, 128), 2, 128)
-    al_p = _pad_to(alpha, 1, 128)
-    km_p = _pad_to(_pad_to(kmat, 1, 128), 2, 128)
+    sv_p = _pad_to_lane(sv_x, (1, 2))
+    al_p = _pad_to_lane(alpha, 1)
+    km_p = _pad_to_lane(kmat, (1, 2))
     sv_n, al_n, km_n = merge_event_kernel.merge_event_pallas(
         sv_p, al_p, km_p, count.reshape(c, 1).astype(jnp.int32),
         over.reshape(c, 1).astype(jnp.int32), table.h_table, table.wd_table,
@@ -187,8 +207,8 @@ def gss_solve(m, kappa, *, n_iters: int, impl: str = "auto"):
     flat_m = m.reshape(1, -1).astype(jnp.float32)
     flat_k = kappa.reshape(1, -1).astype(jnp.float32)
     br, bc = 1, min(512, max(128, flat_m.shape[1]))
-    flat_m = _pad_to(flat_m, 1, bc)
-    flat_k = _pad_to(flat_k, 1, bc, value=1.0)  # kappa=1 is a benign problem
+    flat_m = _pad_to_lane(flat_m, 1, bc)
+    flat_k = _pad_to_lane(flat_k, 1, bc, value=1.0)  # kappa=1: benign problem
     h = gss_kernel.gss_pallas(flat_m, flat_k, n_iters=n_iters, block=(br, bc),
                               interpret=(impl == "pallas_interpret"))
     return h[0, : math.prod(shape)].reshape(shape)
@@ -208,8 +228,8 @@ def _multi_merge_rows_pallas(alpha_rows, kappa_rows, valid, a_min, h_table,
     """
     p, s = kappa_rows.shape
     bs = min(block_s, max(128, s))
-    pad_s = lambda a: _pad_to(a, a.ndim - 1, bs)
-    pad_p = lambda a: _pad_to(a, 0, merge_multi_kernel.P_PAD)
+    pad_s = lambda a: _pad_to_lane(a, a.ndim - 1, bs)
+    pad_p = lambda a: _pad_to_lane(a, 0, merge_multi_kernel.P_PAD)
     wds, hs = [], []
     for start in range(0, p, merge_multi_kernel.P_PAD):
         sl = slice(start, min(start + merge_multi_kernel.P_PAD, p))
@@ -258,3 +278,57 @@ def multi_merge_scores(alpha, kappa_rows, valid, a_min, table, *,
                                     table.h_table, table.wd_table,
                                     block_s=block_s,
                                     interpret=(impl == "pallas_interpret"))
+
+
+# --------------------------------------------------------------------------
+# Fused train step (margin + insert + event rounds, one launch chain)
+# --------------------------------------------------------------------------
+@partial(jax.jit, static_argnames=("budget", "lambda_", "gamma", "batch_size",
+                                   "maintenance", "merge_batch", "unroll",
+                                   "impl", "block_s"))
+def train_step(sv_x, alpha, kmat, count, step, n_inserts, n_merges, xb, yb,
+               k_bb, table, *, budget: int, lambda_: float, gamma: float,
+               batch_size: int, maintenance: str = "merge",
+               merge_batch: int = 4, unroll: int = 0, impl: str = "auto",
+               block_s: int = 256):
+    """One WHOLE multiclass train step in one launch chain: margin rows +
+    Pegasos shrink/insert + maintenance event rounds (DESIGN.md §12).
+
+    sv_x: (C, slots, d); alpha: (C, slots); kmat: (C, slots, slots) fp32
+    kernel cache (REQUIRED — the fused step maintains it in VMEM); count /
+    step / n_inserts / n_merges: (C,) int32; xb: (batch, d); yb: (C, batch)
+    one-vs-rest targets; k_bb: (batch, batch) = k(xb, xb); ``table`` a
+    ``MergeLookupTable``.  ``maintenance`` is ``"merge"`` or
+    ``"multi-merge"`` (P = ``merge_batch`` disjoint pairs per round).
+    ``unroll`` only affects the reference path's round loop (the Pallas
+    kernel always inlines ``batch_size`` masked rounds — one minibatch
+    bounds the excess by ``batch_size``).  Returns the updated ``(sv_x,
+    alpha, kmat, count, step, n_inserts, n_merges)``.  Oracle and CPU
+    production path: ``ref.train_step_fused``.
+    """
+    impl = _resolve(impl)
+    if impl == "ref":
+        return ref.train_step_fused(
+            sv_x, alpha, kmat, count, step, n_inserts, n_merges, xb, yb,
+            k_bb, table.h_table, table.wd_table, budget=budget,
+            lambda_=lambda_, gamma=gamma, batch_size=batch_size,
+            maintenance=maintenance, merge_batch=merge_batch, unroll=unroll)
+    c, s, d = sv_x.shape
+    sv_p = _pad_to_lane(sv_x, (1, 2))
+    al_p = _pad_to_lane(alpha, 1)
+    km_p = _pad_to_lane(kmat, (1, 2))
+    xb_p = _pad_to_lane(xb, (0, 1))
+    kbb_p = _pad_to_lane(k_bb, (0, 1))
+    yb_p = _pad_to_lane(yb, 1)
+    as_col = lambda a: a.reshape(c, 1).astype(jnp.int32)
+    sv_n, al_n, km_n, cnt_n, nins_n, nmrg_n = \
+        train_step_kernel.train_step_pallas(
+            sv_p, al_p, km_p, as_col(count), as_col(step),
+            as_col(n_inserts), as_col(n_merges), xb_p, yb_p, kbb_p,
+            table.h_table, table.wd_table, budget=budget, lambda_=lambda_,
+            gamma=gamma, batch_size=batch_size, rounds=batch_size,
+            maintenance=maintenance, merge_batch=merge_batch,
+            block_s=block_s, interpret=(impl == "pallas_interpret"))
+    return (sv_n[:, :s, :d], al_n[:, :s], km_n[:, :s, :s],
+            cnt_n.reshape(c), step + 1, nins_n.reshape(c),
+            nmrg_n.reshape(c))

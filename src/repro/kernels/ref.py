@@ -246,6 +246,225 @@ def merge_event(sv_x, alpha, kmat, count, over, h_table, wd_table):
     return sv_x, alpha, kmat
 
 
+def _multi_merge_event_one(sv_x, alpha, kmat, count, h_table, wd_table, *,
+                           budget: int, merge_batch: int):
+    """One single-class multi-merge event off the kernel cache (the oracle's
+    standalone re-statement of ``core.budget._multi_merge_once`` +
+    ``core.kernel_cache.apply_multi_merge`` — the kernels package cannot
+    import core, so the formulas are restated here and the engine tests pin
+    the two paths against each other).
+
+    sv_x: (s, d); alpha: (s,); kmat: (s, s) fp32 cache (REQUIRED — kappa
+    rows are read, never recomputed); count: () int32.  Up to ``merge_batch``
+    disjoint same-sign pairs merge in one fused scatter (greedy in |alpha|
+    order, Lookup-WD scored, removal fallback per pair), then targeted-move
+    compaction.  Returns ``(sv_x, alpha, kmat, new_count)``.
+    """
+    slots = alpha.shape[0]
+    p = merge_batch
+    idx = jnp.arange(slots)
+    active = idx < count
+
+    # 1. fixed partners: the P smallest-|alpha| active SVs, cheapest first.
+    abs_a = jnp.where(active, jnp.abs(alpha), jnp.inf)
+    _, a_idx = jax.lax.top_k(-abs_a, p)                    # (P,) |alpha| asc
+    a_min = alpha[a_idx]
+
+    # 2. kappa rows straight from the cache.
+    kappa_rows = kmat[a_idx].astype(alpha.dtype)
+
+    # 3. Lookup-WD scoring; a pair may merge with another pair's fixed slot,
+    #    only its own slot is excluded.
+    same_sign = a_min[:, None] * alpha[None, :] > 0
+    self_mask = jnp.zeros((p, slots), bool).at[jnp.arange(p), a_idx].set(True)
+    valid = active[None, :] & same_sign & ~self_mask
+    wd, h = multi_merge_scores(alpha, kappa_rows, valid, a_min,
+                               h_table, wd_table)
+
+    # 4. greedy disjoint pair choice in |alpha| order (static unroll).
+    excess = count - budget
+    taken = jnp.zeros((slots,), bool)
+    consumed = jnp.zeros((p,), bool)
+    n_exec = jnp.int32(0)
+    b_list, merged_list, exec_list = [], [], []
+    for q in range(p):
+        wd_q = jnp.where(taken, jnp.inf, wd[q])
+        j_q = jnp.argmin(wd_q)
+        exec_q = ~consumed[q] & (n_exec < excess)
+        merged_q = exec_q & (wd_q[j_q] < NO_PARTNER)
+        b_list.append(j_q)
+        merged_list.append(merged_q)
+        exec_list.append(exec_q)
+        taken = taken | ((idx == j_q) & merged_q) | ((idx == a_idx[q]) & exec_q)
+        consumed = consumed | ((a_idx == j_q) & merged_q)
+        n_exec = n_exec + exec_q.astype(jnp.int32)
+    b_idx = jnp.stack(b_list)
+    merged = jnp.stack(merged_list)
+    execute = jnp.stack(exec_list)
+
+    # 5. merge math + one fused scatter (z_q overwrites a_q; b_q — or a_q on
+    #    the removal fallback — becomes a hole).
+    h_star = h[jnp.arange(p), b_idx]
+    kap = jnp.clip(kappa_rows[jnp.arange(p), b_idx], 0.0, 1.0)
+    a_z = (a_min * _kappa_pow(kap, (1.0 - h_star) ** 2)
+           + alpha[b_idx] * _kappa_pow(kap, h_star**2))
+    z = h_star[:, None] * sv_x[a_idx] + (1.0 - h_star[:, None]) * sv_x[b_idx]
+    write_idx = jnp.where(merged, a_idx, slots)            # OOB -> dropped
+    hole_idx = jnp.where(merged, b_idx,
+                         jnp.where(execute, a_idx, slots))
+
+    # cache update (kernel_cache.apply_multi_merge's formulas): the P new z
+    # rows/columns in log space plus the (P, P) cross block, symmetrized.
+    lk = _safe_log(kmat[jnp.concatenate([a_idx, b_idx])])
+    lk_a, lk_b = lk[:p], lk[p:]
+    lk_ab = lk_a[jnp.arange(p), b_idx]
+    hc = h_star[:, None]
+    lz = jnp.minimum(hc * lk_a + (1.0 - hc) * lk_b
+                     - (h_star * (1.0 - h_star))[:, None] * lk_ab[:, None],
+                     0.0)
+    z_rows = jnp.exp(lz).astype(kmat.dtype)
+    hr = h_star[None, :]
+    cross = jnp.exp(jnp.minimum(
+        hr * lz[:, a_idx] + (1.0 - hr) * lz[:, b_idx]
+        - (h_star * (1.0 - h_star))[None, :] * lk_ab[None, :], 0.0))
+    cross = 0.5 * (cross + cross.T)
+    cross = jnp.where(jnp.eye(p, dtype=bool), 1.0, cross).astype(kmat.dtype)
+    kmat = kmat.at[write_idx, :].set(z_rows, mode="drop")
+    kmat = kmat.at[:, write_idx].set(z_rows.T, mode="drop")
+    kmat = kmat.at[write_idx[:, None], write_idx[None, :]].set(cross,
+                                                              mode="drop")
+    sv_x = sv_x.at[write_idx].set(z.astype(sv_x.dtype), mode="drop")
+    alpha = alpha.at[write_idx].set(a_z.astype(alpha.dtype), mode="drop")
+
+    # 6. targeted-move compaction: k-th hole below the new watermark takes
+    #    the k-th surviving slot above it.
+    hole_mask = jnp.zeros((slots,), bool).at[hole_idx].set(True, mode="drop")
+    new_count = count - n_exec
+    front_hole = hole_mask & (idx < new_count)
+    tail_surv = active & ~hole_mask & (idx >= new_count)
+    dst = jnp.sort(jnp.where(front_hole, idx, slots))[:p]     # OOB-padded
+    src = jnp.sort(jnp.where(tail_surv, idx, slots))[:p]
+    src_c = jnp.minimum(src, slots - 1)
+    rows = kmat[src_c]
+    kmat = kmat.at[dst, :].set(rows, mode="drop")
+    kmat = kmat.at[:, dst].set(rows.T, mode="drop")
+    kmat = kmat.at[dst[:, None], dst[None, :]].set(rows[:, src_c],
+                                                   mode="drop")
+    sv_x = sv_x.at[dst].set(sv_x[src_c], mode="drop")
+    alpha = alpha.at[dst].set(alpha[src_c], mode="drop")
+    alpha = jnp.where(idx < new_count, alpha, 0.0)
+    return sv_x, alpha, kmat, new_count
+
+
+def multi_merge_event(sv_x, alpha, kmat, count, over, h_table, wd_table, *,
+                      budget: int, merge_batch: int):
+    """One fused multi-merge maintenance round over stacked classes.
+
+    The multi-merge counterpart of ``merge_event``: per class with ``over``
+    set, up to ``merge_batch`` disjoint same-sign pairs retire in one event
+    (greedy in |alpha| order, Lookup-WD scored off the resident cache);
+    classes with ``over`` clear return bitwise untouched.  Returns
+    ``(sv_x, alpha, kmat, count)`` — unlike ``merge_event`` the new count is
+    returned (an event retires a data-dependent number of pairs).
+    """
+    new = jax.vmap(lambda sv, al, km, c: _multi_merge_event_one(
+        sv, al, km, c, h_table, wd_table, budget=budget,
+        merge_batch=merge_batch))(sv_x, alpha, kmat, count)
+    ov = over.astype(bool)
+
+    def mask(n, o):
+        return jnp.where(ov.reshape((-1,) + (1,) * (n.ndim - 1)), n, o)
+
+    return (mask(new[0], sv_x), mask(new[1], alpha), mask(new[2], kmat),
+            jnp.where(ov, new[3], count))
+
+
+def train_step_fused(sv_x, alpha, kmat, count, step, n_inserts, n_merges,
+                     xb, yb, k_bb, h_table, wd_table, *, budget: int,
+                     lambda_: float, gamma: float, batch_size: int,
+                     maintenance: str = "merge", merge_batch: int = 4,
+                     unroll: int = 0):
+    """Whole fused multiclass train step: margin + insert + event rounds
+    (the oracle for ``train_step.train_step_pallas`` AND the production CPU
+    path behind ``ops.train_step``).
+
+    Executes, for every class at once, exactly what the composed engine does
+    in three phase launches:
+
+      1. the RBF margin rows ``k(xb, sv_c)`` from ONE flattened kernel call
+         (identical fp path to ``core.multiclass.class_kernel_rows``);
+      2. the Pegasos shrink + masked violator insert, reusing the margin
+         rows as the new cache rows/columns (``bsgd.insert_from_rows`` +
+         ``kernel_cache.insert_rows`` semantics, vmapped);
+      3. masked maintenance event rounds until no class is over budget —
+         ``merge_event`` rounds for ``maintenance="merge"``,
+         ``multi_merge_event`` rounds for ``"multi-merge"`` (``unroll > 0``
+         inlines that many masked rounds instead of the while loop, same
+         contract as ``core.budget.run_maintenance``).
+
+    sv_x: (C, s, d); alpha: (C, s); kmat: (C, s, s) fp32 (REQUIRED); count /
+    step / n_inserts / n_merges: (C,) int32; xb: (batch, d); yb: (C, batch)
+    one-vs-rest targets in {-1, +1}; k_bb: (batch, batch) = k(xb, xb).
+    Returns the updated ``(sv_x, alpha, kmat, count, step, n_inserts,
+    n_merges)``.
+    """
+    c, s, d = sv_x.shape
+    slots = s
+    k = rbf_matrix(xb, sv_x.reshape(c * s, d), gamma)
+    k_b = jnp.moveaxis(k.reshape(xb.shape[0], c, s), 1, 0)    # (C, batch, s)
+
+    def insert_one(sv, al, km, cnt, t, nin, yc, kb):
+        eta = 1.0 / (lambda_ * t)
+        active = jnp.arange(slots) < cnt
+        f = kb.astype(al.dtype) @ jnp.where(active, al, 0.0)
+        margin = yc * f
+        al = al * (1.0 - eta * lambda_)
+        viol = margin < 1.0
+        pos = cnt + jnp.cumsum(viol.astype(jnp.int32)) - 1
+        tgt = jnp.where(viol, pos, slots)                 # OOB -> dropped
+        sv = sv.at[tgt].set(xb.astype(sv.dtype), mode="drop")
+        new_alpha = (eta * yc / batch_size).astype(al.dtype)
+        al = al.at[tgt].set(new_alpha, mode="drop")
+        n_new = jnp.sum(viol).astype(jnp.int32)
+        # cache insert: the margin rows double as the new rows/columns, with
+        # the new-vs-new block patched in at the inserted slots
+        rows = kb.astype(km.dtype).at[:, tgt].set(k_bb.astype(km.dtype),
+                                                  mode="drop")
+        km = km.at[tgt, :].set(rows, mode="drop")
+        km = km.at[:, tgt].set(rows.T, mode="drop")
+        km = km.at[tgt, tgt].set(1.0, mode="drop")
+        return sv, al, km, cnt + n_new, t + 1, nin + n_new
+
+    sv_x, alpha, kmat, count, step, n_inserts = jax.vmap(insert_one)(
+        sv_x, alpha, kmat, count, step, n_inserts, yb, k_b)
+
+    if maintenance == "merge":
+        def round_(carry):
+            sv, al, km, cnt, n = carry
+            ov = cnt > budget
+            sv, al, km = merge_event(sv, al, km, cnt, ov, h_table, wd_table)
+            return (sv, al, km, cnt - ov.astype(cnt.dtype),
+                    n + ov.astype(n.dtype))
+    else:
+        def round_(carry):
+            sv, al, km, cnt, n = carry
+            ov = cnt > budget
+            sv, al, km, cnt = multi_merge_event(
+                sv, al, km, cnt, ov, h_table, wd_table, budget=budget,
+                merge_batch=merge_batch)
+            return sv, al, km, cnt, n + ov.astype(n.dtype)
+
+    carry = (sv_x, alpha, kmat, count, n_merges)
+    if unroll:
+        for _ in range(unroll):
+            carry = round_(carry)
+    else:
+        carry = jax.lax.while_loop(lambda cr: jnp.any(cr[3] > budget),
+                                   round_, carry)
+    sv_x, alpha, kmat, count, n_merges = carry
+    return sv_x, alpha, kmat, count, step, n_inserts, n_merges
+
+
 def gss(m, kappa, n_iters: int):
     """Vectorized golden section search maximizing the merge objective.
 

@@ -47,7 +47,8 @@ def run_svm_cell(*, multi_pod: bool, method: str = "lookup-wd",
                  dim: int = 1024, batch: int = 8192, verbose=True,
                  layout: str = "replicated", n_classes: int = 8,
                  stream_steps: int = 0, step: str = "train",
-                 maintenance_engine: str = "xla") -> dict:
+                 maintenance_engine: str = "xla",
+                 step_engine: str = "composed") -> dict:
     """The paper-technique cell: distributed minibatch BSGD on the mesh.
 
     ``stream_steps > 0`` lowers the streaming-epoch chunk program (one
@@ -55,7 +56,9 @@ def run_svm_cell(*, multi_pod: bool, method: str = "lookup-wd",
     of the single-step cell.  ``step="predict"`` lowers the serving cell
     (fused scoring on the exported bank, ``layout="serve"`` sharding).
     ``maintenance_engine="pallas"`` lowers the fused maintenance-event
-    engine (sorted-excess schedule over the class-sharded state)."""
+    engine (sorted-excess schedule over the class-sharded state).
+    ``step_engine="pallas"`` lowers the fused train-step megakernel
+    (margin + insert + event rounds in one launch chain per class block)."""
     from ..core.distributed import lower_svm_cell
 
     mesh = make_production_mesh(multi_pod=multi_pod)
@@ -64,7 +67,8 @@ def run_svm_cell(*, multi_pod: bool, method: str = "lookup-wd",
                                   method=method, layout=layout,
                                   n_classes=n_classes,
                                   stream_steps=stream_steps, step=step,
-                                  maintenance_engine=maintenance_engine)
+                                  maintenance_engine=maintenance_engine,
+                                  step_engine=step_engine)
     t_lower = time.time() - t0
     t0 = time.time()
     compiled = lowered.compile()
@@ -103,6 +107,8 @@ def run_svm_cell(*, multi_pod: bool, method: str = "lookup-wd",
             tag += ".predict"
         if maintenance_engine != "xla":
             tag += f".{maintenance_engine}"
+        if step_engine != "composed":
+            tag += ".fusedstep"
         with open(os.path.join(out_dir, tag + ".json"), "w") as f:
             json.dump(result, f, indent=2)
     return result
@@ -185,6 +191,10 @@ def main() -> None:
                     choices=["xla", "pallas"],
                     help="pallas: lower the fused maintenance-event engine "
                          "(kernel cache + sorted-excess event rounds)")
+    ap.add_argument("--svm-step-engine", default="composed",
+                    choices=["composed", "pallas"],
+                    help="pallas: lower the fused train-step megakernel "
+                         "(margin + insert + event rounds, one launch chain)")
     ap.add_argument("--seq-shard-attn", action="store_true",
                     help="context-parallel attention (hillclimb variant)")
     ap.add_argument("--keep-scan", action="store_true",
@@ -208,7 +218,8 @@ def main() -> None:
                      out_dir=args.out, layout=args.svm_layout,
                      n_classes=args.svm_classes,
                      stream_steps=args.svm_stream_steps, step=args.svm_step,
-                     maintenance_engine=args.svm_engine)
+                     maintenance_engine=args.svm_engine,
+                     step_engine=args.svm_step_engine)
         return
 
     failures = []

@@ -174,6 +174,8 @@ def analyze(compiled, *, arch: str, shape: str, mesh, strategy: str,
             model_flops_global: float, hlo_text: str | None = None,
             act_bytes: float = 0.0) -> Roofline:
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):       # newer jax: one dict per program
+        cost = cost[0] if cost else {}
     mem = compiled.memory_analysis()
     text = hlo_text if hlo_text is not None else compiled.as_text()
     coll = collective_bytes(text)

@@ -209,4 +209,5 @@ def test_config_validation():
         BSGDConfig(maintenance="bogus")
     with pytest.raises(ValueError):
         BSGDConfig(budget=4, maintenance="multi-merge", merge_batch=8)
-    assert set(STRATEGIES) == {"merge", "multi-merge", "removal"}
+    assert set(STRATEGIES) == {"merge", "multi-merge", "removal",
+                               "removal-project"}

@@ -53,6 +53,8 @@ def test_vmap_train_step_matches_per_class_loop(strategy, use_cache):
     and the float state within fp32 round-off — tight enough that any real
     divergence (a different merge partner, a dropped event) fails loudly.
     """
+    if strategy == "removal-project" and not use_cache:
+        pytest.skip("removal-project projects via cached kernel rows")
     cfg = BSGDConfig(budget=12, lambda_=1e-3, gamma=0.5, method="lookup-wd",
                      batch_size=4, use_kernel_cache=use_cache,
                      maintenance=strategy, unroll_maintenance=True)

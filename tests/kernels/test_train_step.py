@@ -1,0 +1,139 @@
+"""Fused train-step megakernel (interpret mode) vs the ``ref`` oracle.
+
+``train_step.train_step_pallas`` folds classes onto the grid axis and runs
+margin + insert + maintenance event rounds in one launch chain.  These
+sweeps pin it (via ``ops.train_step`` with ``impl="pallas_interpret"``, so
+the padding path is exercised too) against ``ref.train_step_fused``:
+integer decisions BITWISE, float state inside fp32 round-off.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import BSGDConfig, kernel_cache
+from repro.kernels import ops
+
+GAMMA = 0.5
+LAMBDA = 1e-3
+
+
+def _steady_state(c, slots, dim, count, seed=0):
+    """Random stacked near-budget state with exact caches."""
+    rng = np.random.default_rng(seed)
+    sv = jnp.asarray(rng.normal(size=(c, slots, dim)), jnp.float32)
+    al = jnp.asarray(rng.normal(size=(c, slots)) * 0.05, jnp.float32)
+    km = jax.vmap(lambda x: kernel_cache.exact_cache(x, GAMMA))(sv)
+    cnt = jnp.full((c,), count, jnp.int32)
+    al = jnp.where(jnp.arange(slots)[None, :] < cnt[:, None], al, 0.0)
+    return sv, al, km, cnt
+
+
+def _step_args(c, slots, dim, count, batch, seed=0):
+    sv, al, km, cnt = _steady_state(c, slots, dim, count, seed)
+    rng = np.random.default_rng(seed + 99)
+    xb = jnp.asarray(rng.normal(size=(batch, dim)), jnp.float32)
+    yb = jnp.asarray(np.where(rng.random((c, batch)) < 0.5, -1.0, 1.0),
+                     jnp.float32)
+    k_bb = ops.rbf_matrix(xb, xb, GAMMA, impl="ref")
+    step = jnp.full((c,), 5, jnp.int32)
+    z = jnp.zeros((c,), jnp.int32)
+    return (sv, al, km, cnt, step, z, z, xb, yb, k_bb)
+
+
+def _assert_step_parity(ref_out, pl_out, *, tag, atol=5e-5):
+    names = ("sv_x", "alpha", "kmat", "count", "step", "n_inserts",
+             "n_merges")
+    for name, r, p in zip(names, ref_out, pl_out):
+        assert r.dtype == p.dtype, f"{tag}:{name} dtype"
+        r = np.asarray(r, np.float32) if r.dtype == jnp.bfloat16 \
+            else np.asarray(r)
+        p = np.asarray(p, np.float32) if p.dtype == jnp.bfloat16 \
+            else np.asarray(p)
+        if np.issubdtype(r.dtype, np.integer):
+            np.testing.assert_array_equal(r, p, err_msg=f"{tag}:{name}")
+        else:
+            np.testing.assert_allclose(r, p, rtol=1e-5, atol=atol,
+                                       err_msg=f"{tag}:{name}")
+
+
+@pytest.mark.parametrize("maintenance", ["merge", "multi-merge"])
+@pytest.mark.parametrize("c,budget,dim,batch", [
+    (2, 120, 128, 8),                 # slots = 128: lane-aligned fast path
+    (3, 40, 6, 8),                    # slots = 48: pad path, tiny dim
+    (1, 60, 17, 4),                   # single class, odd dim
+])
+def test_fused_step_kernel_matches_ref(maintenance, c, budget, dim, batch):
+    cfg = BSGDConfig(budget=budget, lambda_=LAMBDA, gamma=GAMMA,
+                     batch_size=batch, method="lookup-wd",
+                     use_kernel_cache=True)
+    args = _step_args(c, cfg.slots, dim, budget - 2, batch,
+                      seed=c * 13 + budget)
+    kw = dict(budget=budget, lambda_=LAMBDA, gamma=GAMMA, batch_size=batch,
+              maintenance=maintenance, merge_batch=4)
+    ref_out = ops.train_step(*args, cfg.table(), impl="ref", **kw)
+    pl_out = ops.train_step(*args, cfg.table(), impl="pallas_interpret",
+                            **kw)
+    # the steady state actually forces maintenance events this step
+    assert int(jnp.sum(ref_out[6])) > 0
+    _assert_step_parity(ref_out, pl_out, tag=maintenance)
+
+
+def test_fused_step_kernel_under_budget_noop_rounds():
+    """A state far below budget inserts but never merges — the masked event
+    rounds must be bitwise no-ops."""
+    cfg = BSGDConfig(budget=100, lambda_=LAMBDA, gamma=GAMMA, batch_size=8,
+                     method="lookup-wd", use_kernel_cache=True)
+    args = _step_args(2, cfg.slots, 10, 20, 8, seed=1)
+    kw = dict(budget=100, lambda_=LAMBDA, gamma=GAMMA, batch_size=8,
+              maintenance="merge", merge_batch=4)
+    ref_out = ops.train_step(*args, cfg.table(), impl="ref", **kw)
+    pl_out = ops.train_step(*args, cfg.table(), impl="pallas_interpret",
+                            **kw)
+    assert int(jnp.sum(ref_out[6])) == 0
+    np.testing.assert_array_equal(np.asarray(ref_out[3]),
+                                  np.asarray(pl_out[3]))
+    _assert_step_parity(ref_out, pl_out, tag="noop")
+
+
+def test_fused_step_kernel_bf16_bank():
+    cfg = BSGDConfig(budget=40, lambda_=LAMBDA, gamma=GAMMA, batch_size=8,
+                     method="lookup-wd", use_kernel_cache=True,
+                     sv_dtype="bfloat16")
+    sv, al, km, cnt, step, z, z2, xb, yb, k_bb = _step_args(
+        2, cfg.slots, 9, 38, 8, seed=3)
+    sv = sv.astype(jnp.bfloat16)
+    km = jax.vmap(lambda x: kernel_cache.exact_cache(x, GAMMA))(sv)
+    kw = dict(budget=40, lambda_=LAMBDA, gamma=GAMMA, batch_size=8,
+              maintenance="multi-merge", merge_batch=4)
+    args = (sv, al, km, cnt, step, z, z2, xb, yb, k_bb)
+    ref_out = ops.train_step(*args, cfg.table(), impl="ref", **kw)
+    pl_out = ops.train_step(*args, cfg.table(), impl="pallas_interpret",
+                            **kw)
+    assert pl_out[0].dtype == jnp.bfloat16
+    assert pl_out[2].dtype == jnp.float32
+    _assert_step_parity(ref_out, pl_out, tag="bf16", atol=1e-2)
+
+
+def test_fused_step_kernel_multi_step_chain():
+    """Three fused steps back to back stay on the oracle trajectory (state
+    feeds state — any drift would compound and break the integer parity)."""
+    cfg = BSGDConfig(budget=24, lambda_=LAMBDA, gamma=GAMMA, batch_size=8,
+                     method="lookup-wd", use_kernel_cache=True)
+    args = _step_args(2, cfg.slots, 7, 22, 8, seed=4)
+    kw = dict(budget=24, lambda_=LAMBDA, gamma=GAMMA, batch_size=8,
+              maintenance="merge", merge_batch=4)
+    table = cfg.table()
+    st_r, st_p = args, args
+    rng = np.random.default_rng(11)
+    for i in range(3):
+        xb = jnp.asarray(rng.normal(size=(8, 7)), jnp.float32)
+        yb = jnp.asarray(np.where(rng.random((2, 8)) < 0.5, -1.0, 1.0),
+                         jnp.float32)
+        k_bb = ops.rbf_matrix(xb, xb, GAMMA, impl="ref")
+        st_r = ops.train_step(*st_r[:7], xb, yb, k_bb, table, impl="ref",
+                              **kw)
+        st_p = ops.train_step(*st_p[:7], xb, yb, k_bb, table,
+                              impl="pallas_interpret", **kw)
+        _assert_step_parity(st_r, st_p, tag=f"chain-step{i}")
+    assert int(jnp.sum(st_r[6])) > 0

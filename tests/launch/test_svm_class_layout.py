@@ -40,6 +40,69 @@ print("OK engine cell", compiled.memory_analysis().argument_size_in_bytes)
     assert "OK engine cell" in out
 
 
+def test_lower_svm_cell_class_layout_fused_step(run_py):
+    """The fused train-step megakernel cell (``step_engine="pallas"``,
+    DESIGN.md §12) lowers and compiles with classes sharded over `model`."""
+    out = run_py(r"""
+from repro.core.distributed import lower_svm_cell
+from repro.launch.mesh import make_mesh
+
+mesh = make_mesh((2, 4), ("data", "model"))
+lowered, cfg = lower_svm_cell(mesh, budget=64, dim=32, batch=16,
+                              layout="class", n_classes=8,
+                              step_engine="pallas")
+assert cfg.binary.step_engine == "pallas"
+assert cfg.binary.use_kernel_cache
+compiled = lowered.compile()
+print("OK fused-step cell", compiled.memory_analysis().argument_size_in_bytes)
+""")
+    assert "OK fused-step cell" in out
+
+
+def test_distributed_class_step_fused_engine_matches_single_device(run_py):
+    """The pjit'd class-layout step with the fused train-step engine == the
+    single-device composed step, with maintenance actually firing."""
+    out = run_py(r"""
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import (BSGDConfig, MulticlassSVMConfig, init_multiclass_state,
+                        train_step_multiclass)
+from repro.core.distributed import make_distributed_step
+from repro.launch.mesh import make_mesh
+from repro.data import make_blobs_multiclass
+
+cfg_c = MulticlassSVMConfig(4, BSGDConfig(budget=8, lambda_=1e-3, gamma=0.5,
+                                          method="lookup-wd", batch_size=16,
+                                          use_kernel_cache=True))
+cfg_f = MulticlassSVMConfig(4, BSGDConfig(budget=8, lambda_=1e-3, gamma=0.5,
+                                          method="lookup-wd", batch_size=16,
+                                          use_kernel_cache=True,
+                                          step_engine="pallas"))
+table = cfg_c.table()
+x, y = make_blobs_multiclass(jax.random.PRNGKey(0), 64, 8, 4, sep=1.0)
+state = init_multiclass_state(cfg_c, 8)
+for i in range(0, 32, 16):   # warm the model so maintenance fires
+    state = train_step_multiclass(cfg_c, table, state, x[i:i+16], y[i:i+16],
+                                  impl="ref")
+ref = train_step_multiclass(cfg_c, table, state, x[32:48], y[32:48],
+                            impl="ref")
+assert int(jnp.sum(ref.n_merges)) > 0, "budget never bit"
+
+mesh = make_mesh((2, 4), ("data", "model"))
+step, args, in_sh, out_sh = make_distributed_step(cfg_f, mesh, 8, table,
+                                                  layout="class")
+with mesh:
+    out = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh)(
+        state, table, x[32:48], y[32:48])
+for name in ("count", "step", "n_inserts", "n_merges"):
+    assert np.array_equal(np.asarray(getattr(out, name)),
+                          np.asarray(getattr(ref, name))), name
+err = float(jnp.max(jnp.abs(out.alpha - ref.alpha)))
+assert err < 1e-4, err
+print("OK fused-step parity", err, int(jnp.sum(out.n_merges)))
+""")
+    assert "OK fused-step parity" in out
+
+
 def test_distributed_class_step_event_engine_matches_single_device(run_py):
     """The pjit'd class-layout step with the fused event engine == the
     single-device lockstep step, with maintenance actually firing."""
