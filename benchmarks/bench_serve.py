@@ -71,8 +71,9 @@ def main():
         accs[tag] = round(float((direct == ybe_np.astype(np.int32)).mean()), 4)
         banks[tag] = drive_trace(model, xbe_np, sizes,
                                  max_batch=args.max_batch)
-        banks[tag]["bucket_counts"] = {
-            str(k): v for k, v in banks[tag]["bucket_counts"].items()}
+        for field in ("bucket_counts", "bucket_occupancy"):
+            banks[tag][field] = {str(k): v
+                                 for k, v in banks[tag][field].items()}
         banks[tag]["bench_accuracy"] = accs[tag]
 
     assert accs["bf16"] >= accs["fp32"], (

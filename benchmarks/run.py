@@ -25,6 +25,7 @@ SMOKE_BENCHES = (
     ("benchmarks.bench_train_step", "BENCH_train_step.json"),
     ("benchmarks.bench_stream", "BENCH_stream.json"),
     ("benchmarks.bench_serve", "BENCH_serve.json"),
+    ("benchmarks.bench_pipeline", "BENCH_pipeline.json"),
 )
 
 

@@ -5,9 +5,9 @@ from . import budget, kernel_cache, merge_math
 # then restores ``repro.core.predict`` to the binary predict *function*
 # (the public API since PR 0) — import serving symbols from ``repro.core``
 # directly, never via ``repro.core.predict.<name>``
-from .predict import (BatchQueue, ServeModel, default_buckets, drive_trace, export_model, load_serve_model,
-                      predict_labels, predict_proba, ragged_trace_sizes, serve_requests, serve_scores,
-                      top_k_labels)
+from .predict import (AsyncBatchQueue, BatchQueue, ModelBank, ServeModel, default_buckets, drive_trace,
+                      export_model, load_serve_model, pad_bucket, predict_labels, predict_proba,
+                      ragged_trace_sizes, serve_requests, serve_scores, top_k_labels)
 from .bsgd import (BSGDConfig, SVMState, accuracy, decision_function, fit, fit_stream, init_state,
                    insert_from_rows, predict, train_chunk, train_epoch, train_epoch_stream, train_step,
                    train_step_from_rows)
@@ -22,8 +22,8 @@ from .merge_math import (EPS_PRECISE, EPS_STANDARD, KAPPA_UNIMODAL, golden_secti
                          merge_alpha_z, merge_point, s_objective, solve_merge, wd_norm_at, weight_degradation)
 
 __all__ = [
-    "BSGDConfig", "BatchQueue", "SVMState", "MaintenanceInfo", "MergeLookupTable", "METHODS",
-    "MulticlassSVMConfig", "STRATEGIES", "ServeModel", "accuracy", "accuracy_multiclass",
+    "AsyncBatchQueue", "BSGDConfig", "BatchQueue", "SVMState", "MaintenanceInfo", "MergeLookupTable", "METHODS",
+    "ModelBank", "MulticlassSVMConfig", "STRATEGIES", "ServeModel", "accuracy", "accuracy_multiclass",
     "bilinear_lookup", "budget", "build_lookup_table",
     "build_merge_tables", "check_labels", "class_kernel_rows", "decision_function",
     "decision_function_multiclass", "default_buckets", "default_table",
@@ -32,7 +32,7 @@ __all__ = [
     "golden_section_search", "gss_num_iters",
     "init_multiclass_state", "init_state", "insert_from_rows", "kernel_cache",
     "load_serve_model", "maintenance_step", "merge_alpha_z", "merge_math",
-    "merge_point", "ovr_targets", "predict", "predict_labels",
+    "merge_point", "ovr_targets", "pad_bucket", "predict", "predict_labels",
     "predict_multiclass", "predict_proba", "ragged_trace_sizes",
     "run_maintenance", "run_maintenance_classes", "s_objective",
     "serve_requests", "serve_scores",

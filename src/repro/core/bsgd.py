@@ -381,30 +381,22 @@ def train_chunk(cfg: BSGDConfig, table, state: SVMState, xc, yc, *,
     return state
 
 
-def _stream_epoch(chunk_fn, state, source, *, batch_size: int, key,
-                  start_chunk: int = 0, carry=None, on_chunk=None,
-                  max_chunks: int | None = None):
-    """Generic one-epoch streaming driver shared by binary and multi-class.
+def _assemble_chunks(source, key, *, batch_size: int, start_chunk: int,
+                     end: int, carry, stage=None):
+    """Host-side assembly of one epoch: yield ``(pos, xc, yc, carry)``.
 
-    ``chunk_fn(state, xc, yc) -> state`` runs one jitted chunk program.
-    Rows left over when a chunk is not a multiple of ``batch_size`` *carry*
-    into the next chunk (so the realized batch sequence equals the in-memory
-    one on the concatenated order); the final sub-batch rows of the epoch are
-    dropped, matching ``train_epoch``'s truncation.  Chunks are staged in the
-    source's own dtypes (no forced cast — streamed and in-memory training see
-    the same arrays); checkpointed carry rows are stored as float32 and cast
-    back on resume.  ``on_chunk(state, pos, carry)`` fires after each chunk
-    program — the checkpoint hook.  Returns ``(state, next_chunk, carry,
-    chunks_run)``; ``next_chunk < source.n_chunks`` means the epoch was cut
-    short by ``max_chunks``.
+    The single definition of the chunk -> minibatch-block transform shared by
+    the synchronous and prefetched streaming paths (bitwise-identity between
+    them is BY CONSTRUCTION: the async path runs this very generator on a
+    worker thread).  Per chunk: prepend the previous chunk's remainder rows,
+    reshape the batch-aligned part to ``(steps, batch, dim)`` (``xc/yc`` are
+    None for a chunk that yields no full batch), and copy the new remainder
+    out of the chunk buffer (O(chunk) residency promise).  ``stage`` maps the
+    assembled blocks (the ``jax.device_put`` hook of the prefetched path).
     """
     from ..data import stream as stream_mod
 
     cx, cy = carry if carry is not None else (None, None)
-    # resolve the budget to an exclusive end position up front so chunks past
-    # it are never read from the source
-    end = (source.n_chunks if max_chunks is None
-           else min(source.n_chunks, start_chunk + max_chunks))
     for pos, x, y in stream_mod.iter_epoch(source, key,
                                            start_chunk=start_chunk,
                                            end_chunk=end):
@@ -417,16 +409,117 @@ def _stream_epoch(chunk_fn, state, source, *, batch_size: int, key,
         # copy the (< batch_size rows) remainder: a view would keep the whole
         # chunk buffer alive through the next chunk's load (O(chunk) promise)
         cx, cy = x[used:].copy(), y[used:].copy()
+        xc = yc = None
         if steps:
-            state = chunk_fn(state,
-                             x[:used].reshape(steps, batch_size, x.shape[1]),
-                             y[:used].reshape(steps, batch_size))
-        if on_chunk is not None:
-            on_chunk(state, pos, (cx, cy))
-    if cx is None:
-        cx = np.zeros((0, source.dim), np.float32)
-        cy = np.zeros((0,), np.float32)
-    return state, end, (cx, cy), end - start_chunk
+            xc = x[:used].reshape(steps, batch_size, x.shape[1])
+            yc = y[:used].reshape(steps, batch_size)
+            if stage is not None:
+                xc, yc = stage(xc, yc)
+        yield pos, xc, yc, (cx, cy)
+
+
+def _stage_chunks(gen, depth: int):
+    """Run an assembly generator ``depth`` items ahead on a worker thread.
+
+    The prefetched streaming pipeline: the worker parses/shuffles/assembles
+    (and, via the generator's ``stage`` hook, ``jax.device_put``s) chunk
+    ``i+1``..``i+depth`` while the consumer's donated-state scan of chunk
+    ``i`` runs.  A bounded queue applies backpressure; a worker exception is
+    re-raised on the CONSUMER's thread at the point the failing chunk would
+    have been yielded, and abandoning the generator (early close, consumer
+    exception) stops the worker promptly — no hung thread either way.
+    """
+    import queue as queue_mod
+    import threading
+
+    q = queue_mod.Queue(maxsize=depth)
+    stop = threading.Event()
+    _DONE, _FAIL = object(), object()
+
+    def _put(item) -> bool:
+        while not stop.is_set():
+            try:
+                q.put(item, timeout=0.1)
+                return True
+            except queue_mod.Full:
+                continue
+        return False
+
+    def work():
+        try:
+            for item in gen:
+                if not _put((None, item)):
+                    return
+            _put((_DONE, None))
+        except BaseException as e:  # noqa: BLE001 — re-raised on consumer
+            _put((_FAIL, e))
+
+    t = threading.Thread(target=work, daemon=True, name="chunk-stager")
+    t.start()
+    try:
+        while True:
+            tag, item = q.get()
+            if tag is _DONE:
+                return
+            if tag is _FAIL:
+                raise item
+            yield item
+    finally:
+        stop.set()
+        t.join(timeout=5.0)
+
+
+def _stream_epoch(chunk_fn, state, source, *, batch_size: int, key,
+                  start_chunk: int = 0, carry=None, on_chunk=None,
+                  max_chunks: int | None = None, prefetch: int = 0,
+                  stage=None):
+    """Generic one-epoch streaming driver shared by binary and multi-class.
+
+    ``chunk_fn(state, xc, yc) -> state`` runs one jitted chunk program.
+    Rows left over when a chunk is not a multiple of ``batch_size`` *carry*
+    into the next chunk (so the realized batch sequence equals the in-memory
+    one on the concatenated order); the final sub-batch rows of the epoch are
+    dropped, matching ``train_epoch``'s truncation.  Chunks are staged in the
+    source's own dtypes (no forced cast — streamed and in-memory training see
+    the same arrays); checkpointed carry rows are stored as float32 and cast
+    back on resume.  ``on_chunk(state, pos, carry)`` fires after each chunk
+    program — the checkpoint hook.
+
+    ``prefetch > 0`` moves the whole host pipeline (chunk load, shuffle,
+    carry splice, minibatch reshape, and — for the default single-device
+    programs — the ``jax.device_put`` transfer) onto a background worker
+    running up to ``prefetch`` chunks ahead of the device, double-buffered
+    against the donated-state scan of the current chunk.  The worker runs the
+    same ``_assemble_chunks`` generator as the sync path, so the realized
+    batch sequence (and therefore training) is bitwise identical.  ``stage``
+    overrides the staging transform (``None`` with a custom distributed
+    ``chunk_fn`` keeps host arrays — pjit places them per its in_shardings).
+
+    Returns ``(state, next_chunk, carry, chunks_run)``; ``next_chunk <
+    source.n_chunks`` means the epoch was cut short by ``max_chunks``.
+    """
+    # resolve the budget to an exclusive end position up front so chunks past
+    # it are never read from the source
+    end = (source.n_chunks if max_chunks is None
+           else min(source.n_chunks, start_chunk + max_chunks))
+    gen = _assemble_chunks(source, key, batch_size=batch_size,
+                           start_chunk=start_chunk, end=end, carry=carry,
+                           stage=stage if prefetch else None)
+    items = _stage_chunks(gen, prefetch) if prefetch else gen
+    out_carry = carry
+    try:
+        for pos, xc, yc, out_carry in items:
+            if xc is not None:
+                state = chunk_fn(state, xc, yc)
+            if on_chunk is not None:
+                on_chunk(state, pos, out_carry)
+    finally:
+        if prefetch:
+            items.close()                 # stop the stager on any exit
+    if out_carry is None:
+        out_carry = (np.zeros((0, source.dim), np.float32),
+                     np.zeros((0,), np.float32))
+    return state, end, out_carry, end - start_chunk
 
 
 def _ckpt_template(state: SVMState, batch_size: int, dim: int):
@@ -450,11 +543,20 @@ def _pad_carry(carry, batch_size: int, dim: int):
     return px, py, np.int32(n)
 
 
+def _device_stage(xc, yc):
+    """Default staging for the prefetched single-device path: start the
+    host->device transfer of an assembled block from the worker thread, so
+    the copy (and not just the parse) overlaps the previous chunk's scan."""
+    return jax.device_put(xc), jax.device_put(yc)
+
+
 def _fit_stream(batch_size: int, source, chunk_fn, state, *,
                 epochs: int, seed: int, ckpt_dir, ckpt_every: int,
-                max_chunks, keep_last: int):
+                max_chunks, keep_last: int, prefetch: int = 0, stage=None,
+                publish=None, publish_every: int = 0):
     """Shared multi-epoch streaming driver (see ``fit_stream`` for the
-    contract)."""
+    contract).  ``publish(state)`` fires every ``publish_every`` chunks (and
+    once at the very end) — the ``ModelBank`` snapshot hook."""
     from .. import checkpoint as ckpt
 
     dim = source.dim
@@ -503,6 +605,9 @@ def _fit_stream(batch_size: int, source, chunk_fn, state, *,
 
         def save(st, pos, cr, *, _epoch=epoch, _key=epoch_key):
             done = pos + 1
+            if (publish is not None and publish_every
+                    and done % publish_every == 0):
+                publish(st)
             if not (ckpt_dir and ckpt_every and done % ckpt_every == 0):
                 return
             px, py, cn = _pad_carry(cr, batch_size, dim)
@@ -517,20 +622,42 @@ def _fit_stream(batch_size: int, source, chunk_fn, state, *,
         state, next_chunk, carry, ran = _stream_epoch(
             chunk_fn, state, source, batch_size=batch_size, key=epoch_key,
             start_chunk=start_chunk, carry=carry, on_chunk=save,
-            max_chunks=budget_left)
+            max_chunks=budget_left, prefetch=prefetch, stage=stage)
         if budget_left is not None:
             budget_left -= ran
         if next_chunk < n_chunks:             # cut short by max_chunks
+            if publish is not None:
+                publish(state)
             return state
         jax.block_until_ready(state.alpha)    # sync only at epoch end
         start_chunk, carry = 0, None          # sub-batch remainder dropped
+    if publish is not None:
+        publish(state)                        # the final model always lands
     return state
+
+
+def _make_publish(bank, gamma, bank_dtype):
+    """Build the ``ModelBank`` snapshot hook for a streaming trainer.
+
+    The chunk programs DONATE the state, so the next chunk invalidates the
+    buffers a naive export would alias — the hook copies the state out first
+    and publishes a genuinely immutable ``ServeModel`` snapshot.
+    """
+    if bank is None:
+        return None
+    from .predict import export_model   # lazy: predict imports this module
+
+    def publish(state):
+        snap = jax.tree.map(jnp.copy, state)
+        bank.publish(export_model(snap, gamma, bank_dtype=bank_dtype))
+
+    return publish
 
 
 def train_epoch_stream(cfg: BSGDConfig, table, state: SVMState, source, *,
                        key=None, impl: str = "auto", start_chunk: int = 0,
                        carry=None, on_chunk=None, max_chunks: int | None = None,
-                       chunk_fn=None):
+                       chunk_fn=None, prefetch: int = 0):
     """One streamed pass over a ``repro.data.stream`` chunk source.
 
     The chunked counterpart of ``train_epoch``: chunks are loaded on the
@@ -547,19 +674,24 @@ def train_epoch_stream(cfg: BSGDConfig, table, state: SVMState, source, *,
     chunk; ``max_chunks`` bounds how many chunk programs run (fault drills).
     ``chunk_fn(state, xc, yc)`` overrides the jitted per-chunk program — the
     distributed path passes a pjit'd one (``launch.train.svm_stream_loop``).
+    ``prefetch > 0`` assembles (and, for the default chunk program, device-
+    transfers) up to that many chunks ahead on a background thread — bitwise
+    the same training, the host pipeline just overlaps the device scan
+    (DESIGN.md §13).
 
     Returns ``(state, next_chunk, carry)``; ``next_chunk == source.n_chunks``
     means the epoch completed.  The chunk programs DONATE ``state``: the
     caller's input buffers are consumed — keep using the returned state (or
     use ``fit_stream``, which copies a provided state up front).
     """
+    stage = _device_stage if chunk_fn is None else None
     if chunk_fn is None:
         def chunk_fn(st, xc, yc):
             return train_chunk(cfg, table, st, xc, yc, impl=impl)
     state, next_chunk, carry, _ = _stream_epoch(
         chunk_fn, state, source, batch_size=cfg.batch_size, key=key,
         start_chunk=start_chunk, carry=carry, on_chunk=on_chunk,
-        max_chunks=max_chunks)
+        max_chunks=max_chunks, prefetch=prefetch, stage=stage)
     if next_chunk == source.n_chunks:
         jax.block_until_ready(state.alpha)
     return state, next_chunk, carry
@@ -569,7 +701,8 @@ def fit_stream(cfg: BSGDConfig, source, *, epochs: int = 1, seed: int = 0,
                impl: str = "auto", state: SVMState | None = None,
                ckpt_dir: str | None = None, ckpt_every: int = 0,
                max_chunks: int | None = None, keep_last: int = 3,
-               chunk_fn=None) -> SVMState:
+               chunk_fn=None, prefetch: int = 0, bank=None,
+               publish_every: int = 0, publish_dtype=None) -> SVMState:
     """Out-of-core ``fit``: shuffled streamed epochs over a chunk source.
 
     Args:
@@ -588,6 +721,15 @@ def fit_stream(cfg: BSGDConfig, source, *, epochs: int = 1, seed: int = 0,
       max_chunks: stop after this many chunk programs without writing a final
         checkpoint — simulates a hard kill in tests/fault drills.
       chunk_fn: override the per-chunk program (distributed path).
+      prefetch: assemble (and device-transfer, for the default chunk program)
+        up to this many chunks ahead on a background thread — bitwise the
+        same run as ``prefetch=0`` including checkpoints and resume, the host
+        pipeline just overlaps the device scan (DESIGN.md §13).
+      bank / publish_every / publish_dtype: publish an immutable, versioned
+        ``ServeModel`` snapshot into ``bank`` (a ``core.predict.ModelBank``)
+        every ``publish_every`` chunks and once at the end — the
+        train-while-serve hot-swap feed.  ``publish_dtype`` quantizes the
+        published bank (e.g. ``"bfloat16"``).
 
     Returns the final ``SVMState``.  The chunk programs run with donated
     state; a caller-provided ``state`` is copied once up front so the
@@ -598,13 +740,16 @@ def fit_stream(cfg: BSGDConfig, source, *, epochs: int = 1, seed: int = 0,
         state = init_state(cfg, source.dim)
     else:
         state = jax.tree.map(jnp.array, state)   # donation would delete it
+    stage = _device_stage if chunk_fn is None else None
     if chunk_fn is None:
         def chunk_fn(st, xc, yc):
             return train_chunk(cfg, table, st, xc, yc, impl=impl)
     return _fit_stream(cfg.batch_size, source, chunk_fn, state,
                        epochs=epochs, seed=seed, ckpt_dir=ckpt_dir,
                        ckpt_every=ckpt_every, max_chunks=max_chunks,
-                       keep_last=keep_last)
+                       keep_last=keep_last, prefetch=prefetch, stage=stage,
+                       publish=_make_publish(bank, cfg.gamma, publish_dtype),
+                       publish_every=publish_every)
 
 
 def accuracy(state: SVMState, x, y, gamma, **kw) -> jax.Array:

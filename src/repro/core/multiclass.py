@@ -36,8 +36,9 @@ import jax
 import jax.numpy as jnp
 
 from . import budget as budget_mod
-from .bsgd import (BSGDConfig, SVMState, _fit_stream, _stream_epoch,
-                   init_state, insert_from_rows, train_step_from_rows)
+from .bsgd import (BSGDConfig, SVMState, _device_stage, _fit_stream,
+                   _make_publish, _stream_epoch, init_state, insert_from_rows,
+                   train_step_from_rows)
 from ..kernels import ops as kops
 
 
@@ -264,22 +265,23 @@ def train_epoch_multiclass_stream(cfg: MulticlassSVMConfig, table,
                                   impl: str = "auto", start_chunk: int = 0,
                                   carry=None, on_chunk=None,
                                   max_chunks: int | None = None,
-                                  chunk_fn=None):
+                                  chunk_fn=None, prefetch: int = 0):
     """One streamed pass of the one-vs-rest engine over a chunk source.
 
     The multi-class counterpart of ``bsgd.train_epoch_stream`` — identical
     chunk-carry contract (deterministic shuffle, donated per-chunk program —
     the caller's input state buffers are consumed —, remainder carry,
-    ``(state, next_chunk, carry)`` return); labels are integer class ids in
-    [0, C).
+    ``prefetch`` background staging, ``(state, next_chunk, carry)`` return);
+    labels are integer class ids in [0, C).
     """
+    stage = _device_stage if chunk_fn is None else None
     if chunk_fn is None:
         def chunk_fn(st, xc, yc):
             return train_chunk_multiclass(cfg, table, st, xc, yc, impl=impl)
     state, next_chunk, carry, _ = _stream_epoch(
         chunk_fn, state, source, batch_size=cfg.binary.batch_size, key=key,
         start_chunk=start_chunk, carry=carry, on_chunk=on_chunk,
-        max_chunks=max_chunks)
+        max_chunks=max_chunks, prefetch=prefetch, stage=stage)
     if next_chunk == source.n_chunks:
         jax.block_until_ready(state.alpha)
     return state, next_chunk, carry
@@ -290,16 +292,20 @@ def fit_multiclass_stream(cfg: MulticlassSVMConfig, source, *,
                           state: SVMState | None = None,
                           ckpt_dir: str | None = None, ckpt_every: int = 0,
                           max_chunks: int | None = None, keep_last: int = 3,
-                          chunk_fn=None) -> SVMState:
+                          chunk_fn=None, prefetch: int = 0, bank=None,
+                          publish_every: int = 0,
+                          publish_dtype=None) -> SVMState:
     """Out-of-core ``fit_multiclass``: streamed shuffled epochs over a chunk
     source of integer-labelled rows (contract as in ``bsgd.fit_stream`` —
-    same checkpointing, cursor, bitwise-resume and copied-caller-state
+    same checkpointing, cursor, bitwise-resume, copied-caller-state,
+    ``prefetch`` background staging and ``bank``/``publish_every`` snapshot
     semantics).  Labels are validated per concrete chunk."""
     table = cfg.table()
     if state is None:
         state = init_multiclass_state(cfg, source.dim)
     else:
         state = jax.tree.map(jnp.array, state)   # donation would delete it
+    stage = _device_stage if chunk_fn is None else None
     if chunk_fn is None:
         def chunk_fn(st, xc, yc):
             check_labels(yc, cfg.n_classes)
@@ -307,7 +313,10 @@ def fit_multiclass_stream(cfg: MulticlassSVMConfig, source, *,
     return _fit_stream(cfg.binary.batch_size, source, chunk_fn, state,
                        epochs=epochs, seed=seed, ckpt_dir=ckpt_dir,
                        ckpt_every=ckpt_every, max_chunks=max_chunks,
-                       keep_last=keep_last)
+                       keep_last=keep_last, prefetch=prefetch, stage=stage,
+                       publish=_make_publish(bank, cfg.binary.gamma,
+                                             publish_dtype),
+                       publish_every=publish_every)
 
 
 def fit_multiclass_loop(cfg: MulticlassSVMConfig, x, y, *, epochs: int = 1,

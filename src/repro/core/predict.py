@@ -40,6 +40,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import threading
 import time
 from collections import deque
 from functools import partial
@@ -192,6 +193,17 @@ def default_buckets(max_batch: int, min_bucket: int = 8) -> tuple[int, ...]:
     return tuple(buckets)
 
 
+def pad_bucket(n: int, buckets) -> int:
+    """The smallest bucket that fits ``n`` rows (ascending ``buckets``; the
+    largest bucket is the fallback for ``n > max``).  THE pad-target rule —
+    shared by ``BatchQueue``, ``AsyncBatchQueue`` and ``drive_trace`` so the
+    compiled-shape set can never silently diverge between them."""
+    for b in buckets:
+        if n <= b:
+            return b
+    return buckets[-1]
+
+
 class BatchQueue:
     """Microbatch assembly over a request stream, one fused cell per batch.
 
@@ -227,7 +239,7 @@ class BatchQueue:
         self._next_ticket = 0
         self.latencies_s: list[float] = []
         self.stats = {"rows": 0, "microbatches": 0, "padded_rows": 0,
-                      "bucket_counts": {}}
+                      "bucket_counts": {}, "bucket_real_rows": {}}
 
     def warmup(self, dtype=np.float32) -> None:
         """Pay every bucket shape's compile up front (honest tail latencies).
@@ -241,10 +253,7 @@ class BatchQueue:
             jax.block_until_ready(self._predict(np.zeros((b, dim), dtype)))
 
     def _bucket_for(self, n: int) -> int:
-        for b in self.buckets:
-            if n <= b:
-                return b
-        return self.max_batch
+        return pad_bucket(n, self.buckets)
 
     def submit(self, x) -> int:
         """Enqueue one request of rows; returns its ticket."""
@@ -310,6 +319,8 @@ class BatchQueue:
         self.stats["padded_rows"] += pad_to - n_real
         self.stats["bucket_counts"][pad_to] = \
             self.stats["bucket_counts"].get(pad_to, 0) + 1
+        self.stats["bucket_real_rows"][pad_to] = \
+            self.stats["bucket_real_rows"].get(pad_to, 0) + n_real
         pos = 0
         for ticket, off, take in slices:
             self._parts[ticket].append((off, labels[pos:pos + take]))
@@ -328,6 +339,329 @@ def serve_requests(model: ServeModel, requests, **queue_kw) -> list[np.ndarray]:
     return [q.take(t) for t in tickets]
 
 
+# ---------------------------------------------------------------------------
+# Versioned model bank + continuous-batching async queue
+# ---------------------------------------------------------------------------
+
+class ModelBank:
+    """A versioned, atomically hot-swappable ``ServeModel`` slot.
+
+    The seam between a streaming trainer and a live serve queue:
+    ``fit_stream(bank=..., publish_every=K)`` publishes an immutable snapshot
+    every K chunks, and an ``AsyncBatchQueue`` built over the bank picks up
+    the newest version per microbatch WITHOUT draining — hot-swap mid-trace.
+
+    The slot is one ``(version, model)`` tuple swapped by a single reference
+    assignment, so readers always see a consistent pair (never version *n*
+    with model *n+1*); versions are strictly monotone.  ``ServeModel``s are
+    immutable (frozen dataclass over immutable jax arrays), so a published
+    snapshot can never change under a reader — the publisher's job is to
+    hand over arrays nobody mutates or donates afterwards (the trainers copy
+    out of their donated buffers first; see ``bsgd._make_publish``).
+    """
+
+    def __init__(self, model: ServeModel | None = None):
+        self._slot = (1 if model is not None else 0, model)
+        self._cv = threading.Condition()
+
+    @property
+    def version(self) -> int:
+        """Version of the current model (0 = empty bank)."""
+        return self._slot[0]
+
+    def publish(self, model: ServeModel) -> int:
+        """Swap in ``model`` as the new current version; returns it."""
+        with self._cv:
+            version = self._slot[0] + 1
+            self._slot = (version, model)       # one atomic reference swap
+            self._cv.notify_all()
+        return version
+
+    def current(self) -> tuple[int, ServeModel]:
+        """The live ``(version, model)`` pair (lock-free hot path)."""
+        slot = self._slot
+        if slot[1] is None:
+            raise LookupError("ModelBank is empty — publish() a model first")
+        return slot
+
+    def wait(self, version: int = 1,
+             timeout: float | None = None) -> tuple[int, ServeModel]:
+        """Block until the bank holds at least ``version``; returns the pair
+        (raises TimeoutError on ``timeout``)."""
+        with self._cv:
+            if not self._cv.wait_for(lambda: self._slot[0] >= version,
+                                     timeout):
+                raise TimeoutError(
+                    f"ModelBank still at version {self._slot[0]} < {version} "
+                    f"after {timeout}s")
+            return self._slot
+
+
+class AsyncBatchQueue:
+    """Continuous batching: a dispatcher thread owns the device, submitters
+    never compute.
+
+    ``submit`` is thread-safe and returns a ticket immediately — rows land
+    in a pending ring and the dispatcher assembles microbatches out of
+    WHATEVER is pending whenever the device frees up (up to ``max_batch``
+    rows per launch, ragged tails coalesced across requests before padding,
+    arrival order preserved).  Two launches are kept in flight: while
+    microbatch *i* executes, the dispatcher assembles AND dispatches *i+1*,
+    then resolves *i* — host assembly, the host↔device sync, and the label
+    scatter all overlap device compute instead of serializing with it (the
+    ``BatchQueue`` gap this class exists to close).  Under load the pending
+    ring backs up and every launch is a full ``max_batch``; under trickle
+    each row goes straight out — no artificial batching delay.
+
+    Each row's scores depend only on that row and the bank, so labels are
+    BITWISE one direct ``predict_labels`` call on the same rows for any
+    arrival pattern/interleaving (same guarantee, and same pad-bucket rule
+    — ``pad_bucket`` — as ``BatchQueue``).
+
+    ``model`` may be a ``ServeModel`` (fixed) or a ``ModelBank``: with a
+    bank, the dispatcher re-reads ``bank.current()`` per microbatch, so a
+    version published mid-trace is picked up at the next launch without
+    draining — every row of one microbatch is scored by exactly one version
+    (recorded in ``stats["versions"]``).  The single-model predict path is
+    AOT-compiled per bucket shape (``predict_labels.lower(...).compile()``)
+    — hot-swapped snapshots share the executables because shapes/dtypes
+    don't change across versions.  ``predict_fn`` overrides compute exactly
+    as in ``BatchQueue`` (fixed model only — the distributed serve path).
+
+    ``take``/``drain`` block until resolution (optional ``timeout``); a
+    dispatcher failure re-raises on the caller's thread, never hangs.  Use
+    as a context manager or call ``close()`` — pending work is flushed, the
+    thread joins.
+    """
+
+    def __init__(self, model: ServeModel | ModelBank, *, max_batch: int = 256,
+                 min_bucket: int = 8, impl: str = "auto", predict_fn=None):
+        if max_batch < 1:
+            raise ValueError(f"max_batch={max_batch} < 1")
+        self._bank = model if isinstance(model, ModelBank) else None
+        self.model = None if self._bank is not None else model
+        if self._bank is not None and predict_fn is not None:
+            raise ValueError("predict_fn requires a fixed ServeModel — a "
+                             "ModelBank swaps models per microbatch")
+        self.max_batch = max_batch
+        self.buckets = default_buckets(max_batch, min_bucket)
+        self._impl = impl
+        self._predict_fn = predict_fn
+        self._compiled: dict = {}     # (bucket, bank signature) -> executable
+        self._cv = threading.Condition()
+        self._pending: deque = deque()   # (ticket, rows ndarray, row_offset)
+        self._pending_rows = 0
+        self._need: dict[int, int] = {}
+        self._parts: dict[int, list] = {}
+        self._done: dict[int, np.ndarray] = {}
+        self._next_ticket = 0
+        self._unresolved = 0
+        self._error: BaseException | None = None
+        self._stop = False
+        self.latencies_s: list[float] = []
+        self.stats = {"rows": 0, "microbatches": 0, "padded_rows": 0,
+                      "bucket_counts": {}, "bucket_real_rows": {},
+                      "versions": {}}
+        self._thread = threading.Thread(target=self._dispatch_loop,
+                                        daemon=True, name="serve-dispatch")
+        self._thread.start()
+
+    # -- submitter side ------------------------------------------------------
+
+    def submit(self, x) -> int:
+        """Enqueue one request of rows; returns its ticket immediately."""
+        x = np.asarray(x)
+        if x.ndim != 2:
+            raise ValueError(f"request must be (n, dim), got {x.shape}")
+        with self._cv:
+            self._check_error()
+            if self._stop:
+                raise RuntimeError("AsyncBatchQueue is closed")
+            ticket = self._next_ticket
+            self._next_ticket += 1
+            self._need[ticket] = x.shape[0]
+            self._parts[ticket] = []
+            if x.shape[0] == 0:
+                self._done[ticket] = np.zeros((0,), self._label_dtype())
+                self._need.pop(ticket)
+                self._parts.pop(ticket)
+            else:
+                self._unresolved += 1
+                self._pending.append((ticket, x, 0))
+                self._pending_rows += x.shape[0]
+                self._cv.notify_all()
+            return ticket
+
+    def take(self, ticket: int, timeout: float | None = None) -> np.ndarray:
+        """Labels for a ticket; blocks until its last microbatch resolves."""
+        with self._cv:
+            if not self._cv.wait_for(
+                    lambda: ticket in self._done or self._error is not None,
+                    timeout):
+                raise TimeoutError(f"ticket {ticket} unresolved after "
+                                   f"{timeout}s")
+            self._check_error()
+            return self._done.pop(ticket)
+
+    def drain(self, timeout: float | None = None) -> None:
+        """Block until every submitted row is scored and resolved."""
+        with self._cv:
+            if not self._cv.wait_for(
+                    lambda: self._unresolved == 0 or self._error is not None,
+                    timeout):
+                raise TimeoutError(f"{self._unresolved} requests unresolved "
+                                   f"after {timeout}s")
+            self._check_error()
+
+    def close(self, timeout: float | None = 30.0) -> None:
+        """Flush pending work, stop and join the dispatcher (idempotent)."""
+        with self._cv:
+            self._stop = True
+            self._cv.notify_all()
+        self._thread.join(timeout)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+    def warmup(self, dtype=np.float32) -> None:
+        """Pay every bucket shape's compile up front (honest tail latencies).
+
+        Compiles through the queue's OWN per-bucket path (the AOT executable
+        cache, or the caller's ``predict_fn``) — see ``BatchQueue.warmup``
+        for the jit-cache-key footgun this sidesteps.
+        """
+        version, model = self._current()
+        dim = model.sv_x.shape[-1]
+        for b in self.buckets:
+            jax.block_until_ready(
+                self._score(model, np.zeros((b, dim), dtype), b))
+
+    # -- dispatcher side -----------------------------------------------------
+
+    def _check_error(self) -> None:
+        if self._error is not None:
+            raise RuntimeError("AsyncBatchQueue dispatcher failed") \
+                from self._error
+
+    def _label_dtype(self):
+        try:
+            return self._current()[1].label_dtype
+        except LookupError:
+            return np.int32
+
+    def _current(self) -> tuple:
+        if self._bank is not None:
+            return self._bank.current()
+        return None, self.model
+
+    def _score(self, model: ServeModel, xb: np.ndarray, bucket: int):
+        """One microbatch launch (async dispatch — no host sync here)."""
+        if self._predict_fn is not None:
+            return self._predict_fn(xb)
+        sig = (bucket, str(xb.dtype), model.sv_x.shape,
+               str(model.sv_x.dtype), model.binary)
+        fn = self._compiled.get(sig)
+        if fn is None:
+            fn = predict_labels.lower(model, xb, impl=self._impl).compile()
+            self._compiled[sig] = fn
+        return fn(model, xb)
+
+    def _pop_rows_locked(self):
+        """Take up to ``max_batch`` pending rows (caller holds the lock)."""
+        n_real = min(self._pending_rows, self.max_batch)
+        rows, slices, need = [], [], n_real
+        while need:
+            ticket, x, off = self._pending.popleft()
+            take = min(need, x.shape[0])
+            rows.append(x[:take])
+            slices.append((ticket, off, take))
+            if take < x.shape[0]:
+                self._pending.appendleft((ticket, x[take:], off + take))
+            need -= take
+        self._pending_rows -= n_real
+        return rows, slices, n_real
+
+    def _launch(self, rows, slices, n_real):
+        """Assemble + dispatch one microbatch (outside the lock)."""
+        pad_to = pad_bucket(n_real, self.buckets)
+        xb = np.zeros((pad_to, rows[0].shape[1]), rows[0].dtype)
+        pos = 0
+        for r in rows:
+            xb[pos:pos + r.shape[0]] = r
+            pos += r.shape[0]
+        version, model = self._current()
+        t0 = time.perf_counter()
+        labels = self._score(model, xb, pad_to)
+        return labels, slices, n_real, pad_to, version, t0
+
+    def _resolve(self, inflight) -> None:
+        """Sync one launch, scatter its labels, resolve finished tickets."""
+        labels, slices, n_real, pad_to, version, t0 = inflight
+        labels = np.asarray(labels)               # blocks until scored
+        lat = time.perf_counter() - t0
+        with self._cv:
+            self.latencies_s.append(lat)
+            st = self.stats
+            st["rows"] += n_real
+            st["microbatches"] += 1
+            st["padded_rows"] += pad_to - n_real
+            st["bucket_counts"][pad_to] = \
+                st["bucket_counts"].get(pad_to, 0) + 1
+            st["bucket_real_rows"][pad_to] = \
+                st["bucket_real_rows"].get(pad_to, 0) + n_real
+            if version is not None:
+                st["versions"][version] = st["versions"].get(version, 0) + 1
+            pos = 0
+            for ticket, off, take in slices:
+                part = labels[pos:pos + take]
+                pos += take
+                need = self._need[ticket]
+                if off == 0 and take == need:     # single-part fast path
+                    self._done[ticket] = part
+                    self._need.pop(ticket)
+                    self._parts.pop(ticket)
+                    self._unresolved -= 1
+                    continue
+                parts = self._parts[ticket]
+                parts.append((off, part))
+                if sum(p[1].shape[0] for p in parts) == need:
+                    parts.sort(key=lambda p: p[0])
+                    self._done[ticket] = np.concatenate([p[1] for p in parts])
+                    self._need.pop(ticket)
+                    self._parts.pop(ticket)
+                    self._unresolved -= 1
+            self._cv.notify_all()
+
+    def _dispatch_loop(self) -> None:
+        inflight = None
+        try:
+            while True:
+                batch = None
+                with self._cv:
+                    while (not self._pending_rows and not self._stop
+                           and inflight is None):
+                        self._cv.wait()
+                    if (self._stop and not self._pending_rows
+                            and inflight is None):
+                        return
+                    if self._pending_rows:
+                        batch = self._pop_rows_locked()
+                # dispatch the NEXT microbatch before syncing the previous:
+                # the device is never idle while the host scatters labels
+                launched = self._launch(*batch) if batch is not None else None
+                if inflight is not None:
+                    self._resolve(inflight)
+                inflight = launched
+        except BaseException as e:  # noqa: BLE001 — surfaced to callers
+            with self._cv:
+                self._error = e
+                self._cv.notify_all()
+
+
 def ragged_trace_sizes(total_rows: int, max_batch: int, rng) -> list[int]:
     """A deterministic ragged request-size trace summing to ``total_rows``
     (sizes drawn in [1, max_batch] from the caller's ``rng``)."""
@@ -340,40 +674,74 @@ def ragged_trace_sizes(total_rows: int, max_batch: int, rng) -> list[int]:
 
 
 def drive_trace(model: ServeModel, req_x, sizes, *, max_batch: int = 256,
-                min_bucket: int = 8, impl: str = "auto",
-                predict_fn=None) -> dict:
+                min_bucket: int = 8, impl: str = "auto", predict_fn=None,
+                queue: str = "sync") -> dict:
     """Push one request trace through a fresh warmed queue and measure it.
 
     The shared serve-loop used by ``launch.serve_svm`` and
     ``benchmarks.bench_serve``: submits ``sizes``-shaped requests from
     ``req_x`` in order, drains, ASSERTS the labels are bitwise one direct
     ``predict_labels`` call (the parity gate runs on every invocation), and
-    returns rows/sec + p50/p99 microbatch latency + queue stats.
+    returns rows/sec + p50/p99 microbatch latency + queue stats —
+    including ``pad_waste_frac`` (fraction of scored rows that were
+    padding) and per-bucket ``bucket_occupancy`` (real rows / bucket
+    capacity), which make tail padding at non-power-of-two traces visible.
+
+    ``queue="async"`` drives the same trace through an ``AsyncBatchQueue``
+    (continuous batching; same parity gate) — with a ``ModelBank`` in
+    ``model``, its CURRENT snapshot anchors the parity call even if the
+    bank keeps moving mid-trace (per-row labels are version-consistent,
+    so parity is asserted only on a fixed model).
     """
-    queue = BatchQueue(model, max_batch=max_batch, min_bucket=min_bucket,
+    bank = model if isinstance(model, ModelBank) else None
+    fixed = bank is None
+    if queue == "async":
+        q = AsyncBatchQueue(model, max_batch=max_batch,
+                            min_bucket=min_bucket, impl=impl,
+                            predict_fn=predict_fn)
+    elif queue == "sync":
+        if bank is not None:
+            raise ValueError("queue='sync' needs a fixed ServeModel")
+        q = BatchQueue(model, max_batch=max_batch, min_bucket=min_bucket,
                        impl=impl, predict_fn=predict_fn)
-    queue.warmup()
+    else:
+        raise ValueError(f"queue={queue!r}: expected 'sync' or 'async'")
+    q.warmup()
     t0 = time.perf_counter()
     tickets, off = [], 0
     for s in sizes:
-        tickets.append(queue.submit(req_x[off:off + s]))
+        tickets.append(q.submit(req_x[off:off + s]))
         off += s
-    queue.drain()
-    labels = np.concatenate([queue.take(t) for t in tickets])
+    q.drain()
+    labels = np.concatenate([q.take(t) for t in tickets])
     wall = time.perf_counter() - t0
-    direct = np.asarray(predict_labels(model, req_x[:off], impl=impl))
-    assert (labels == direct).all(), "queue/direct parity violated"
-    lat = np.asarray(queue.latencies_s)
-    return {
-        "rows": off, "requests": len(sizes),
-        "bank_dtype": str(model.sv_x.dtype),
+    if queue == "async":
+        q.close()
+    if fixed:
+        direct = np.asarray(predict_labels(model, req_x[:off], impl=impl))
+        assert (labels == direct).all(), "queue/direct parity violated"
+    lat = np.asarray(q.latencies_s)
+    padded = q.stats["padded_rows"]
+    occupancy = {
+        b: round(q.stats["bucket_real_rows"].get(b, 0) / (n * b), 4)
+        for b, n in sorted(q.stats["bucket_counts"].items())
+    }
+    out = {
+        "rows": off, "requests": len(sizes), "queue": queue,
+        "bank_dtype": str((bank.current()[1] if bank is not None
+                           else model).sv_x.dtype),
         "rows_per_s": round(off / wall, 1),
-        "microbatches": queue.stats["microbatches"],
-        "padded_rows": queue.stats["padded_rows"],
-        "bucket_counts": queue.stats["bucket_counts"],
+        "microbatches": q.stats["microbatches"],
+        "padded_rows": padded,
+        "pad_waste_frac": round(padded / (off + padded), 4) if off else 0.0,
+        "bucket_counts": q.stats["bucket_counts"],
+        "bucket_occupancy": occupancy,
         "p50_ms": round(float(np.percentile(lat, 50)) * 1e3, 3),
         "p99_ms": round(float(np.percentile(lat, 99)) * 1e3, 3),
     }
+    if queue == "async" and q.stats["versions"]:
+        out["versions"] = {int(k): v for k, v in q.stats["versions"].items()}
+    return out
 
 
 # ---------------------------------------------------------------------------

@@ -31,6 +31,7 @@ row-for-row against the in-memory ``train_epoch`` (the equivalence tests).
 from __future__ import annotations
 
 import os
+from concurrent.futures import ThreadPoolExecutor
 
 import numpy as np
 
@@ -211,6 +212,67 @@ class LibsvmChunks(ChunkSource):
                             binary=self.binary)
 
 
+class PrefetchChunks(ChunkSource):
+    """Background-thread readahead over any ``ChunkSource``.
+
+    Keeps up to ``depth`` chunks loaded (parsed, in host memory) ahead of the
+    consumer along a declared *plan* — the iteration order, which is exactly
+    what ``load`` hides for the out-of-core sources: ``FileChunks`` pays a
+    disk read and ``LibsvmChunks`` a pure-Python parse per chunk, both of
+    which the wrapper overlaps with whatever the consumer does with chunk
+    *i* while the worker readies *i+1*.
+
+    ``plan(order)`` declares the upcoming load order and starts the worker;
+    ``load(i)`` returns the staged block when ``i`` is planned (scheduling
+    more readahead) and falls back to a synchronous load otherwise, so the
+    wrapper is a drop-in ``ChunkSource`` even off-plan.  A ``load()`` that
+    raised on the worker re-raises on the *caller's* thread (the future
+    carries it) — the worker itself never hangs or dies silently.
+    ``iter_epoch(prefetch=depth)`` wraps and plans automatically; the
+    streaming trainers go further and stage whole assembled minibatch blocks
+    (``bsgd._stage_chunks``).
+    """
+
+    def __init__(self, source: ChunkSource, depth: int = 2):
+        if depth < 1:
+            raise ValueError(f"depth={depth} < 1")
+        self.source = source
+        self.depth = depth
+        self.chunk_lens = source.chunk_lens
+        self.dim = source.dim
+        self._pool = None
+        self._futs: dict[int, object] = {}   # chunk id -> Future
+        self._plan: list[int] = []           # upcoming ids, front first
+
+    def plan(self, order) -> None:
+        """Declare the upcoming load order; readahead follows it."""
+        self.cancel()
+        self._plan = [int(c) for c in order]
+        self._pool = ThreadPoolExecutor(max_workers=1,
+                                        thread_name_prefix="prefetch")
+        self._fill()
+
+    def cancel(self) -> None:
+        """Drop the plan and stop the worker (idempotent)."""
+        self._plan = []
+        self._futs.clear()
+        if self._pool is not None:
+            self._pool.shutdown(wait=False, cancel_futures=True)
+            self._pool = None
+
+    def _fill(self) -> None:
+        while self._plan and len(self._futs) < self.depth:
+            cid = self._plan.pop(0)
+            self._futs[cid] = self._pool.submit(self.source.load, cid)
+
+    def load(self, i: int):
+        fut = self._futs.pop(int(i), None)
+        if fut is None:                      # off-plan: synchronous fallback
+            return self.source.load(i)
+        self._fill()                         # keep the window full
+        return fut.result()                  # re-raises worker exceptions here
+
+
 def write_npz_chunks(out_dir: str, x, y, chunk_rows: int, *,
                      prefix: str = "chunk") -> list[str]:
     """Shard (x, y) into ``.npz`` chunk files under ``out_dir``; returns the
@@ -263,23 +325,38 @@ def epoch_permutation(source: ChunkSource, key) -> np.ndarray:
 
 
 def iter_epoch(source: ChunkSource, key=None, *, start_chunk: int = 0,
-               end_chunk: int | None = None):
+               end_chunk: int | None = None, prefetch: int = 0):
     """Yield ``(position, x, y)`` chunks for one epoch in shuffled order.
 
     ``key`` derives both permutations of the shuffle contract (None = natural
     order); ``start_chunk`` skips already-trained stream positions — the
     resume path (checkpoint cursor) of the streaming trainers — and
     ``end_chunk`` stops before that position (exclusive; chunks past it are
-    never read from the source).
+    never read from the source).  ``prefetch > 0`` reads ahead that many
+    chunks on a background thread (``PrefetchChunks`` along the epoch's
+    realized order) — the yielded blocks are bitwise identical to the
+    synchronous path, chunk ``i+1``'s load just overlaps the consumer's work
+    on chunk ``i``.  A source that is already a ``PrefetchChunks`` is planned
+    directly (no double wrap).
     """
     order = (chunk_order(key, source.n_chunks) if key is not None
              else np.arange(source.n_chunks))
     end = source.n_chunks if end_chunk is None else min(end_chunk,
                                                         source.n_chunks)
-    for pos in range(start_chunk, end):
-        cid = int(order[pos])
-        x, y = source.load(cid)
-        if key is not None:
-            p = intra_perm(key, cid, x.shape[0])
-            x, y = x[p], y[p]
-        yield pos, x, y
+    planned = None
+    if prefetch and not isinstance(source, PrefetchChunks):
+        source = PrefetchChunks(source, depth=prefetch)
+    if isinstance(source, PrefetchChunks):
+        source.plan(order[start_chunk:end])
+        planned = source
+    try:
+        for pos in range(start_chunk, end):
+            cid = int(order[pos])
+            x, y = source.load(cid)
+            if key is not None:
+                p = intra_perm(key, cid, x.shape[0])
+                x, y = x[p], y[p]
+            yield pos, x, y
+    finally:
+        if planned is not None:
+            planned.cancel()             # abandoned epochs leave no worker

@@ -19,6 +19,12 @@ dry-run lowers for the production mesh.  Two arms:
     PYTHONPATH=src python -m repro.launch.serve --arch svm_bsgd --smoke
     PYTHONPATH=src python -m repro.launch.serve --arch svm_bsgd \
         --model ckpts/run1 --gamma 0.5 --bank-dtype bfloat16
+    PYTHONPATH=src python -m repro.launch.serve --arch svm_bsgd --smoke --live
+
+    ``--live`` is the train-while-serve arm (``serve_svm_live``): a
+    background ``fit_multiclass_stream`` publishes versioned snapshots into
+    a ``core.predict.ModelBank`` while an ``AsyncBatchQueue`` serves a
+    ragged trace over the bank, hot-swapping models mid-trace.
 """
 from __future__ import annotations
 
@@ -162,6 +168,76 @@ def serve_svm(*, model_dir: str | None = None, gamma: float = 0.5,
     return result
 
 
+def serve_svm_live(*, gamma: float = 0.5, bank_dtype: str | None = None,
+                   n_classes: int = 4, budget: int = 32, dim: int = 16,
+                   train_rows: int = 4096, chunk_rows: int = 512,
+                   epochs: int = 2, publish_every: int = 2,
+                   rows: int = 4096, max_batch: int = 64,
+                   min_bucket: int = 8, seed: int = 0,
+                   verbose: bool = True) -> dict:
+    """Train-while-serve: a background trainer hot-swaps the model mid-trace.
+
+    The ``--live`` arm — the pipeline PR's end-to-end artifact as one driver:
+    ``fit_multiclass_stream(bank=..., publish_every=...)`` runs on a
+    background thread (prefetched chunk staging on its own worker),
+    publishing an immutable ``ServeModel`` snapshot into a ``ModelBank``
+    every K chunks, while the foreground replays a ragged request trace
+    through an ``AsyncBatchQueue`` built over the bank — every published
+    version is picked up at the next microbatch launch, no drain, no pause.
+    Returns the serve stats dict plus the version histogram
+    (``versions: {version: microbatches}``) proving the hot-swap happened
+    mid-trace, and re-runs the trace against the FINAL snapshot for the
+    usual bitwise parity gate.
+    """
+    import threading
+
+    from ..core import (MulticlassSVMConfig, ModelBank, drive_trace,
+                        ragged_trace_sizes)
+    from ..data import ArrayChunks, make_blobs_multiclass
+
+    cfg = MulticlassSVMConfig.create(
+        n_classes, budget=budget, lambda_=1e-3, gamma=gamma,
+        batch_size=min(64, chunk_rows))
+    x, y = make_blobs_multiclass(jax.random.PRNGKey(seed), train_rows, dim,
+                                 n_classes=n_classes, sep=2.5)
+    source = ArrayChunks(np.asarray(x, np.float32),
+                         np.asarray(y, np.int32), chunk_rows=chunk_rows)
+    bank = ModelBank()
+    fail: list[BaseException] = []
+
+    def trainer() -> None:
+        from ..core import fit_multiclass_stream
+        try:
+            fit_multiclass_stream(cfg, source, epochs=epochs, seed=seed,
+                                  prefetch=2, bank=bank,
+                                  publish_every=publish_every,
+                                  publish_dtype=bank_dtype)
+        except BaseException as e:  # noqa: BLE001 — re-raised on main thread
+            fail.append(e)
+
+    t = threading.Thread(target=trainer, daemon=True, name="live-trainer")
+    t.start()
+    bank.wait(1, timeout=120.0)               # first snapshot before serving
+    rng = np.random.default_rng(seed)
+    req_x = rng.standard_normal((rows, dim)).astype(np.float32)
+    result = drive_trace(bank, req_x, ragged_trace_sizes(rows, max_batch, rng),
+                         max_batch=max_batch, min_bucket=min_bucket,
+                         queue="async")
+    t.join(timeout=300.0)
+    if fail:
+        raise RuntimeError("background trainer failed") from fail[0]
+    result.update(dim=dim, n_classes=n_classes,
+                  final_version=bank.version)
+    if verbose:
+        print(f"[serve --live] {result['rows']} rows while training "
+              f"({result['microbatches']} microbatches); versions served: "
+              f"{result['versions']} (final v{bank.version})")
+        print(f"[serve --live] {result['rows_per_s']} rows/s; "
+              f"p50={result['p50_ms']} ms p99={result['p99_ms']} ms; "
+              f"pad waste {result['pad_waste_frac']}")
+    return result
+
+
 def _cache_compatible(cache, pf_cache) -> bool:
     try:
         return (pf_cache is not None and
@@ -194,8 +270,21 @@ def main() -> None:
                     help="svm_bsgd: also serve the K best class ids + "
                          "calibrated softmax probabilities (sampled; rank 1 "
                          "re-asserted bitwise against the argmax labels)")
+    ap.add_argument("--live", action="store_true",
+                    help="svm_bsgd: train-while-serve — a background "
+                         "fit_multiclass_stream publishes snapshots into a "
+                         "ModelBank every K chunks while an AsyncBatchQueue "
+                         "serves the trace, hot-swapping mid-flight")
+    ap.add_argument("--publish-every", type=int, default=2, metavar="K",
+                    help="svm_bsgd --live: chunks between snapshots")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    if args.arch == "svm_bsgd" and args.live:
+        kw = dict(rows=1024, train_rows=2048, chunk_rows=256,
+                  epochs=1) if args.smoke else {}
+        serve_svm_live(gamma=args.gamma, bank_dtype=args.bank_dtype,
+                       publish_every=args.publish_every, seed=args.seed, **kw)
+        return
     if args.arch == "svm_bsgd":
         kw = {}
         if args.smoke:

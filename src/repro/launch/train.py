@@ -136,7 +136,7 @@ def svm_stream_loop(source, *, layout: str = "replicated", n_classes: int = 8,
                     lambda_: float = 1e-4, epochs: int = 1, seed: int = 0,
                     mesh=None, ckpt_dir: str | None = None,
                     ckpt_every: int = 0, max_chunks: int | None = None,
-                    verbose: bool = True):
+                    prefetch: int = 0, verbose: bool = True):
     """Streamed SVM training on the production mesh: the distributed path
     consuming the same chunk stream as the single-device trainers.
 
@@ -148,6 +148,10 @@ def svm_stream_loop(source, *, layout: str = "replicated", n_classes: int = 8,
     multi-class (classes over ``model``, ``n_classes`` problems).  Epoch
     shuffling, remainder carry, every-K-chunks checkpointing and mid-epoch
     resume are exactly the ``fit_stream`` contract (the drivers are shared).
+    ``prefetch > 0`` parses/shuffles/assembles the next chunk on a background
+    stager while the current pjit program runs (host-side overlap only here —
+    device placement stays with pjit's ``in_shardings``, since the chunk
+    batch axis is sharded across the mesh, not single-device).
 
     Returns ``(state, cfg)``.
     """
@@ -189,12 +193,13 @@ def svm_stream_loop(source, *, layout: str = "replicated", n_classes: int = 8,
                                       state=state, ckpt_dir=ckpt_dir,
                                       ckpt_every=ckpt_every,
                                       max_chunks=max_chunks,
-                                      chunk_fn=chunk_fn)
+                                      chunk_fn=chunk_fn, prefetch=prefetch)
     else:
         state = init_state(cfg, source.dim)
         state = fit_stream(cfg, source, epochs=epochs, seed=seed, state=state,
                            ckpt_dir=ckpt_dir, ckpt_every=ckpt_every,
-                           max_chunks=max_chunks, chunk_fn=chunk_fn)
+                           max_chunks=max_chunks, chunk_fn=chunk_fn,
+                           prefetch=prefetch)
     if verbose:
         counts = np.asarray(state.count).tolist()
         print(f"[train] svm stream done: layout={layout} "
@@ -242,6 +247,10 @@ def main() -> None:
                     help="rows per chunk for LIBSVM streams")
     ap.add_argument("--n-features", type=int, default=None)
     ap.add_argument("--epochs", type=int, default=1)
+    ap.add_argument("--prefetch", type=int, default=0, metavar="DEPTH",
+                    help="svm_bsgd only: stage the next DEPTH chunks "
+                         "(parse/shuffle/assemble) on a background thread "
+                         "while the device runs the current chunk")
     args = ap.parse_args()
     if args.arch == "svm_bsgd":
         if not args.stream:
@@ -253,7 +262,7 @@ def main() -> None:
                         n_classes=args.svm_classes, budget=args.svm_budget,
                         batch_size=args.batch_size, epochs=args.epochs,
                         seed=args.seed, ckpt_dir=args.ckpt_dir,
-                        ckpt_every=args.ckpt_every)
+                        ckpt_every=args.ckpt_every, prefetch=args.prefetch)
         return
     cfg = get_smoke(args.arch) if args.smoke else get(args.arch)
     metrics = train_loop(cfg, steps=args.steps, batch_size=args.batch_size,

@@ -41,6 +41,34 @@ def subprocess_env_fixture():
 
 
 @pytest.fixture
+def watchdog():
+    """Deadlock tripwire for thread-based tests (prefetch stagers, async
+    serve queues): arm it with a deadline and a hung worker dumps every
+    thread's stack and kills the process instead of hanging tier-1 until
+    the CI job timeout.
+
+        def test_x(watchdog):
+            watchdog(60)          # seconds; re-arm allowed
+            ...
+
+    Uses ``faulthandler.dump_traceback_later(exit=True)`` — the dump shows
+    WHERE each thread is stuck, which a plain pytest timeout would not —
+    and always disarms on teardown so a passing test leaves nothing armed.
+    """
+    import faulthandler
+
+    armed = []
+
+    def arm(seconds: float = 120.0) -> None:
+        faulthandler.dump_traceback_later(seconds, exit=True)
+        armed.append(seconds)
+
+    yield arm
+    if armed:
+        faulthandler.cancel_dump_traceback_later()
+
+
+@pytest.fixture
 def run_py():
     """Run a code string in an isolated multi-device child; returns stdout.
 

@@ -6,9 +6,9 @@ import jax
 import numpy as np
 import pytest
 
-from repro.data import (ArrayChunks, FileChunks, LibsvmChunks, dump_libsvm,
-                        epoch_permutation, iter_epoch, iter_libsvm_chunks,
-                        parse_libsvm, write_npz_chunks)
+from repro.data import (ArrayChunks, FileChunks, LibsvmChunks, PrefetchChunks,
+                        dump_libsvm, epoch_permutation, iter_epoch,
+                        iter_libsvm_chunks, parse_libsvm, write_npz_chunks)
 
 
 def _data(n=53, d=5, seed=0):
@@ -121,3 +121,97 @@ def test_source_validation():
         ArrayChunks(x, y, 0)
     with pytest.raises(ValueError):
         FileChunks([])
+    with pytest.raises(ValueError):
+        PrefetchChunks(ArrayChunks(x, y, 10), depth=0)
+
+
+class _CountingSource(ArrayChunks):
+    """ArrayChunks that records which thread loaded each chunk."""
+
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        self.load_threads: list[str] = []
+
+    def load(self, i):
+        import threading
+
+        self.load_threads.append(threading.current_thread().name)
+        return super().load(i)
+
+
+def test_prefetch_chunks_bitwise_and_on_worker():
+    """Planned loads come back bitwise identical AND ran on the worker."""
+    x, y = _data(n=60)
+    inner = _CountingSource(x, y, 12)
+    pre = PrefetchChunks(inner, depth=2)
+    order = [3, 0, 4, 1, 2]
+    pre.plan(order)
+    try:
+        for cid in order:
+            xd, yd = ArrayChunks(x, y, 12).load(cid)
+            xp, yp = pre.load(cid)
+            np.testing.assert_array_equal(xp, xd)
+            np.testing.assert_array_equal(yp, yd)
+    finally:
+        pre.cancel()
+    assert all(t.startswith("prefetch") for t in inner.load_threads), \
+        inner.load_threads
+
+
+def test_prefetch_chunks_off_plan_falls_back_sync():
+    x, y = _data(n=40)
+    pre = PrefetchChunks(ArrayChunks(x, y, 10), depth=2)
+    # no plan at all: plain synchronous source
+    xp, _ = pre.load(1)
+    np.testing.assert_array_equal(xp, x[10:20])
+    pre.plan([0, 2])
+    try:
+        xp, _ = pre.load(3)                  # off the declared plan
+        np.testing.assert_array_equal(xp, x[30:40])
+    finally:
+        pre.cancel()
+
+
+def test_prefetch_chunks_worker_error_surfaces_on_caller(watchdog):
+    """A load() raising on the worker re-raises on the caller's thread and
+    leaves no hung worker behind."""
+    watchdog(120)
+
+    class Boom(ArrayChunks):
+        def load(self, i):
+            if i == 1:
+                raise RuntimeError("disk gone")
+            return super().load(i)
+
+    x, y = _data(n=30)
+    pre = PrefetchChunks(Boom(x, y, 10), depth=2)
+    pre.plan([0, 1, 2])
+    try:
+        pre.load(0)                          # fine
+        with pytest.raises(RuntimeError, match="disk gone"):
+            pre.load(1)
+    finally:
+        pre.cancel()
+
+
+def test_iter_epoch_prefetch_bitwise_matches_sync():
+    """iter_epoch(prefetch=2) yields the identical (position, x, y) stream —
+    shuffled, resumed mid-epoch, and over an already-wrapped source."""
+    x, y = _data(n=57)
+    src = ArrayChunks(x, y, 12)
+    key = jax.random.PRNGKey(11)
+    for kw in ({}, {"start_chunk": 2}, {"key": None}):
+        sync = list(iter_epoch(src, key, **kw)) if "key" not in kw else \
+            list(iter_epoch(src, **kw))
+        pre = list(iter_epoch(src, key, prefetch=2, **kw)) \
+            if "key" not in kw else list(iter_epoch(src, prefetch=2, **kw))
+        assert [p for p, _, _ in sync] == [p for p, _, _ in pre]
+        for (_, xa, ya), (_, xb, yb) in zip(sync, pre):
+            np.testing.assert_array_equal(xa, xb)
+            np.testing.assert_array_equal(ya, yb)
+    # an explicit PrefetchChunks source is planned, not double-wrapped
+    wrapped = PrefetchChunks(src, depth=2)
+    pre2 = list(iter_epoch(wrapped, key, prefetch=2))
+    sync2 = list(iter_epoch(src, key))
+    for (_, xa, _), (_, xb, _) in zip(sync2, pre2):
+        np.testing.assert_array_equal(xa, xb)

@@ -87,6 +87,63 @@ def test_serve_cli_svm_smoke(subprocess_env):
     assert "queue == direct predict (bitwise)" in proc.stdout
 
 
+def test_sharded_async_queue_bitwise_matches_direct(run_py):
+    """AsyncBatchQueue parity on 8 devices: the dispatcher thread driving
+    the pjit'd serve cell via predict_fn returns bitwise the single-device
+    direct labels under ragged randomized arrivals."""
+    run_py(r"""
+import jax, numpy as np
+from repro.core import (MulticlassSVMConfig, AsyncBatchQueue, export_model,
+                        fit_multiclass, predict_labels)
+from repro.core.distributed import make_distributed_predict
+from repro.data import make_blobs_multiclass
+from repro.launch.mesh import make_mesh
+
+x, y = make_blobs_multiclass(jax.random.PRNGKey(0), 512, 8, n_classes=4,
+                             sep=2.0)
+cfg = MulticlassSVMConfig.create(4, budget=16, lambda_=1e-3, gamma=0.5,
+                                 batch_size=8)
+state = fit_multiclass(cfg, x, y)
+model = export_model(state, 0.5, bank_dtype="bfloat16")
+direct = np.asarray(predict_labels(model, x))          # single-device path
+
+mesh = make_mesh((2, 4), ("data", "model"))
+fn, args, in_sh, out_sh = make_distributed_predict(
+    mesh, dim=8, batch=64, slots=cfg.slots, n_classes=4)
+with mesh:
+    jfn = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+    with AsyncBatchQueue(model, max_batch=64, min_bucket=8,
+                         predict_fn=lambda xb: jfn(model, xb)) as q:
+        q.warmup()
+        rng = np.random.default_rng(1)
+        sizes = [int(s) for s in rng.integers(0, 97, size=12)]
+        xs = np.asarray(x)
+        tickets, off = [], 0
+        for s in sizes:
+            tickets.append(q.submit(xs[off:off + s])); off += min(s, 512 - off)
+        q.drain(timeout=300.0)
+        got = np.concatenate([q.take(t, timeout=60.0) for t in tickets])
+n = got.shape[0]
+assert (got == direct[:n]).all()
+assert set(q.stats["bucket_counts"]) <= set(q.buckets)
+print("OK sharded async queue bitwise", q.stats["microbatches"])
+""")
+
+
+def test_serve_cli_live_smoke(subprocess_env):
+    """``serve --arch svm_bsgd --smoke --live``: the train-while-serve arm
+    runs end-to-end — background trainer publishing into the ModelBank,
+    AsyncBatchQueue serving over it, versions reported."""
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--arch", "svm_bsgd",
+         "--smoke", "--live"],
+        capture_output=True, text=True, timeout=900,
+        env=subprocess_env(n_devices=1))
+    assert proc.returncode == 0, f"{proc.stdout}\n{proc.stderr}"
+    assert "versions served" in proc.stdout
+    assert "rows/s" in proc.stdout
+
+
 def test_serve_cli_from_stream_checkpoint(subprocess_env, tmp_path):
     """Train via the streaming CLI path, then serve the written checkpoint:
     the full train -> checkpoint -> export -> queue pipeline as processes."""
