@@ -8,9 +8,10 @@ from . import budget, kernel_cache, merge_math
 from .predict import (AsyncBatchQueue, BatchQueue, ModelBank, ServeModel, default_buckets, drive_trace,
                       export_model, load_serve_model, pad_bucket, predict_labels, predict_proba,
                       ragged_trace_sizes, serve_requests, serve_scores, top_k_labels)
-from .bsgd import (BSGDConfig, SVMState, accuracy, decision_function, fit, fit_stream, init_state,
-                   insert_from_rows, predict, train_chunk, train_epoch, train_epoch_stream, train_step,
-                   train_step_from_rows)
+from .bsgd import (BSGDConfig, SVMState, accuracy, decision_function, drain_budget, fit, fit_stream,
+                   init_state, insert_from_rows, predict, train_chunk, train_epoch, train_epoch_stream,
+                   train_step, train_step_from_rows)
+from . import bdca
 from .budget import (METHODS, STRATEGIES, MaintenanceInfo, maintenance_step, run_maintenance,
                      run_maintenance_classes)
 from .lookup import MergeLookupTable, bilinear_lookup, build_lookup_table, build_merge_tables, default_table
@@ -24,10 +25,10 @@ from .merge_math import (EPS_PRECISE, EPS_STANDARD, KAPPA_UNIMODAL, golden_secti
 __all__ = [
     "AsyncBatchQueue", "BSGDConfig", "BatchQueue", "SVMState", "MaintenanceInfo", "MergeLookupTable", "METHODS",
     "ModelBank", "MulticlassSVMConfig", "STRATEGIES", "ServeModel", "accuracy", "accuracy_multiclass",
-    "bilinear_lookup", "budget", "build_lookup_table",
+    "bdca", "bilinear_lookup", "budget", "build_lookup_table",
     "build_merge_tables", "check_labels", "class_kernel_rows", "decision_function",
     "decision_function_multiclass", "default_buckets", "default_table",
-    "drive_trace", "export_model", "fit", "fit_multiclass",
+    "drain_budget", "drive_trace", "export_model", "fit", "fit_multiclass",
     "fit_multiclass_loop", "fit_multiclass_stream", "fit_stream",
     "golden_section_search", "gss_num_iters",
     "init_multiclass_state", "init_state", "insert_from_rows", "kernel_cache",

@@ -1,0 +1,181 @@
+"""BDCA: budgeted dual coordinate ascent on the cached working-set Gram matrix.
+
+The dual subspace ascent solver of "Dual SVM Training on a Budget" (Qaadan,
+Schüler & Glasmachers, arXiv 1806.10182 — same group as the source paper),
+implemented as a *second optimizer* behind ``BSGDConfig.solver`` sharing
+every other layer of this repo unchanged (the §14 solver contract in
+DESIGN.md):
+
+  * the **working set** is the budgeted SV bank itself — the fixed-slot
+    ``SVMState`` with its ``count`` watermark (DESIGN.md §2);
+  * the **Gram matrix** of the working set is exactly ``SVMState.kmat``, the
+    persistent SV-SV kernel cache maintenance already keeps incrementally
+    consistent (I1-I4, DESIGN.md §4) — the ascent never recomputes a kernel
+    value, so ``solver="bdca"`` requires ``use_kernel_cache=True``;
+  * **violator insertion** reuses the fused ``rbf_matrix`` margin rows the
+    step already computed: a point enters iff its margin violates
+    ``y f(x) < 1`` (the same criterion as BSGD — it is exactly "the optimal
+    dual coordinate step from 0 is nonzero"), with its coefficient set to
+    that optimal step ``clip(1 - y f(x), 0, C)``;
+  * **budget maintenance** is the untouched strategy layer: over-budget
+    counts drain through ``budget.run_maintenance`` /
+    ``run_maintenance_classes`` (merge / multi-merge / removal /
+    removal-project, ``maintenance_engine="xla"|"pallas"``).
+
+Math.  The hinge-loss SVM dual over the working set is the box-constrained
+concave quadratic
+
+    D(a) = sum_i a_i - 1/2 sum_ij a_i a_j y_i y_j K_ij,    0 <= a_i <= C.
+
+``SVMState.alpha`` stores the *signed* coefficients ``b_i = y_i a_i`` (the
+BSGD convention), so ``y_i = sign(b_i)`` and the box reads ``|b_i| <= C``.
+One Gauss-Seidel coordinate step maximizes the 1-D restriction exactly
+(``K_ii = 1`` for the RBF kernel):
+
+    g_i   = 1 - y_i f(x_i),    f(x_i) = sum_j b_j K_ij   (a cache row read)
+    a_i  <- clip(a_i + g_i, 0, C)
+
+and the margin vector ``f`` is updated incrementally from the coordinate's
+cached kernel row — ``O(slots)`` per coordinate, ``O(slots^2)`` per sweep,
+zero kernel evaluations.  Each exact 1-D maximization makes the dual
+objective monotone non-decreasing and keeps the box invariant — the
+properties ``tests/core/test_bdca.py`` pins.
+
+Two deliberate deviations from the sequential-reference algorithm, both
+shared with the BSGD step and documented so the invariant harness can hold
+them fixed:
+
+  * batch inserts are Jacobi-style (each new point's step uses the
+    pre-insert margins; ``batch_size=1`` is the exact sequential setting);
+  * a coordinate driven to ``a_i = 0`` loses its label sign and FREEZES
+    (merged SVs carry synthetic signed coefficients, so the sign *is* the
+    label information) — frozen slots contribute nothing to ``f``, are
+    excluded from the KKT residual, and are the first candidates removal
+    strategies drop.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel_cache
+from .bsgd import BSGDConfig, SVMState, drain_budget
+
+
+def _masked(alpha, count):
+    """Signed coefficients with stale (>= count) slots zeroed."""
+    return jnp.where(jnp.arange(alpha.shape[0]) < count, alpha, 0.0)
+
+
+def dual_objective(alpha, kmat, count):
+    """D(a) = sum_i |b_i| - 1/2 b^T K b over the active working set.
+
+    Stale cache entries never contribute: the masked coefficient vector is
+    zero outside the watermark on both sides of the quadratic form.
+    """
+    b = _masked(alpha, count).astype(jnp.float32)
+    k = kmat.astype(jnp.float32)
+    return jnp.sum(jnp.abs(b)) - 0.5 * (b @ (k @ b))
+
+
+def kkt_residual(alpha, kmat, count, C):
+    """Max |projected dual gradient| over live (non-frozen) coordinates.
+
+    Interior coordinates contribute ``|g_i|``; coordinates at the upper box
+    bound contribute only the infeasible-direction part ``max(-g_i, 0)``
+    (ascent there is blocked, so a positive gradient is KKT-consistent);
+    frozen ``a_i = 0`` slots are excluded (their sign — the label — is
+    gone, so no feasible direction is defined).  Zero iff the live working
+    set is dual-optimal at this box.
+    """
+    b = _masked(alpha, count).astype(jnp.float32)
+    f = kmat.astype(jnp.float32) @ b
+    a = jnp.abs(b)
+    g = 1.0 - jnp.sign(b) * f
+    live = (jnp.arange(alpha.shape[0]) < count) & (a > 0)
+    pg = jnp.where(a >= C, jnp.maximum(-g, 0.0), jnp.abs(g))
+    return jnp.max(jnp.where(live, pg, 0.0))
+
+
+def ascent_rounds(alpha, kmat, count, C, rounds: int):
+    """``rounds`` Gauss-Seidel sweeps of exact 1-D dual maximization.
+
+    Sequential over slots within a sweep (lax.fori_loop), the margin vector
+    ``f = K b`` carried incrementally — the update for coordinate ``i``
+    reads one cached kernel row, so a sweep is one O(slots^2) pass over
+    ``kmat`` with no kernel evaluations.  Inactive and frozen slots are
+    bitwise no-ops.  Returns the updated signed coefficients (stale slots
+    zeroed, as ``init_state`` guarantees on entry).
+    """
+    slots = alpha.shape[0]
+    k = kmat.astype(alpha.dtype)
+    b0 = _masked(alpha, count)
+    f0 = k @ b0                      # stale rows only feed frozen/inactive i
+
+    def coord(i, bf):
+        beta, f = bf
+        b_i = beta[i]
+        y_i = jnp.sign(b_i)
+        live = (i < count) & (b_i != 0)
+        a_new = jnp.clip(jnp.abs(b_i) + 1.0 - y_i * f[i], 0.0, C)
+        b_new = jnp.where(live, y_i * a_new, b_i)
+        f = f + (b_new - b_i) * k[i]
+        return beta.at[i].set(b_new), f
+
+    def sweep(carry, _):
+        return jax.lax.fori_loop(0, slots, coord, carry), ()
+
+    (beta, _), _ = jax.lax.scan(sweep, (b0, f0), None, length=rounds)
+    return beta
+
+
+def insert_from_rows(cfg: BSGDConfig, state: SVMState, xb, yb, k_b,
+                     k_bb=None) -> SVMState:
+    """The BDCA solver half of a step: dual violator insert + ascent sweeps.
+
+    The §14 contract's counterpart of ``bsgd.insert_from_rows`` (same
+    signature, same post-condition: ``count`` may exceed the budget by up
+    to ``batch_size`` and the maintenance engine drains it).  ``k_b = k(xb,
+    sv_x)`` are the margin rows ONE fused ``rbf_matrix`` call produced;
+    ``k_bb = k(xb, xb)`` completes the cache block for the inserted points.
+    No Pegasos shrink: dual coefficients are bounded by the box, not by a
+    decaying step size.
+    """
+    slots = cfg.slots
+    active = jnp.arange(state.alpha.shape[0]) < state.count
+    f = k_b.astype(state.alpha.dtype) @ jnp.where(active, state.alpha, 0.0)
+    margin = yb * f
+
+    # optimal dual coordinate step from a = 0 (K_ii = 1): nonzero iff the
+    # margin violates — the identical criterion BSGD inserts on, so the two
+    # solvers share the violator definition the harness pins
+    viol = margin < 1.0
+    a_new = jnp.clip(1.0 - margin, 0.0, cfg.bdca_C)
+    pos = state.count + jnp.cumsum(viol.astype(jnp.int32)) - 1
+    idx = jnp.where(viol, pos, slots)                 # slots == OOB -> dropped
+    sv_x = state.sv_x.at[idx].set(xb.astype(state.sv_x.dtype), mode="drop")
+    alpha = state.alpha.at[idx].set((yb * a_new).astype(state.alpha.dtype),
+                                    mode="drop")
+    n_new = jnp.sum(viol).astype(jnp.int32)
+    kmat = kernel_cache.insert_rows(state.kmat, idx, k_b, k_bb)
+    count = state.count + n_new
+
+    # coordinate ascent over the whole working set (bank + fresh inserts),
+    # every kappa read a cache row
+    alpha = ascent_rounds(alpha, kmat, count, cfg.bdca_C, cfg.bdca_rounds)
+
+    return SVMState(sv_x=sv_x, alpha=alpha, count=count, step=state.step + 1,
+                    n_inserts=state.n_inserts + n_new,
+                    n_merges=state.n_merges, kmat=kmat)
+
+
+@partial(jax.jit, static_argnames=("cfg", "impl"))
+def train_step_from_rows(cfg: BSGDConfig, table, state: SVMState, xb, yb,
+                         k_b, k_bb=None, *, impl: str = "auto") -> SVMState:
+    """One BDCA minibatch step from precomputed kernel rows: dual insert +
+    ascent sweeps, then the SAME maintenance drain as the BSGD step
+    (``bsgd.drain_budget`` — strategy layer and engines untouched)."""
+    state = insert_from_rows(cfg, state, xb, yb, k_b, k_bb)
+    return drain_budget(cfg, table, state, impl=impl)

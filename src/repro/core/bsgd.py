@@ -94,6 +94,23 @@ class BSGDConfig:
         ``maintenance`` in ``("merge", "multi-merge")``; on non-TPU backends
         it dispatches to the fused reference path ``ref.train_step_fused``
         (one XLA program instead of three phase launches).
+      solver: which optimizer drives the working set — ``"bsgd"`` (primal
+        Pegasos SGD, the source paper) or ``"bdca"`` (dual coordinate
+        ascent over the budgeted bank, ``core.bdca`` / arXiv 1806.10182).
+        Both share violator insertion, the kernel cache, the maintenance
+        strategy layer, streaming and serving (the §14 solver contract in
+        DESIGN.md).  ``"bdca"`` ascends on the cached Gram matrix, so it
+        requires ``use_kernel_cache=True``; the fused train-step megakernel
+        implements the Pegasos update, so ``step_engine="pallas"`` is
+        incompatible (``maintenance_engine="pallas"`` composes fine).
+      bdca_rounds: Gauss-Seidel coordinate-ascent sweeps over the working
+        set per minibatch step (``solver="bdca"`` only).  Each sweep is one
+        O(slots^2) pass over the cached Gram matrix; 2 is the
+        speed/optimality sweet spot at bench sizes.
+      bdca_C: the dual box constraint ``0 <= alpha_i <= C``
+        (``solver="bdca"`` only).  The same C-parameterization as
+        ``from_C`` — pass ``bdca_C=C`` alongside ``lambda_ = 1/(nC)`` for a
+        like-for-like solver comparison.
     """
 
     budget: int = 100
@@ -120,6 +137,11 @@ class BSGDConfig:
                                        # whole step (margin + insert + event
                                        # rounds) into one launch chain per
                                        # class block (DESIGN.md §12)
+    solver: str = "bsgd"               # bsgd | bdca — primal Pegasos SGD or
+                                       # dual coordinate ascent (core.bdca);
+                                       # the §14 solver contract
+    bdca_rounds: int = 2               # ascent sweeps per step (bdca only)
+    bdca_C: float = 1.0                # dual box 0 <= alpha <= C (bdca only)
 
     def __post_init__(self):
         if self.maintenance not in budget_mod.STRATEGIES:
@@ -154,6 +176,24 @@ class BSGDConfig:
                 "off the kernel cache: it requires use_kernel_cache=True, "
                 "method='lookup-wd' and maintenance in "
                 "('merge', 'multi-merge')")
+        if self.solver not in ("bsgd", "bdca"):
+            raise ValueError(f"solver={self.solver!r} not in "
+                             "('bsgd', 'bdca')")
+        if self.solver == "bdca":
+            if not self.use_kernel_cache:
+                raise ValueError(
+                    "solver='bdca' ascends on the cached working-set Gram "
+                    "matrix (SVMState.kmat): it requires "
+                    "use_kernel_cache=True")
+            if self.step_engine == "pallas":
+                raise ValueError(
+                    "step_engine='pallas' fuses the Pegasos primal update; "
+                    "solver='bdca' needs step_engine='composed' "
+                    "(maintenance_engine='pallas' composes fine)")
+            if self.bdca_rounds < 1:
+                raise ValueError("solver='bdca' needs bdca_rounds >= 1")
+            if not self.bdca_C > 0:
+                raise ValueError("solver='bdca' needs bdca_C > 0")
 
     @property
     def slots(self) -> int:
@@ -236,20 +276,14 @@ def insert_from_rows(cfg: BSGDConfig, state: SVMState, xb, yb, k_b,
                     n_merges=state.n_merges, kmat=kmat)
 
 
-@partial(jax.jit, static_argnames=("cfg", "impl"))
-def train_step_from_rows(cfg: BSGDConfig, table, state: SVMState, xb, yb,
-                         k_b, k_bb=None, *, impl: str = "auto") -> SVMState:
-    """Pegasos minibatch step + maintenance from precomputed kernel rows.
+def drain_budget(cfg: BSGDConfig, table, state: SVMState, *,
+                 impl: str = "auto") -> SVMState:
+    """The maintenance half of a train step, shared by every solver.
 
-    ``k_b = k(xb, sv_x)`` of shape (batch, slots) and — only when the kernel
-    cache is on — ``k_bb = k(xb, xb)`` of shape (batch, batch).  This is the
-    seam the one-vs-rest engine (``core.multiclass``) vmaps over the class
-    axis: all classes' rows come from ONE fused ``rbf_matrix`` call against
-    the flattened (C * slots, dim) SV bank, then each class runs this
-    row-consuming step.  Everything below is vmap-clean (masked argmin/top-k,
-    scatter-with-drop — no per-example control flow).
+    Drains an over-budget post-insert ``count`` back to ``cfg.budget``
+    through the configured strategy/engine (the §14 solver contract:
+    a solver produces the insert/update half, this drain is common).
     """
-    state = insert_from_rows(cfg, state, xb, yb, k_b, k_bb)
     unroll = cfg.batch_size if cfg.unroll_maintenance else 0
 
     if cfg.maintenance_engine == "pallas":
@@ -274,12 +308,37 @@ def train_step_from_rows(cfg: BSGDConfig, table, state: SVMState, xb, yb,
 
 
 @partial(jax.jit, static_argnames=("cfg", "impl"))
+def train_step_from_rows(cfg: BSGDConfig, table, state: SVMState, xb, yb,
+                         k_b, k_bb=None, *, impl: str = "auto") -> SVMState:
+    """Pegasos minibatch step + maintenance from precomputed kernel rows.
+
+    ``k_b = k(xb, sv_x)`` of shape (batch, slots) and — only when the kernel
+    cache is on — ``k_bb = k(xb, xb)`` of shape (batch, batch).  This is the
+    seam the one-vs-rest engine (``core.multiclass``) vmaps over the class
+    axis: all classes' rows come from ONE fused ``rbf_matrix`` call against
+    the flattened (C * slots, dim) SV bank, then each class runs this
+    row-consuming step.  Everything below is vmap-clean (masked argmin/top-k,
+    scatter-with-drop — no per-example control flow).
+    """
+    state = insert_from_rows(cfg, state, xb, yb, k_b, k_bb)
+    return drain_budget(cfg, table, state, impl=impl)
+
+
+@partial(jax.jit, static_argnames=("cfg", "impl"))
 def train_step(cfg: BSGDConfig, table, state: SVMState, xb, yb, *,
                impl: str = "auto") -> SVMState:
-    """One Pegasos minibatch step + budget maintenance.
+    """One minibatch step + budget maintenance (``cfg.solver`` dispatch).
 
     xb: (batch, dim), yb: (batch,) in {-1, +1}.
     """
+    if cfg.solver == "bdca":
+        # dual coordinate ascent (core.bdca) — same fused margin rows, same
+        # maintenance drain; only the insert/update half differs
+        from . import bdca
+        k_b = kops.rbf_matrix(xb, state.sv_x, cfg.gamma, impl=impl)
+        k_bb = kops.rbf_matrix(xb, xb, cfg.gamma, impl=impl)
+        return bdca.train_step_from_rows(cfg, table, state, xb, yb, k_b,
+                                         k_bb, impl=impl)
     if cfg.step_engine == "pallas":
         # the fused megakernel is class-batched; the binary step lifts to
         # C = 1 (margin + insert + event rounds in one launch chain)

@@ -261,7 +261,7 @@ def lower_svm_cell(mesh, *, budget: int = 16384, dim: int = 1024,
                    layout: str = "replicated", n_classes: int = 8,
                    stream_steps: int = 0, step: str = "train",
                    maintenance_engine: str = "xla",
-                   step_engine: str = "composed"):
+                   step_engine: str = "composed", solver: str = "bsgd"):
     """AOT-lower the production-scale BSGD cell (the paper-technique cell).
 
     Production sizing: budget 16k SVs, 1k features, 8k-example global
@@ -287,14 +287,18 @@ def lower_svm_cell(mesh, *, budget: int = 16384, dim: int = 1024,
     the class axis and the cell adds NO collectives over the §11
     event-engine cell (identical collective breakdown in the dryrun — the
     shared all-gathers belong to the kernel-cache-carrying step, not the
-    fusion).
+    fusion).  ``solver="bdca"`` lowers the dual coordinate-ascent step
+    (``core.bdca``) through the SAME layouts — it implies the kernel cache
+    (the ascent reads cached Gram rows) and composes with
+    ``maintenance_engine`` but not with ``step_engine="pallas"``.
     """
     cfg = BSGDConfig(budget=budget, lambda_=1e-6, gamma=2.0**-7, method=method,
                      batch_size=batch, dtype="float32", sv_dtype="bfloat16",
-                     use_kernel_cache=(maintenance_engine == "pallas"
+                     use_kernel_cache=(solver == "bdca"
+                                       or maintenance_engine == "pallas"
                                        or step_engine == "pallas"),
                      maintenance_engine=maintenance_engine,
-                     step_engine=step_engine)
+                     step_engine=step_engine, solver=solver)
     if layout == "class":
         cfg = MulticlassSVMConfig(n_classes=n_classes, binary=cfg)
     if step == "predict":

@@ -146,9 +146,12 @@ def accuracy_multiclass(state: SVMState, x, y, gamma, **kw) -> jax.Array:
 @partial(jax.jit, static_argnames=("cfg", "impl"))
 def train_step_multiclass(cfg: MulticlassSVMConfig, table, state: SVMState,
                           xb, yb, *, impl: str = "auto") -> SVMState:
-    """One lockstep Pegasos step for all C one-vs-rest problems.
+    """One lockstep solver step for all C one-vs-rest problems.
 
     xb: (batch, dim); yb: (batch,) integer class ids in [0, C).
+    ``cfg.binary.solver`` picks the per-class update (Pegasos primal SGD or
+    BDCA dual ascent — ``core.bdca``); both plug into the identical class
+    vmap / fused-maintenance structure below.
     One fused rbf call produces every class's margin rows; the per-class
     update (insert + budget maintenance) is vmapped over the class axis with
     the lookup table and minibatch closed over (shared, not stacked).
@@ -183,9 +186,18 @@ def train_step_multiclass(cfg: MulticlassSVMConfig, table, state: SVMState,
             if b.use_kernel_cache else None)
     y_ovr = ovr_targets(yb, cfg.n_classes, dtype=jnp.dtype(b.dtype))
 
+    # the §14 solver contract: a solver is an (insert+update, full-step) pair
+    # with bsgd's row-consuming signatures; everything downstream — the class
+    # vmap, the fused maintenance engine, streaming, serving — is shared
+    if b.solver == "bdca":
+        from . import bdca
+        insert_fn, row_step_fn = bdca.insert_from_rows, bdca.train_step_from_rows
+    else:
+        insert_fn, row_step_fn = insert_from_rows, train_step_from_rows
+
     if b.maintenance_engine == "pallas":
         def one_insert(st, yc, kc):
-            return insert_from_rows(b, st, xb, yc, kc, k_bb)
+            return insert_fn(b, st, xb, yc, kc, k_bb)
 
         mid = jax.vmap(one_insert)(state, y_ovr, k_b)
         sv_x, alpha, kmat, count, n_merges = \
@@ -197,7 +209,7 @@ def train_step_multiclass(cfg: MulticlassSVMConfig, table, state: SVMState,
                             n_merges=n_merges, kmat=kmat)
 
     def one_class(st, yc, kc):
-        return train_step_from_rows(b, table, st, xb, yc, kc, k_bb, impl=impl)
+        return row_step_fn(b, table, st, xb, yc, kc, k_bb, impl=impl)
 
     return jax.vmap(one_class)(state, y_ovr, k_b)
 

@@ -48,7 +48,8 @@ def run_svm_cell(*, multi_pod: bool, method: str = "lookup-wd",
                  layout: str = "replicated", n_classes: int = 8,
                  stream_steps: int = 0, step: str = "train",
                  maintenance_engine: str = "xla",
-                 step_engine: str = "composed") -> dict:
+                 step_engine: str = "composed",
+                 solver: str = "bsgd") -> dict:
     """The paper-technique cell: distributed minibatch BSGD on the mesh.
 
     ``stream_steps > 0`` lowers the streaming-epoch chunk program (one
@@ -58,7 +59,9 @@ def run_svm_cell(*, multi_pod: bool, method: str = "lookup-wd",
     ``maintenance_engine="pallas"`` lowers the fused maintenance-event
     engine (sorted-excess schedule over the class-sharded state).
     ``step_engine="pallas"`` lowers the fused train-step megakernel
-    (margin + insert + event rounds in one launch chain per class block)."""
+    (margin + insert + event rounds in one launch chain per class block).
+    ``solver="bdca"`` lowers the dual coordinate-ascent step (``core.bdca``)
+    through the same layouts (implies the kernel cache)."""
     from ..core.distributed import lower_svm_cell
 
     mesh = make_production_mesh(multi_pod=multi_pod)
@@ -68,7 +71,7 @@ def run_svm_cell(*, multi_pod: bool, method: str = "lookup-wd",
                                   n_classes=n_classes,
                                   stream_steps=stream_steps, step=step,
                                   maintenance_engine=maintenance_engine,
-                                  step_engine=step_engine)
+                                  step_engine=step_engine, solver=solver)
     t_lower = time.time() - t0
     t0 = time.time()
     compiled = lowered.compile()
@@ -109,6 +112,8 @@ def run_svm_cell(*, multi_pod: bool, method: str = "lookup-wd",
             tag += f".{maintenance_engine}"
         if step_engine != "composed":
             tag += ".fusedstep"
+        if solver != "bsgd":
+            tag += f".{solver}"
         with open(os.path.join(out_dir, tag + ".json"), "w") as f:
             json.dump(result, f, indent=2)
     return result
@@ -195,6 +200,10 @@ def main() -> None:
                     choices=["composed", "pallas"],
                     help="pallas: lower the fused train-step megakernel "
                          "(margin + insert + event rounds, one launch chain)")
+    ap.add_argument("--svm-solver", default="bsgd",
+                    choices=["bsgd", "bdca"],
+                    help="bdca: lower the dual coordinate-ascent step "
+                         "(core.bdca; implies the kernel cache)")
     ap.add_argument("--seq-shard-attn", action="store_true",
                     help="context-parallel attention (hillclimb variant)")
     ap.add_argument("--keep-scan", action="store_true",
@@ -219,7 +228,8 @@ def main() -> None:
                      n_classes=args.svm_classes,
                      stream_steps=args.svm_stream_steps, step=args.svm_step,
                      maintenance_engine=args.svm_engine,
-                     step_engine=args.svm_step_engine)
+                     step_engine=args.svm_step_engine,
+                     solver=args.svm_solver)
         return
 
     failures = []

@@ -8,6 +8,11 @@ import pytest
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 sys.path.insert(0, SRC)
 
+# Shared checkers/shims live in tests/helpers (``from helpers.invariants
+# import ...``); the tests dir itself is importable so test modules in any
+# subdirectory reach them without a package install.
+sys.path.insert(0, os.path.dirname(__file__))
+
 # Tests must see the single real CPU device (the 512-device env is exclusive
 # to repro.launch.dryrun subprocesses).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")

@@ -1,0 +1,199 @@
+"""BDCA solver gates: dual-math properties, learning, streaming, donation.
+
+The dual coordinate-ascent math (``core.bdca``) is pinned by properties that
+hold by construction of the exact 1-D maximization:
+
+  * the dual objective is monotone non-decreasing over ascent sweeps on a
+    fixed working set;
+  * the box ``0 <= |alpha_i| <= C`` is never violated;
+  * the KKT residual (projected dual gradient) is driven down by sweeps.
+
+Property tests run under real hypothesis in CI and under the deterministic
+seeded fallback elsewhere (``helpers.hypothesis_compat``).  The
+solver-agnostic invariants (cache == rebuild, integer-state consistency,
+maintenance bitwise, serve round-trip) live in ``test_solver_invariants.py``.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from helpers.hypothesis_compat import given, settings, st
+from helpers.invariants import assert_state_parity
+
+from repro.core import BSGDConfig, MulticlassSVMConfig, bdca, fit, fit_stream
+from repro.core.bsgd import accuracy, init_state, train_chunk
+from repro.data import ArrayChunks, make_blobs, make_two_moons
+
+COMMON = dict(deadline=None, max_examples=25)
+SLOTS, DIM = 24, 4
+
+
+def _cfg(**kw):
+    kw.setdefault("budget", 16)
+    kw.setdefault("gamma", 2.0)
+    kw.setdefault("batch_size", 4)
+    kw.setdefault("use_kernel_cache", True)
+    return BSGDConfig(solver="bdca", **kw)
+
+
+def _working_set(seed, count, C):
+    """A valid random working set: unit-diagonal exact Gram (fp32), signed
+    coefficients inside the box, zeros past the watermark."""
+    rng = np.random.default_rng(seed)
+    sv = rng.normal(0.0, 1.0, (SLOTS, DIM)).astype(np.float32)
+    gamma = 0.8
+    d2 = ((sv[:, None] - sv[None, :]) ** 2).sum(-1)
+    kmat = np.exp(-gamma * d2).astype(np.float32)
+    np.fill_diagonal(kmat, 1.0)
+    a = rng.uniform(0.0, C, SLOTS) * rng.choice([-1.0, 1.0], SLOTS)
+    a[count:] = 0.0
+    return (jnp.asarray(a.astype(np.float32)), jnp.asarray(kmat),
+            jnp.asarray(count, jnp.int32))
+
+
+# --------------------------------------------------------------------------
+# dual-math properties
+# --------------------------------------------------------------------------
+@given(seed=st.integers(0, 2**30), count=st.integers(2, SLOTS),
+       C=st.floats(0.2, 4.0))
+@settings(**COMMON)
+def test_dual_objective_monotone_over_rounds(seed, count, C):
+    alpha, kmat, cnt = _working_set(seed, count, C)
+    prev = float(bdca.dual_objective(alpha, kmat, cnt))
+    for _ in range(4):
+        alpha = bdca.ascent_rounds(alpha, kmat, cnt, C, 1)
+        cur = float(bdca.dual_objective(alpha, kmat, cnt))
+        assert cur >= prev - 1e-4 * max(1.0, abs(prev)), (cur, prev)
+        prev = cur
+
+
+@given(seed=st.integers(0, 2**30), count=st.integers(2, SLOTS),
+       C=st.floats(0.2, 4.0), rounds=st.integers(1, 5))
+@settings(**COMMON)
+def test_box_constraints_never_violated(seed, count, C, rounds):
+    alpha, kmat, cnt = _working_set(seed, count, C)
+    out = np.asarray(bdca.ascent_rounds(alpha, kmat, cnt, C, rounds))
+    assert np.all(np.abs(out) <= C * (1 + 1e-6)), np.abs(out).max()
+    np.testing.assert_array_equal(out[count:], 0.0)   # watermark preserved
+
+
+@given(seed=st.integers(0, 2**30), count=st.integers(2, SLOTS),
+       C=st.floats(0.2, 4.0))
+@settings(**COMMON)
+def test_kkt_residual_decreases(seed, count, C):
+    """Enough exact coordinate sweeps drive the projected gradient toward
+    stationarity: after 8 sweeps the residual is no worse than at the start
+    (plus fp noise), and strictly reduced whenever it started non-trivial."""
+    alpha, kmat, cnt = _working_set(seed, count, C)
+    r0 = float(bdca.kkt_residual(alpha, kmat, cnt, C))
+    out = bdca.ascent_rounds(alpha, kmat, cnt, C, 8)
+    r1 = float(bdca.kkt_residual(out, kmat, cnt, C))
+    assert r1 <= r0 + 1e-4, (r0, r1)
+    if r0 > 0.5:
+        assert r1 < r0, (r0, r1)
+
+
+def test_frozen_coordinates_stay_frozen():
+    """A coefficient driven to 0 has lost its label sign: sweeps must leave
+    it untouched (the documented freeze), and it never re-enters f."""
+    alpha, kmat, cnt = _working_set(3, 10, 1.0)
+    alpha = alpha.at[4].set(0.0)
+    out = np.asarray(bdca.ascent_rounds(alpha, kmat, cnt, 1.0, 3))
+    assert out[4] == 0.0
+
+
+# --------------------------------------------------------------------------
+# config validation
+# --------------------------------------------------------------------------
+def test_bdca_config_validation():
+    with pytest.raises(ValueError, match="use_kernel_cache"):
+        BSGDConfig(solver="bdca", use_kernel_cache=False)
+    with pytest.raises(ValueError, match="step_engine"):
+        BSGDConfig(solver="bdca", use_kernel_cache=True,
+                   step_engine="pallas")
+    with pytest.raises(ValueError, match="bdca_rounds"):
+        BSGDConfig(solver="bdca", use_kernel_cache=True, bdca_rounds=0)
+    with pytest.raises(ValueError, match="bdca_C"):
+        BSGDConfig(solver="bdca", use_kernel_cache=True, bdca_C=0.0)
+    with pytest.raises(ValueError, match="solver"):
+        BSGDConfig(solver="smo")
+    # maintenance_engine="pallas" composes with bdca
+    BSGDConfig(solver="bdca", use_kernel_cache=True,
+               maintenance_engine="pallas")
+
+
+# --------------------------------------------------------------------------
+# learning + more sweeps help
+# --------------------------------------------------------------------------
+def test_bdca_learns_two_moons():
+    x, y = make_two_moons(jax.random.PRNGKey(0), 400, noise=0.15)
+    st_d = fit(_cfg(budget=24), x, y, epochs=2, seed=0)
+    assert int(st_d.count) <= 24
+    assert float(accuracy(st_d, x, y, 2.0)) > 0.93
+
+
+def test_more_rounds_do_not_hurt():
+    """4-sweep training lands at least as tight a dual fit as 1-sweep on the
+    same stream of batches (coarse sanity that the sweeps do real work)."""
+    x, y = make_two_moons(jax.random.PRNGKey(2), 300, noise=0.1)
+    acc = {}
+    for rounds in (1, 4):
+        st_d = fit(_cfg(budget=24, bdca_rounds=rounds), x, y, epochs=2)
+        acc[rounds] = float(accuracy(st_d, x, y, 2.0))
+    assert acc[4] >= acc[1] - 0.02, acc
+
+
+# --------------------------------------------------------------------------
+# streaming: bitwise kill-and-resume + bank publishing
+# --------------------------------------------------------------------------
+def test_bdca_stream_kill_and_resume_bitwise(tmp_path):
+    cfg = _cfg(budget=12, gamma=0.5)
+    x, y = make_blobs(jax.random.PRNGKey(1), 230, DIM)
+    src = ArrayChunks(np.asarray(x), np.asarray(y), 37)    # ragged chunks
+    ref = fit_stream(cfg, src, epochs=2, seed=5)
+    ck = os.path.join(tmp_path, "ck")
+    fit_stream(cfg, src, epochs=2, seed=5, ckpt_dir=ck, ckpt_every=2,
+               max_chunks=9)                               # hard kill
+    resumed = fit_stream(cfg, src, epochs=2, seed=5, ckpt_dir=ck,
+                         ckpt_every=2)
+    assert_state_parity(ref, resumed, bitwise=True)
+
+
+def test_bdca_stream_publishes_bank():
+    from repro.core import ModelBank, predict_labels
+
+    cfg = _cfg(budget=12, gamma=0.5)
+    x, y = make_blobs(jax.random.PRNGKey(1), 160, DIM)
+    src = ArrayChunks(np.asarray(x), np.asarray(y), 40)
+    bank = ModelBank()
+    st_d = fit_stream(cfg, src, epochs=1, seed=0, bank=bank, publish_every=2)
+    assert bank.version >= 1
+    _, model = bank.current()
+    from repro.core.bsgd import predict
+    np.testing.assert_array_equal(np.asarray(predict_labels(model, x)),
+                                  np.asarray(predict(st_d, x, cfg.gamma)))
+
+
+# --------------------------------------------------------------------------
+# donation regression gates (the PR 3/4 double-donation class)
+# --------------------------------------------------------------------------
+def test_bdca_init_state_counter_buffers_distinct():
+    st_d = init_state(_cfg(budget=8, gamma=0.5), DIM)
+    ptrs = {a.unsafe_buffer_pointer()
+            for a in (st_d.count, st_d.n_inserts, st_d.n_merges)}
+    assert len(ptrs) == 3
+
+
+def test_bdca_train_chunk_double_donation_safe():
+    """The donated bdca chunk scan on a fresh ``init_state`` — twice, to
+    cover the donate-the-result path too."""
+    cfg = _cfg(budget=8, gamma=0.5)
+    x, y = make_blobs(jax.random.PRNGKey(2), 32, DIM)
+    xc = jnp.asarray(x).reshape(8, 4, DIM)
+    yc = jnp.asarray(y).reshape(8, 4)
+    st_d = init_state(cfg, DIM)
+    st_d = train_chunk(cfg, cfg.table(), st_d, xc, yc)
+    st_d = train_chunk(cfg, cfg.table(), st_d, xc, yc)
+    assert int(st_d.count) > 0

@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from helpers.invariants import assert_state_parity
 
 from repro.core import (BSGDConfig, MulticlassSVMConfig, default_table, fit,
                         fit_multiclass, fit_multiclass_loop, kernel_cache,
@@ -208,17 +209,7 @@ def test_three_engines_decision_bitwise_float_allclose():
     ref_st = states["xla-unroll"]
     assert int(jnp.sum(ref_st.n_merges)) > 0       # the budget actually bit
     for name, st in states.items():
-        for field, a, b in zip(ref_st._fields, ref_st, st):
-            if a is None:
-                continue
-            a, b = np.asarray(a), np.asarray(b)
-            if np.issubdtype(a.dtype, np.integer):
-                np.testing.assert_array_equal(
-                    a, b, err_msg=f"{name}: {field} decision drift")
-            else:
-                np.testing.assert_allclose(
-                    a, b, rtol=1e-5, atol=2e-6,
-                    err_msg=f"{name}: {field} beyond fp32 round-off")
+        assert_state_parity(ref_st, st, context=name)
 
 
 def test_binary_engine_bitwise_vs_unroll():
@@ -231,11 +222,7 @@ def test_binary_engine_bitwise_vs_unroll():
     st_p = fit(BSGDConfig(maintenance_engine="pallas", **base), x, y,
                epochs=1, seed=0)
     assert int(st_p.n_merges) > 0
-    for field, a, b in zip(st_x._fields, st_x, st_p):
-        if a is None:
-            continue
-        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
-                                      err_msg=field)
+    assert_state_parity(st_x, st_p, bitwise=True)
 
 
 def test_engine_trains_bf16_bank_multiclass():
@@ -284,8 +271,4 @@ def test_removal_strategy_vmapped_multiclass_matches_loop():
     st_l = fit_multiclass_loop(cfg, x, y, epochs=1, seed=0)
     assert int(jnp.sum(st_b.n_merges)) > 0         # removal events fired
     assert np.all(np.asarray(st_b.count) <= 16)
-    for field, a, b in zip(st_b._fields, st_b, st_l):
-        if a is None:
-            continue
-        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
-                                      err_msg=field)
+    assert_state_parity(st_b, st_l, bitwise=True)

@@ -4,24 +4,15 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from helpers.invariants import check_cache_invariants, exact_gram
+
 from repro.core import BSGDConfig, fit, kernel_cache
 from repro.data import make_blobs, make_two_moons, train_test_split
 from repro.kernels import ref
 
-
-def _exact(sv_x, count, gamma):
-    x = np.asarray(sv_x, np.float32)[:count]
-    return np.asarray(ref.rbf_matrix(jnp.asarray(x), jnp.asarray(x), gamma))
-
-
-def _check_cache(state, gamma, tol=5e-5):
-    c = int(state.count)
-    got = np.asarray(state.kmat)[:c, :c]
-    want = _exact(state.sv_x, c, gamma)
-    np.testing.assert_allclose(got, want, atol=tol)
-    # I2/I3: exact symmetry, unit diagonal
-    np.testing.assert_array_equal(got, got.T)
-    np.testing.assert_array_equal(np.diag(got), np.ones(c, np.float32))
+# shared with the cross-solver harness (tests/helpers/invariants.py)
+_exact = exact_gram
+_check_cache = check_cache_invariants
 
 
 def test_insert_rows_matches_direct():

@@ -54,7 +54,12 @@ def test_vmap_train_step_matches_per_class_loop(strategy, use_cache):
     divergence (a different merge partner, a dropped event) fails loudly.
     """
     if strategy == "removal-project" and not use_cache:
-        pytest.skip("removal-project projects via cached kernel rows")
+        # not a valid cell: the projection reads cached kernel rows — pin
+        # the config validation instead of skipping
+        with pytest.raises(ValueError, match="removal-project"):
+            BSGDConfig(budget=12, maintenance=strategy,
+                       use_kernel_cache=False)
+        return
     cfg = BSGDConfig(budget=12, lambda_=1e-3, gamma=0.5, method="lookup-wd",
                      batch_size=4, use_kernel_cache=use_cache,
                      maintenance=strategy, unroll_maintenance=True)

@@ -1,10 +1,13 @@
-"""Hypothesis property tests on the merge-problem invariants."""
+"""Hypothesis property tests on the merge-problem invariants.
+
+Runs under real hypothesis when installed (CI), and under the deterministic
+seeded-draw fallback otherwise (``helpers.hypothesis_compat``) — never
+skipped either way.
+"""
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-pytest.importorskip("hypothesis", reason="property tests need the 'test' extra")
-from hypothesis import given, settings, strategies as st
+from helpers.hypothesis_compat import given, settings, st
 
 from repro.core import default_table, merge_math as mm
 

@@ -11,10 +11,8 @@ flip an exact tie).
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-pytest.importorskip("hypothesis", reason="property tests need the 'test' extra")
-from hypothesis import given, settings, strategies as st
+from helpers.hypothesis_compat import given, settings, st
 
 from repro.core import (SVMState, decision_function, export_model,
                         predict_labels, serve_requests, serve_scores)

@@ -1,0 +1,205 @@
+"""Cross-solver invariant harness: the §14 solver contract, enforced.
+
+One fixture yields a ``(solver, maintenance, engine, C)`` cell — every valid
+combination of {bsgd, bdca} x {merge, multi-merge, removal, removal-project}
+x {xla, pallas} x two box/regularization strengths — trains a real model
+through it, and every invariant test runs against every cell:
+
+  * kernel-cache I1-I4 hold after training (the carried cache equals a
+    from-scratch rebuild on the final SV set, exactly symmetric, unit
+    diagonal) — ``helpers.invariants.check_cache_invariants``;
+  * active-count / watermark integer state is consistent (count <= budget,
+    alpha zero past the watermark, monotone counters, finite cache);
+  * maintenance decisions are bitwise identical whether the over-budget
+    state was reached via the bsgd or the bdca insert path, and whichever
+    solver's config drives the drain — maintenance must never read the
+    solver;
+  * serve export round-trips (``export_model`` -> the untouched
+    ``core/predict`` path scores exactly like the training-side decision
+    functions).
+
+Cells that would be invalid configs (pallas engine x non-merge strategy,
+removal-project without the cache) are not generated — the harness runs
+every valid cell and SKIPS none.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from helpers.invariants import (assert_state_parity, check_cache_invariants,
+                                check_integer_state)
+from helpers import invariants as inv
+
+from repro.core import BSGDConfig, MulticlassSVMConfig, bdca, fit
+from repro.core import fit_multiclass
+from repro.core.bsgd import drain_budget, insert_from_rows
+from repro.data import make_blobs, make_blobs_multiclass
+from repro.kernels import ops as kops
+
+BUDGET, BATCH, DIM, GAMMA = 10, 4, 4, 0.7
+
+# every valid (maintenance, engine) pair: the pallas event engine is the
+# fused lookup-wd merge engine, so only merge composes with it
+MAINT_ENGINE = [("merge", "xla"), ("merge", "pallas"),
+                ("multi-merge", "xla"), ("removal", "xla"),
+                ("removal-project", "xla")]
+CELLS = [(solver, maint, engine, C)
+         for solver in ("bsgd", "bdca")
+         for maint, engine in MAINT_ENGINE
+         for C in (0.5, 4.0)]
+
+
+def _cell_cfg(solver, maint, engine, C, n):
+    # the same C-parameterization for both solvers: lambda = 1/(nC) drives
+    # the Pegasos step, bdca_C bounds the dual box
+    return BSGDConfig(solver=solver, lambda_=1.0 / (n * C), bdca_C=C,
+                      budget=BUDGET, gamma=GAMMA, batch_size=BATCH,
+                      method="lookup-wd", use_kernel_cache=True,
+                      maintenance=maint, maintenance_engine=engine,
+                      unroll_maintenance=True)
+
+
+@pytest.fixture(scope="module", params=CELLS,
+                ids=[f"{s}-{m}-{e}-C{c}" for s, m, e, c in CELLS])
+def cell(request):
+    """One trained (solver, maintenance, engine, C) cell: config + final
+    state + the training rows, shared by every invariant test."""
+    solver, maint, engine, C = request.param
+    n = 160
+    cfg = _cell_cfg(solver, maint, engine, C, n)
+    x, y = make_blobs(jax.random.PRNGKey(3), n, DIM, sep=1.2)
+    state = fit(cfg, x, y, epochs=1, seed=0)
+    assert int(state.n_merges) > 0, "cell never exercised maintenance"
+    return cfg, state, np.asarray(x), np.asarray(y)
+
+
+def test_cache_matches_rebuild(cell):
+    cfg, state, _, _ = cell
+    check_cache_invariants(state, cfg.gamma)
+
+
+def test_integer_state_consistent(cell):
+    cfg, state, _, _ = cell
+    check_integer_state(state, cfg.budget)
+
+
+def test_serve_export_roundtrip(cell):
+    cfg, state, x, _ = cell
+    inv.assert_serve_roundtrip(state, cfg.gamma, jnp.asarray(x[:32]))
+
+
+def _over_budget(cfg, state, rng_seed=9):
+    """Push the cell's trained state over budget through its own solver's
+    insert path: a far-away batch violates every margin, so count lands at
+    budget + batch — the exact pre-maintenance state a train step produces."""
+    rng = np.random.default_rng(rng_seed)
+    xb = jnp.asarray(rng.normal(8.0, 0.1, (cfg.batch_size, DIM)),
+                     state.sv_x.dtype)        # kernel ~ 0 vs the bank
+    yb = jnp.ones((cfg.batch_size,), state.alpha.dtype)
+    k_b = kops.rbf_matrix(xb, state.sv_x, cfg.gamma)
+    k_bb = kops.rbf_matrix(xb, xb, cfg.gamma)
+    insert = (bdca.insert_from_rows if cfg.solver == "bdca"
+              else insert_from_rows)
+    over = insert(cfg, state, xb, yb, k_b, k_bb)
+    assert int(over.count) > cfg.budget
+    return over
+
+
+def test_maintenance_decisions_solver_agnostic(cell):
+    """From the same over-budget state, the drain under the bsgd config and
+    under the bdca config is BITWISE identical — maintenance never reads the
+    solver, for states reached by either solver's own insert path."""
+    cfg, state, _, _ = cell
+    over = _over_budget(cfg, state)
+    other = dataclasses.replace(
+        cfg, solver=("bsgd" if cfg.solver == "bdca" else "bdca"))
+    table = cfg.table()
+    drained = drain_budget(cfg, table, over)
+    drained_other = drain_budget(other, table, over)
+    assert int(drained.count) <= cfg.budget
+    assert_state_parity(drained, drained_other, bitwise=True)
+
+
+def test_maintenance_engines_agree_from_either_solver(cell):
+    """For merge cells, the xla and fused-pallas engines drain the SAME
+    over-budget state to bitwise-identical decisions (integer state) with
+    floats inside fp32 round-off — also when that state came from bdca."""
+    cfg, state, _, _ = cell
+    if cfg.maintenance != "merge":
+        return                    # the fused engine is merge-only
+    over = _over_budget(cfg, state)
+    table = cfg.table()
+    st_x = drain_budget(dataclasses.replace(cfg, maintenance_engine="xla"),
+                        table, over)
+    st_p = drain_budget(dataclasses.replace(cfg, maintenance_engine="pallas"),
+                        table, over)
+    assert_state_parity(st_x, st_p)
+
+
+# --------------------------------------------------------------------------
+# the same contract through the OVR multiclass engine
+# --------------------------------------------------------------------------
+MC_CELLS = [(solver, maint, engine)
+            for solver in ("bsgd", "bdca")
+            for maint, engine in (("merge", "xla"), ("merge", "pallas"),
+                                  ("removal", "xla"))]
+
+
+@pytest.fixture(scope="module", params=MC_CELLS,
+                ids=[f"{s}-{m}-{e}" for s, m, e in MC_CELLS])
+def mc_cell(request):
+    solver, maint, engine = request.param
+    n = 240
+    cfg = MulticlassSVMConfig(
+        n_classes=3, binary=_cell_cfg(solver, maint, engine, 1.0, n))
+    x, y = make_blobs_multiclass(jax.random.PRNGKey(5), n, DIM, 3, sep=1.2)
+    state = fit_multiclass(cfg, x, y, epochs=1, seed=0)
+    assert int(jnp.sum(state.n_merges)) > 0
+    return cfg, state, np.asarray(x), np.asarray(y)
+
+
+def test_mc_cache_matches_rebuild(mc_cell):
+    cfg, state, _, _ = mc_cell
+    check_cache_invariants(state, cfg.binary.gamma)
+
+
+def test_mc_integer_state_consistent(mc_cell):
+    cfg, state, _, _ = mc_cell
+    check_integer_state(state, cfg.binary.budget)
+
+
+def test_mc_serve_export_roundtrip(mc_cell):
+    cfg, state, x, _ = mc_cell
+    inv.assert_serve_roundtrip(state, cfg.binary.gamma, jnp.asarray(x[:32]))
+
+
+def test_solvers_land_comparable_accuracy():
+    """Both solvers learn the same separable problems to within 1% of each
+    other — binary and multiclass (the acceptance-level parity that the
+    benchmark measures at real sizes).  Budget 24 so the dual working set is
+    expressive; the harness's budget-10 cells stress the contract, not
+    accuracy."""
+    from repro.core import accuracy, accuracy_multiclass
+    from repro.data import make_two_moons
+
+    n = 400
+    x, y = make_two_moons(jax.random.PRNGKey(11), n, noise=0.12)
+    accs = {}
+    for solver in ("bsgd", "bdca"):
+        cfg = dataclasses.replace(
+            _cell_cfg(solver, "merge", "xla", 1.0, n), budget=24, gamma=2.0)
+        st = fit(cfg, x, y, epochs=2)
+        accs[solver] = float(accuracy(st, x, y, 2.0))
+    assert abs(accs["bsgd"] - accs["bdca"]) <= 0.01, accs
+
+    xm, ym = make_blobs_multiclass(jax.random.PRNGKey(12), n, DIM, 3, sep=2.0)
+    maccs = {}
+    for solver in ("bsgd", "bdca"):
+        binary = dataclasses.replace(
+            _cell_cfg(solver, "merge", "xla", 1.0, n), budget=24)
+        cfg = MulticlassSVMConfig(n_classes=3, binary=binary)
+        st = fit_multiclass(cfg, xm, ym, epochs=2)
+        maccs[solver] = float(accuracy_multiclass(st, xm, ym, GAMMA))
+    assert abs(maccs["bsgd"] - maccs["bdca"]) <= 0.01, maccs

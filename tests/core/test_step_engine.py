@@ -41,22 +41,9 @@ def _fit_mc(cfg_b, n_classes, seed=0):
     return fit_multiclass(cfg, x, y, epochs=2, seed=seed, impl="ref")
 
 
-def _assert_state_parity(st_c, st_f, *, atol_cache=5e-5):
-    """Ints BITWISE, floats inside fp32 round-off."""
-    for name, a, b in zip(st_c._fields, st_c, st_f):
-        if a is None:
-            assert b is None, name
-            continue
-        a = np.asarray(a, np.float32) if a.dtype == jnp.bfloat16 \
-            else np.asarray(a)
-        b = np.asarray(b, np.float32) if b.dtype == jnp.bfloat16 \
-            else np.asarray(b)
-        if np.issubdtype(a.dtype, np.integer):
-            np.testing.assert_array_equal(a, b, err_msg=f"{name} differs")
-        else:
-            atol = atol_cache if name == "kmat" else 2e-6
-            np.testing.assert_allclose(a, b, rtol=1e-5, atol=atol,
-                                       err_msg=f"{name} drifts")
+# ints BITWISE, floats inside fp32 round-off — shared with the cross-solver
+# harness (tests/helpers/invariants.py)
+from helpers.invariants import assert_state_parity as _assert_state_parity
 
 
 # --------------------------------------------------------------------------

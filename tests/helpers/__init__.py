@@ -1,0 +1,4 @@
+"""Shared test helpers (importable because ``tests/conftest.py`` puts the
+tests directory on ``sys.path``): the cross-solver invariant checkers
+(``helpers.invariants``) and the hypothesis compatibility layer
+(``helpers.hypothesis_compat``)."""

@@ -1,0 +1,115 @@
+"""Cross-solver invariant checkers shared across the core test suite.
+
+One home for the assertions that used to be duplicated inline in
+``test_kernel_cache.py`` / ``test_event_engine.py`` / ``test_step_engine.py``
+and that the cross-solver harness (``test_solver_invariants.py``) now runs
+for every (solver × maintenance × engine × C) cell.  Every checker takes a
+trained ``SVMState`` — binary (2-D ``sv_x``) or stacked multiclass (leading
+class axis) — and must hold regardless of which solver produced it; that IS
+the §14 solver contract, enforced.
+"""
+import jax.numpy as jnp
+import numpy as np
+
+
+def exact_gram(sv_x, count, gamma):
+    """Ground-truth Gram block: k(sv, sv) rebuilt from scratch (fp32)."""
+    from repro.kernels import ref
+
+    x = np.asarray(sv_x, np.float32)[:count]
+    return np.asarray(ref.rbf_matrix(jnp.asarray(x), jnp.asarray(x), gamma))
+
+
+def check_cache_invariants(state, gamma, tol=5e-5):
+    """Kernel-cache I1-I3 on a trained state: the carried cache equals a
+    from-scratch rebuild on the final SV set (I1, within carried-fp ``tol``),
+    is exactly symmetric (I2) and has an exactly-unit diagonal (I3).  Stacked
+    states are checked per class."""
+    if state.sv_x.ndim == 3:                     # stacked multiclass state
+        for q in range(state.sv_x.shape[0]):
+            check_cache_invariants(
+                state._replace(sv_x=state.sv_x[q], alpha=state.alpha[q],
+                               count=state.count[q], step=state.step[q],
+                               n_inserts=state.n_inserts[q],
+                               n_merges=state.n_merges[q],
+                               kmat=state.kmat[q]), gamma, tol)
+        return
+    c = int(state.count)
+    got = np.asarray(state.kmat)[:c, :c]
+    want = exact_gram(state.sv_x, c, gamma)
+    np.testing.assert_allclose(got, want, atol=tol)
+    # I2/I3: exact symmetry, unit diagonal
+    np.testing.assert_array_equal(got, got.T)
+    np.testing.assert_array_equal(np.diag(got), np.ones(c, np.float32))
+
+
+def assert_state_parity(st_a, st_b, *, atol_cache=5e-5, atol_float=2e-6,
+                        rtol=1e-5, bitwise=False, context=""):
+    """Two states agree field by field: ints BITWISE (every insert and
+    merge-partner/removal decision identical), floats inside fp32 round-off
+    (``bitwise=True`` demands exact float equality too).  bfloat16 leaves
+    compare as fp32."""
+    tag = f"{context}: " if context else ""
+    for name, a, b in zip(st_a._fields, st_a, st_b):
+        if a is None:
+            assert b is None, f"{tag}{name}"
+            continue
+        a = np.asarray(a, np.float32) if a.dtype == jnp.bfloat16 \
+            else np.asarray(a)
+        b = np.asarray(b, np.float32) if b.dtype == jnp.bfloat16 \
+            else np.asarray(b)
+        if bitwise or np.issubdtype(a.dtype, np.integer):
+            np.testing.assert_array_equal(
+                a, b, err_msg=f"{tag}{name} decision drift")
+        else:
+            atol = atol_cache if name == "kmat" else atol_float
+            np.testing.assert_allclose(
+                a, b, rtol=rtol, atol=atol,
+                err_msg=f"{tag}{name} beyond fp round-off")
+
+
+def check_integer_state(state, budget):
+    """Watermark/counter consistency on a trained state (binary or stacked):
+    ``0 <= count <= budget``, alpha exactly zero past the watermark (the
+    invariant ``init_state`` establishes and every step must preserve),
+    non-negative monotone event counters, and a NaN/Inf-free cache."""
+    count = np.atleast_1d(np.asarray(state.count))
+    alpha = np.asarray(state.alpha)
+    if alpha.ndim == 1:
+        alpha = alpha[None]
+    assert np.all(count >= 0) and np.all(count <= budget), count
+    mask = np.arange(alpha.shape[-1])[None, :] >= count[:, None]
+    np.testing.assert_array_equal(alpha[mask], 0.0,
+                                  err_msg="alpha past watermark not zero")
+    for name in ("step", "n_inserts", "n_merges"):
+        v = np.asarray(getattr(state, name))
+        assert v.dtype == np.int32 and np.all(v >= 0), name
+    assert np.all(np.asarray(state.step) >= 1), "step starts at 1"
+    if state.kmat is not None:
+        assert np.all(np.isfinite(np.asarray(state.kmat))), "cache not finite"
+
+
+def assert_serve_roundtrip(state, gamma, x, tol=1e-6):
+    """``export_model`` round-trips: the served labels/scores equal the
+    training-side decision functions on the same points, for binary and
+    stacked states alike (the serving path never asks which solver trained
+    the state)."""
+    from repro.core import export_model, predict_labels, serve_scores
+    from repro.core.bsgd import decision_function, predict
+    from repro.core.multiclass import (decision_function_multiclass,
+                                       predict_multiclass)
+
+    model = export_model(state, gamma)
+    got = np.asarray(predict_labels(model, x))
+    scores = np.asarray(serve_scores(model, x))
+    if state.sv_x.ndim == 2:
+        np.testing.assert_array_equal(got, np.asarray(predict(state, x, gamma)))
+        np.testing.assert_allclose(
+            scores[0], np.asarray(decision_function(state, x, gamma)),
+            atol=tol, rtol=tol)
+    else:
+        np.testing.assert_array_equal(
+            got, np.asarray(predict_multiclass(state, x, gamma)))
+        np.testing.assert_allclose(
+            scores, np.asarray(decision_function_multiclass(state, x, gamma)),
+            atol=tol, rtol=tol)

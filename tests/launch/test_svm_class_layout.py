@@ -175,3 +175,22 @@ assert err < 1e-4, err
 print("OK class parity", err)
 """)
     assert "OK class parity" in out
+
+
+def test_lower_svm_cell_class_layout_bdca_solver(run_py):
+    """The dual coordinate-ascent solver (``solver="bdca"``, DESIGN.md §14)
+    lowers and compiles with classes sharded over `model` — the cache is
+    forced on and the same mesh layouts apply unchanged."""
+    out = run_py(r"""
+from repro.core.distributed import lower_svm_cell
+from repro.launch.mesh import make_mesh
+
+mesh = make_mesh((2, 4), ("data", "model"))
+lowered, cfg = lower_svm_cell(mesh, budget=64, dim=32, batch=16,
+                              layout="class", n_classes=8, solver="bdca")
+assert cfg.binary.solver == "bdca"
+assert cfg.binary.use_kernel_cache
+compiled = lowered.compile()
+print("OK bdca cell", compiled.memory_analysis().argument_size_in_bytes)
+""")
+    assert "OK bdca cell" in out
