@@ -21,6 +21,7 @@ import numpy as np
 from repro.core import (BSGDConfig, METHODS, MulticlassSVMConfig, accuracy,
                         accuracy_multiclass, fit, fit_multiclass,
                         fit_multiclass_loop)
+from repro.core.bdca import box_from_lambda
 from repro.data.synthetic import make_blobs_multiclass, train_test_split
 
 from .common import DATASETS, csv_row, time_fn
@@ -108,15 +109,14 @@ def run_multiclass(n: int = 6000, n_classes: int = 16, dim: int = 20,
 
 def run_solvers(n: int = 3000, budget: int = 50, epochs: int = 2,
                 batch_size: int = 8, datasets=None, n_classes: int = 5,
-                bdca_C: float = 1.0, verbose=True):
+                verbose=True):
     """Head-to-head time-to-accuracy: the primal Pegasos solver (bsgd) vs the
     dual coordinate-ascent solver (bdca) on identical streams — same budget,
     same lookup-wd maintenance, same kernel cache, same batches.  bdca's box
-    is a fixed unit C by default: the textbook Pegasos mapping
-    C = 1 / (n * lambda) blows the box up to ~1e2 at the table's
-    lambda = 1e-5, which measurably hurts the dual under merging, while a
-    unit box tracks bsgd within noise on the separable stand-ins.  Binary
-    rows per dataset plus one OVR multiclass row per solver."""
+    comes from ``core.bdca.box_from_lambda`` at each dataset's own paper
+    lambda and train size — the clamped Pegasos correspondence, so the dual
+    runs at the table's hyperparameters instead of a hand-tuned constant.
+    Binary rows per dataset plus one OVR multiclass row per solver."""
     names = datasets or list(DATASETS)
     rows = []
     if verbose:
@@ -129,7 +129,7 @@ def run_solvers(n: int = 3000, budget: int = 50, epochs: int = 2,
             cfg = BSGDConfig(budget=budget, lambda_=lam, gamma=gamma,
                              method="lookup-wd", batch_size=batch_size,
                              use_kernel_cache=True, solver=solver,
-                             bdca_C=bdca_C)
+                             bdca_C=box_from_lambda(xtr.shape[0], lam))
             t, st = time_fn(
                 lambda c=cfg: fit(c, xtr, ytr, epochs=epochs, seed=0),
                 warmup=1, repeats=1)
@@ -146,7 +146,8 @@ def run_solvers(n: int = 3000, budget: int = 50, epochs: int = 2,
         cfg = MulticlassSVMConfig.create(
             n_classes, budget=budget, lambda_=1e-4, gamma=0.1,
             method="lookup-wd", batch_size=batch_size,
-            use_kernel_cache=True, solver=solver, bdca_C=bdca_C)
+            use_kernel_cache=True, solver=solver,
+            bdca_C=box_from_lambda(xtr.shape[0], 1e-4))
         t, st = time_fn(
             lambda c=cfg: fit_multiclass(c, xtr, ytr, epochs=epochs, seed=0),
             warmup=1, repeats=1)

@@ -26,6 +26,7 @@ SMOKE_BENCHES = (
     ("benchmarks.bench_stream", "BENCH_stream.json"),
     ("benchmarks.bench_serve", "BENCH_serve.json"),
     ("benchmarks.bench_pipeline", "BENCH_pipeline.json"),
+    ("benchmarks.bench_online", "BENCH_online.json"),
 )
 
 

@@ -12,8 +12,9 @@ from .bsgd import (BSGDConfig, SVMState, accuracy, decision_function, drain_budg
                    init_state, insert_from_rows, predict, train_chunk, train_epoch, train_epoch_stream,
                    train_step, train_step_from_rows)
 from . import bdca
-from .budget import (METHODS, STRATEGIES, MaintenanceInfo, maintenance_step, run_maintenance,
-                     run_maintenance_classes)
+from .budget import (METHODS, STRATEGIES, MaintenanceInfo, kmeans_codebook, maintenance_step,
+                     run_maintenance, run_maintenance_classes, seed_codebook)
+from .online import prequential_stream
 from .lookup import MergeLookupTable, bilinear_lookup, build_lookup_table, build_merge_tables, default_table
 from .multiclass import (MulticlassSVMConfig, accuracy_multiclass, check_labels, class_kernel_rows,
                          decision_function_multiclass, fit_multiclass, fit_multiclass_loop, fit_multiclass_stream,
@@ -32,9 +33,10 @@ __all__ = [
     "fit_multiclass_loop", "fit_multiclass_stream", "fit_stream",
     "golden_section_search", "gss_num_iters",
     "init_multiclass_state", "init_state", "insert_from_rows", "kernel_cache",
-    "load_serve_model", "maintenance_step", "merge_alpha_z", "merge_math",
-    "merge_point", "ovr_targets", "pad_bucket", "predict", "predict_labels",
-    "predict_multiclass", "predict_proba", "ragged_trace_sizes",
+    "kmeans_codebook", "load_serve_model", "maintenance_step", "merge_alpha_z",
+    "merge_math", "merge_point", "ovr_targets", "pad_bucket", "predict",
+    "predict_labels", "predict_multiclass", "predict_proba",
+    "prequential_stream", "ragged_trace_sizes", "seed_codebook",
     "run_maintenance", "run_maintenance_classes", "s_objective",
     "serve_requests", "serve_scores",
     "solve_merge", "top_k_labels", "train_chunk",

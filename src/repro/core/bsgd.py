@@ -72,7 +72,11 @@ class BSGDConfig:
         (DESIGN.md §4).
       maintenance: what one maintenance event does — ``merge`` (paper
         Alg. 1), ``multi-merge`` (P fused pairs/event), ``removal``
-        (drop smallest-|alpha|; no kernel evals).
+        (drop smallest-|alpha|; no kernel evals), ``removal-project``
+        (BOGD: drop + project mass onto survivors via cached rows) or
+        ``quantized`` (fixed-centroid codebook absorbs arriving violators
+        via cached rows, arXiv 1701.00167 — the online-learning strategy;
+        requires the cache, xla engines only).
       merge_batch: P, pairs per fused multi-merge event.
       unroll_maintenance: inline ``batch_size`` masked events instead of the
         while_loop — bitwise loop-parity under vmap (DESIGN.md §5);
@@ -124,7 +128,8 @@ class BSGDConfig:
                                        # traffic at scale; kappa error ~1e-3)
     use_kernel_cache: bool = False     # persistent SV-SV kernel matrix: kappa
                                        # rows are read, not recomputed
-    maintenance: str = "merge"         # merge | multi-merge | removal
+    maintenance: str = "merge"         # merge | multi-merge | removal |
+                                       # removal-project | quantized
     merge_batch: int = 4               # P pairs per fused multi-merge event
     unroll_maintenance: bool = False   # inline batch_size masked events instead
                                        # of a while_loop: bitwise loop-parity
@@ -161,10 +166,12 @@ class BSGDConfig:
                 "event off the kernel cache: it requires "
                 "use_kernel_cache=True, maintenance='merge' and "
                 "method='lookup-wd'")
-        if self.maintenance == "removal-project" and not self.use_kernel_cache:
+        if self.maintenance in ("removal-project", "quantized") \
+                and not self.use_kernel_cache:
             raise ValueError(
-                "maintenance='removal-project' projects dropped mass via "
-                "cached kernel rows: it requires use_kernel_cache=True")
+                f"maintenance={self.maintenance!r} reads projection/"
+                "absorption coefficients from cached kernel rows: it "
+                "requires use_kernel_cache=True")
         if self.step_engine not in ("composed", "pallas"):
             raise ValueError(f"step_engine={self.step_engine!r} not in "
                              "('composed', 'pallas')")

@@ -22,6 +22,14 @@ Two orthogonal axes (DESIGN.md §5):
                           each dropped SV's mass onto the survivors via its
                           cached kernel row — closed form, zero new kernel
                           evaluations, requires the cache
+      - ``quantized``   — fixed-centroid codebook (arXiv 1701.00167): the
+                          first ``budget`` slots are a centroid codebook
+                          (first-come, or k-means via ``seed_codebook``);
+                          each over-budget violator is snapped to its
+                          nearest centroid and its alpha mass accumulates
+                          there via the cached kernel row — the budget
+                          never drains through merge events, requires the
+                          cache
 
 Every strategy reads its kappa rows ``k(x_fixed, .)`` from the persistent
 SV-SV kernel cache (``core.kernel_cache``) when one is passed, and keeps it
@@ -47,7 +55,8 @@ from ..kernels import ops as kops
 from ..kernels import ref as kref
 
 METHODS = ("gss", "gss-precise", "lookup-h", "lookup-wd")
-STRATEGIES = ("merge", "multi-merge", "removal", "removal-project")
+STRATEGIES = ("merge", "multi-merge", "removal", "removal-project",
+              "quantized")
 _BIG = jnp.inf
 # Scores above this mean "no valid partner" (the Pallas scorer marks invalid
 # slots with a finite 3.4e38 so bf16 casts stay argmin-safe; real WDs are
@@ -401,6 +410,100 @@ def _removal_project_all(sv_x, alpha, kmat, count, budget: int):
 
 
 # --------------------------------------------------------------------------
+# Strategy: quantized — fixed-centroid codebook absorbs arriving violators
+# --------------------------------------------------------------------------
+def _quantized_all(sv_x, alpha, kmat, count, budget: int):
+    """Fixed-centroid absorption (arXiv 1701.00167, RKHS projection form).
+
+    The first ``budget`` slots ARE the model: a centroid codebook filled
+    first-come by the opening inserts (or k-means-seeded via
+    ``seed_codebook``) and never moved again.  When inserts push ``count``
+    past the budget, slots [budget, count) hold this batch's fresh
+    violators; each is snapped to its nearest centroid — for the RBF kernel
+    the nearest-by-distance centroid is exactly the argmax of the violator's
+    cached kernel row over the codebook — and its coefficient mass is
+    projected onto that centroid's basis function.  The least-squares
+    coefficient of ``alpha_i k(x_i, .)`` on ``k(c_j, .)`` in the RKHS is
+    ``alpha_i k(x_i, c_j) / k(c_j, c_j) = alpha_i k(x_i, c_j)`` (unit
+    diagonal), read straight from the cache — zero kernel evaluations.
+
+    Centroid rows of ``sv_x`` and the codebook block of ``kmat`` are never
+    written, so cache invariants I1-I3 hold trivially; the absorbed
+    violators' rows fall past the watermark (I4 territory).  One event
+    absorbs the whole batch and pins ``count`` back to ``budget``.
+    """
+    slots = alpha.shape[0]
+    idx = jnp.arange(slots)
+    fresh = (idx >= budget) & (idx < count)        # this batch's violators
+    cent = idx < budget                            # the fixed codebook
+    # nearest centroid per fresh row, off-codebook columns masked out
+    k_fc = jnp.where(fresh[:, None] & cent[None, :],
+                     kmat.astype(jnp.float32), -1.0)
+    nearest = jnp.argmax(k_fc, axis=1)             # (slots,), junk off-fresh
+    w = jnp.where(fresh, alpha.astype(jnp.float32) * k_fc[idx, nearest], 0.0)
+    gain = jnp.zeros((slots,), jnp.float32).at[
+        jnp.where(fresh, nearest, slots)].add(w, mode="drop")
+    alpha = jnp.where(cent, alpha + gain.astype(alpha.dtype), 0.0)
+    return sv_x, alpha, kmat, jnp.minimum(count, budget)
+
+
+def kmeans_codebook(key, x, k: int, *, iters: int = 10):
+    """Lloyd's k-means over ``x`` (n, dim): a (k, dim) float32 codebook for
+    warm-starting the quantized strategy (``seed_codebook``).
+
+    Plain jit-safe Lloyd iterations from a random-row init; a cluster that
+    goes empty keeps its previous centroid (no NaN means).  This is the
+    offline "or k-means-warm-started" variant of the codebook — the online
+    default is first-come (the opening ``budget`` inserts).
+    """
+    n = x.shape[0]
+    if not 1 <= k <= n:
+        raise ValueError(f"kmeans_codebook needs 1 <= k={k} <= n={n}")
+    x = jnp.asarray(x, jnp.float32)
+    init = x[jax.random.choice(key, n, (k,), replace=False)]
+
+    def lloyd(cent, _):
+        d2 = jnp.sum((x[:, None, :] - cent[None, :, :]) ** 2, axis=-1)
+        assign = jnp.argmin(d2, axis=1)
+        one_hot = (assign[:, None] == jnp.arange(k)[None, :]).astype(x.dtype)
+        sums = one_hot.T @ x                       # (k, dim)
+        counts = jnp.sum(one_hot, axis=0)          # (k,)
+        new = sums / jnp.maximum(counts, 1.0)[:, None]
+        return jnp.where((counts > 0)[:, None], new, cent), ()
+
+    cent, _ = jax.lax.scan(lloyd, init, None, length=iters)
+    return cent
+
+
+def seed_codebook(state, centroids, gamma):
+    """Seed a FRESH state's bank with a fixed centroid codebook.
+
+    Writes ``centroids`` (k, dim) into the first k slots, fills the cache's
+    codebook Gram block exactly, and sets the watermark to k with zero
+    coefficients — the quantized strategy then only ever accumulates mass
+    onto these slots.  Requires the kernel cache (the strategy reads
+    absorption coefficients from it); ``k`` must not exceed the budget slice
+    of the bank.  Works on any ``SVMState``-shaped NamedTuple.
+    """
+    if state.kmat is None:
+        raise ValueError("seed_codebook requires the kernel cache "
+                         "(use_kernel_cache=True): quantized absorption "
+                         "reads cached kernel rows")
+    c = jnp.asarray(centroids)
+    k = c.shape[0]
+    if k > state.alpha.shape[0]:
+        raise ValueError(f"codebook k={k} exceeds the bank's "
+                         f"{state.alpha.shape[0]} slots")
+    sv_x = state.sv_x.at[:k].set(c.astype(state.sv_x.dtype))
+    block = kops.rbf_matrix(sv_x[:k], sv_x[:k], gamma).astype(jnp.float32)
+    block = (block + block.T) / 2                  # exact symmetry (I2)
+    block = jnp.fill_diagonal(block, 1.0, inplace=False)
+    kmat = state.kmat.at[:k, :k].set(block)
+    return state._replace(sv_x=sv_x, kmat=kmat,
+                          count=jnp.asarray(k, state.count.dtype))
+
+
+# --------------------------------------------------------------------------
 # Engine entry point: loop a strategy until count <= budget
 # --------------------------------------------------------------------------
 @partial(jax.jit, static_argnames=("budget", "strategy", "method",
@@ -430,12 +533,15 @@ def run_maintenance(sv_x, alpha, kmat, count, n_events, gamma, table, *,
         raise ValueError(
             f"unknown strategy {strategy!r}; expected one of {STRATEGIES}")
 
-    if strategy in ("removal", "removal-project"):
-        if strategy == "removal-project" and kmat is None:
-            raise ValueError("strategy='removal-project' projects dropped "
-                             "mass via cached kernel rows and needs the "
-                             "kernel cache (use_kernel_cache=True)")
-        fn = _removal_all if strategy == "removal" else _removal_project_all
+    if strategy in ("removal", "removal-project", "quantized"):
+        if strategy != "removal" and kmat is None:
+            raise ValueError(
+                f"strategy={strategy!r} reads cached kernel rows "
+                "(projection / absorption coefficients) and needs the "
+                "kernel cache (use_kernel_cache=True)")
+        fn = {"removal": _removal_all,
+              "removal-project": _removal_project_all,
+              "quantized": _quantized_all}[strategy]
         over = count > budget
         sv_x, alpha, kmat, count = jax.lax.cond(
             over,

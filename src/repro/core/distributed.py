@@ -261,7 +261,8 @@ def lower_svm_cell(mesh, *, budget: int = 16384, dim: int = 1024,
                    layout: str = "replicated", n_classes: int = 8,
                    stream_steps: int = 0, step: str = "train",
                    maintenance_engine: str = "xla",
-                   step_engine: str = "composed", solver: str = "bsgd"):
+                   step_engine: str = "composed", solver: str = "bsgd",
+                   maintenance: str = "merge"):
     """AOT-lower the production-scale BSGD cell (the paper-technique cell).
 
     Production sizing: budget 16k SVs, 1k features, 8k-example global
@@ -291,12 +292,20 @@ def lower_svm_cell(mesh, *, budget: int = 16384, dim: int = 1024,
     (``core.bdca``) through the SAME layouts — it implies the kernel cache
     (the ascent reads cached Gram rows) and composes with
     ``maintenance_engine`` but not with ``step_engine="pallas"``.
+    ``maintenance`` selects the strategy the cell drains through (any
+    ``core.budget.STRATEGIES`` entry; ``removal-project``/``quantized``
+    imply the kernel cache — their coefficients are cache reads — and only
+    compose with the xla engines, which ``BSGDConfig`` validation enforces
+    with a clear error rather than silently lowering the wrong program).
     """
     cfg = BSGDConfig(budget=budget, lambda_=1e-6, gamma=2.0**-7, method=method,
                      batch_size=batch, dtype="float32", sv_dtype="bfloat16",
                      use_kernel_cache=(solver == "bdca"
                                        or maintenance_engine == "pallas"
-                                       or step_engine == "pallas"),
+                                       or step_engine == "pallas"
+                                       or maintenance in ("removal-project",
+                                                          "quantized")),
+                     maintenance=maintenance,
                      maintenance_engine=maintenance_engine,
                      step_engine=step_engine, solver=solver)
     if layout == "class":

@@ -409,9 +409,15 @@ class AsyncBatchQueue:
     microbatch *i* executes, the dispatcher assembles AND dispatches *i+1*,
     then resolves *i* — host assembly, the host↔device sync, and the label
     scatter all overlap device compute instead of serializing with it (the
-    ``BatchQueue`` gap this class exists to close).  Under load the pending
-    ring backs up and every launch is a full ``max_batch``; under trickle
-    each row goes straight out — no artificial batching delay.
+    ``BatchQueue`` gap this class exists to close).  Dispatch is
+    WAITER-GATED: a microbatch launches only when a full ``max_batch`` is
+    pending, or someone is blocked in ``take``/``drain``, or the queue is
+    closing.  Submit-ahead traces therefore coalesce into full launches
+    instead of trickling out as many small ones (the dispatcher never does
+    MORE launches than a sync ``BatchQueue`` would for the same trace),
+    while a live caller blocking on its ticket still gets its rows
+    dispatched immediately — no artificial batching delay where latency
+    matters.
 
     Each row's scores depend only on that row and the bank, so labels are
     BITWISE one direct ``predict_labels`` call on the same rows for any
@@ -456,6 +462,7 @@ class AsyncBatchQueue:
         self._done: dict[int, np.ndarray] = {}
         self._next_ticket = 0
         self._unresolved = 0
+        self._waiters = 0
         self._error: BaseException | None = None
         self._stop = False
         self.latencies_s: list[float] = []
@@ -489,28 +496,43 @@ class AsyncBatchQueue:
                 self._unresolved += 1
                 self._pending.append((ticket, x, 0))
                 self._pending_rows += x.shape[0]
-                self._cv.notify_all()
+                # only wake the dispatcher when the gate is actually open
+                # (full batch, or a waiter already blocked) — an
+                # unconditional notify would bounce it awake on every
+                # sub-batch submit just to re-check and sleep
+                if self._pending_rows >= self.max_batch or self._waiters:
+                    self._cv.notify_all()
             return ticket
 
     def take(self, ticket: int, timeout: float | None = None) -> np.ndarray:
         """Labels for a ticket; blocks until its last microbatch resolves."""
         with self._cv:
-            if not self._cv.wait_for(
-                    lambda: ticket in self._done or self._error is not None,
-                    timeout):
-                raise TimeoutError(f"ticket {ticket} unresolved after "
-                                   f"{timeout}s")
+            self._waiters += 1          # un-gate dispatch of partial batches
+            self._cv.notify_all()
+            try:
+                if not self._cv.wait_for(
+                        lambda: ticket in self._done
+                        or self._error is not None, timeout):
+                    raise TimeoutError(f"ticket {ticket} unresolved after "
+                                       f"{timeout}s")
+            finally:
+                self._waiters -= 1
             self._check_error()
             return self._done.pop(ticket)
 
     def drain(self, timeout: float | None = None) -> None:
         """Block until every submitted row is scored and resolved."""
         with self._cv:
-            if not self._cv.wait_for(
-                    lambda: self._unresolved == 0 or self._error is not None,
-                    timeout):
-                raise TimeoutError(f"{self._unresolved} requests unresolved "
-                                   f"after {timeout}s")
+            self._waiters += 1          # un-gate dispatch of partial batches
+            self._cv.notify_all()
+            try:
+                if not self._cv.wait_for(
+                        lambda: self._unresolved == 0
+                        or self._error is not None, timeout):
+                    raise TimeoutError(f"{self._unresolved} requests "
+                                       f"unresolved after {timeout}s")
+            finally:
+                self._waiters -= 1
             self._check_error()
 
     def close(self, timeout: float | None = 30.0) -> None:
@@ -593,7 +615,9 @@ class AsyncBatchQueue:
         for r in rows:
             xb[pos:pos + r.shape[0]] = r
             pos += r.shape[0]
-        version, model = self._current()
+        # a fixed model needs no bank read in the hot loop
+        version, model = ((None, self.model) if self._bank is None
+                          else self._bank.current())
         t0 = time.perf_counter()
         labels = self._score(model, xb, pad_to)
         return labels, slices, n_real, pad_to, version, t0
@@ -603,6 +627,11 @@ class AsyncBatchQueue:
         labels, slices, n_real, pad_to, version, t0 = inflight
         labels = np.asarray(labels)               # blocks until scored
         lat = time.perf_counter() - t0
+        parts_by_slice = []                       # slice outside the lock
+        pos = 0
+        for ticket, off, take in slices:
+            parts_by_slice.append(labels[pos:pos + take])
+            pos += take
         with self._cv:
             self.latencies_s.append(lat)
             st = self.stats
@@ -615,10 +644,7 @@ class AsyncBatchQueue:
                 st["bucket_real_rows"].get(pad_to, 0) + n_real
             if version is not None:
                 st["versions"][version] = st["versions"].get(version, 0) + 1
-            pos = 0
-            for ticket, off, take in slices:
-                part = labels[pos:pos + take]
-                pos += take
+            for (ticket, off, take), part in zip(slices, parts_by_slice):
                 need = self._need[ticket]
                 if off == 0 and take == need:     # single-part fast path
                     self._done[ticket] = part
@@ -642,13 +668,20 @@ class AsyncBatchQueue:
             while True:
                 batch = None
                 with self._cv:
-                    while (not self._pending_rows and not self._stop
+                    # dispatchable = a full batch pends, or someone is
+                    # blocked on the result (take/drain/close) — partial
+                    # batches otherwise keep coalescing
+                    def dispatchable():
+                        return self._pending_rows and (
+                            self._pending_rows >= self.max_batch
+                            or self._waiters or self._stop)
+                    while (not dispatchable() and not self._stop
                            and inflight is None):
                         self._cv.wait()
                     if (self._stop and not self._pending_rows
                             and inflight is None):
                         return
-                    if self._pending_rows:
+                    if dispatchable():
                         batch = self._pop_rows_locked()
                 # dispatch the NEXT microbatch before syncing the previous:
                 # the device is never idle while the host scatters labels

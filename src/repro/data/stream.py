@@ -212,6 +212,65 @@ class LibsvmChunks(ChunkSource):
                             binary=self.binary)
 
 
+class DriftChunks(ChunkSource):
+    """Non-stationary view over any ``ChunkSource`` (zero-copy until load).
+
+    Applies a drift schedule per chunk as the stream plays out — the online
+    suite's data layer (DESIGN.md §15).  Two independent schedule kinds, any
+    combination:
+
+      * ``flip``  — ``(n_chunks,)`` per-chunk label-flip probabilities
+        (``synthetic.label_flip_schedule``).  A flipped binary label
+        negates; with ``n_classes`` set, a flipped class id rotates to
+        ``(y + 1) % n_classes`` — both keep the label alphabet intact;
+      * ``shift`` — ``(n_chunks, dim)`` additive input shifts
+        (``synthetic.mean_shift_schedule``): covariate drift, labels
+        untouched.
+
+    Deterministic BY CONSTRUCTION: the rows flipped in chunk ``i`` are drawn
+    from ``default_rng((seed, i))``, a pure function of ``(seed, chunk id)``
+    — loading a chunk twice (or out of order, or under prefetch) yields
+    bitwise-identical blocks, which is what makes single-pass regret
+    reproducible (the determinism gate in tests/core/test_online.py).
+    Chunks are visited in natural order by the prequential driver; shuffling
+    a drifted stream would average the schedule away.
+    """
+
+    def __init__(self, source: ChunkSource, *, flip=None, shift=None,
+                 n_classes: int | None = None, seed: int = 0):
+        if flip is None and shift is None:
+            raise ValueError("DriftChunks without flip or shift is the "
+                             "identity — pass at least one schedule")
+        self.source = source
+        self.chunk_lens = source.chunk_lens
+        self.dim = source.dim
+        self.n_classes = n_classes
+        self.seed = int(seed)
+        self.flip = None if flip is None else np.asarray(flip, np.float32)
+        if self.flip is not None and self.flip.shape != (source.n_chunks,):
+            raise ValueError(f"flip shape {self.flip.shape} != "
+                             f"({source.n_chunks},) — one prob per chunk")
+        self.shift = None if shift is None else np.asarray(shift, np.float32)
+        if self.shift is not None and \
+                self.shift.shape != (source.n_chunks, source.dim):
+            raise ValueError(f"shift shape {self.shift.shape} != "
+                             f"({source.n_chunks}, {source.dim})")
+
+    def load(self, i: int):
+        x, y = self.source.load(i)
+        x, y = np.asarray(x), np.asarray(y)
+        if self.shift is not None and self.shift[i].any():
+            x = x + self.shift[i].astype(x.dtype)
+        if self.flip is not None and self.flip[i] > 0:
+            rng = np.random.default_rng((self.seed, int(i)))
+            m = rng.random(y.shape[0]) < self.flip[i]
+            if self.n_classes is not None:
+                y = np.where(m, (y + 1) % self.n_classes, y).astype(y.dtype)
+            else:
+                y = np.where(m, -y, y).astype(y.dtype)
+        return x, y
+
+
 class PrefetchChunks(ChunkSource):
     """Background-thread readahead over any ``ChunkSource``.
 
@@ -231,16 +290,24 @@ class PrefetchChunks(ChunkSource):
     ``iter_epoch(prefetch=depth)`` wraps and plans automatically; the
     streaming trainers go further and stage whole assembled minibatch blocks
     (``bsgd._stage_chunks``).
+
+    Teardown: ``cancel()`` drops the plan without waiting (the mid-epoch
+    re-plan path); ``close()`` additionally JOINS the worker, guaranteeing
+    no ``prefetch-*`` thread survives the call — ``iter_epoch`` closes its
+    wrapper on every exit path (exhaustion, a consumer raise, or the
+    generator being dropped and finalized), and ``__del__`` backstops a
+    wrapper that is GC'd while planned, so an abandoned epoch can never
+    strand the worker (the no-hung-threads gate in tests/data/test_stream.py).
     """
 
     def __init__(self, source: ChunkSource, depth: int = 2):
-        if depth < 1:
+        self._pool = None                    # first: __del__ may run on a
+        if depth < 1:                        # partially-initialized instance
             raise ValueError(f"depth={depth} < 1")
         self.source = source
         self.depth = depth
         self.chunk_lens = source.chunk_lens
         self.dim = source.dim
-        self._pool = None
         self._futs: dict[int, object] = {}   # chunk id -> Future
         self._plan: list[int] = []           # upcoming ids, front first
 
@@ -252,13 +319,24 @@ class PrefetchChunks(ChunkSource):
                                         thread_name_prefix="prefetch")
         self._fill()
 
-    def cancel(self) -> None:
-        """Drop the plan and stop the worker (idempotent)."""
+    def cancel(self, wait: bool = False) -> None:
+        """Drop the plan and stop the worker (idempotent); ``wait=True``
+        joins the worker thread before returning."""
         self._plan = []
         self._futs.clear()
         if self._pool is not None:
-            self._pool.shutdown(wait=False, cancel_futures=True)
+            self._pool.shutdown(wait=wait, cancel_futures=True)
             self._pool = None
+
+    def close(self) -> None:
+        """Tear down for good: cancel AND join the worker (idempotent)."""
+        self.cancel(wait=True)
+
+    def __del__(self):
+        try:
+            self.cancel()                    # no join inside the GC
+        except Exception:                    # noqa: BLE001 — interpreter
+            pass                             # shutdown half-torn state
 
     def _fill(self) -> None:
         while self._plan and len(self._futs) < self.depth:
@@ -359,4 +437,7 @@ def iter_epoch(source: ChunkSource, key=None, *, start_chunk: int = 0,
             yield pos, x, y
     finally:
         if planned is not None:
-            planned.cancel()             # abandoned epochs leave no worker
+            planned.close()              # abandoned epochs leave no worker:
+                                         # close() joins, and generator
+                                         # finalization (GC'd or consumer
+                                         # raise) runs this same branch

@@ -49,7 +49,7 @@ def run_svm_cell(*, multi_pod: bool, method: str = "lookup-wd",
                  stream_steps: int = 0, step: str = "train",
                  maintenance_engine: str = "xla",
                  step_engine: str = "composed",
-                 solver: str = "bsgd") -> dict:
+                 solver: str = "bsgd", maintenance: str = "merge") -> dict:
     """The paper-technique cell: distributed minibatch BSGD on the mesh.
 
     ``stream_steps > 0`` lowers the streaming-epoch chunk program (one
@@ -61,7 +61,9 @@ def run_svm_cell(*, multi_pod: bool, method: str = "lookup-wd",
     ``step_engine="pallas"`` lowers the fused train-step megakernel
     (margin + insert + event rounds in one launch chain per class block).
     ``solver="bdca"`` lowers the dual coordinate-ascent step (``core.bdca``)
-    through the same layouts (implies the kernel cache)."""
+    through the same layouts (implies the kernel cache).  ``maintenance``
+    selects the drain strategy (``removal-project``/``quantized`` imply the
+    cache; invalid engine combinations are rejected by config validation)."""
     from ..core.distributed import lower_svm_cell
 
     mesh = make_production_mesh(multi_pod=multi_pod)
@@ -71,7 +73,8 @@ def run_svm_cell(*, multi_pod: bool, method: str = "lookup-wd",
                                   n_classes=n_classes,
                                   stream_steps=stream_steps, step=step,
                                   maintenance_engine=maintenance_engine,
-                                  step_engine=step_engine, solver=solver)
+                                  step_engine=step_engine, solver=solver,
+                                  maintenance=maintenance)
     t_lower = time.time() - t0
     t0 = time.time()
     compiled = lowered.compile()
@@ -108,6 +111,8 @@ def run_svm_cell(*, multi_pod: bool, method: str = "lookup-wd",
             tag += f".stream{stream_steps}"
         if step == "predict":
             tag += ".predict"
+        if maintenance != "merge":
+            tag += f".{maintenance}"
         if maintenance_engine != "xla":
             tag += f".{maintenance_engine}"
         if step_engine != "composed":
@@ -204,6 +209,12 @@ def main() -> None:
                     choices=["bsgd", "bdca"],
                     help="bdca: lower the dual coordinate-ascent step "
                          "(core.bdca; implies the kernel cache)")
+    ap.add_argument("--svm-maintenance", default="merge",
+                    choices=["merge", "multi-merge", "removal",
+                             "removal-project", "quantized"],
+                    help="drain strategy for the svm_bsgd cell "
+                         "(removal-project/quantized imply the kernel "
+                         "cache; engine mismatches are config errors)")
     ap.add_argument("--seq-shard-attn", action="store_true",
                     help="context-parallel attention (hillclimb variant)")
     ap.add_argument("--keep-scan", action="store_true",
@@ -229,7 +240,8 @@ def main() -> None:
                      stream_steps=args.svm_stream_steps, step=args.svm_step,
                      maintenance_engine=args.svm_engine,
                      step_engine=args.svm_step_engine,
-                     solver=args.svm_solver)
+                     solver=args.svm_solver,
+                     maintenance=args.svm_maintenance)
         return
 
     failures = []

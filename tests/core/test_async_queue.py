@@ -72,6 +72,33 @@ def test_async_queue_bitwise_any_arrivals(seed, watchdog):
     assert not versions                       # fixed model: no bank versions
 
 
+@pytest.mark.parametrize("seed", [0, 1])
+def test_async_never_more_dispatches_than_sync(seed, watchdog):
+    """The ISSUE 9 regression gate: for the same submit-all-then-drain
+    trace, waiter-gated dispatch must coalesce at least as well as the sync
+    queue — MORE microbatches would mean the async path re-introduced the
+    per-row trickle that made BENCH_pipeline's async bar dip below 1x."""
+    watchdog(300)
+    from repro.core.predict import drive_trace, ragged_trace_sizes
+    rng = np.random.default_rng(seed)
+    sizes = ragged_trace_sizes(512, 64, rng)
+    sync = drive_trace(MODEL, X[:512], sizes, max_batch=64, queue="sync")
+    asyn = drive_trace(MODEL, X[:512], sizes, max_batch=64, queue="async")
+    assert asyn["microbatches"] <= sync["microbatches"], \
+        (asyn["microbatches"], sync["microbatches"])
+
+
+def test_take_ungates_partial_batch(watchdog):
+    """A live caller blocked in take() must not wait for a full max_batch:
+    the waiter un-gates dispatch of whatever is pending."""
+    watchdog(120)
+    with AsyncBatchQueue(MODEL, max_batch=64) as q:
+        q.warmup()
+        t1 = q.submit(X[:5])                  # far below max_batch
+        labels = q.take(t1, timeout=30.0)     # must dispatch, not hang
+    assert (labels == np.asarray(predict_labels(MODEL, X[:5]))).all()
+
+
 def test_async_queue_warmup_never_recompiles():
     """The warmed AOT-executable cache covers every bucket; real traffic
     adds no new compilations (the PR 4 static-arg cache-key footgun)."""

@@ -197,3 +197,22 @@ def test_bdca_train_chunk_double_donation_safe():
     st_d = train_chunk(cfg, cfg.table(), st_d, xc, yc)
     st_d = train_chunk(cfg, cfg.table(), st_d, xc, yc)
     assert int(st_d.count) > 0
+
+
+def test_box_from_lambda_clamped_mapping():
+    """The lambda -> C correspondence (ISSUE 9 bugfix): textbook 1/(n*lambda)
+    wherever it is moderate, clamped at the cap in the small-lambda regime
+    the paper's tables live in (1e-5 at n in the thousands would otherwise
+    blow the dual box up to ~1e2)."""
+    # textbook regime: mapping passes through untouched
+    assert bdca.box_from_lambda(100, 1e-2) == pytest.approx(1.0)
+    assert bdca.box_from_lambda(1000, 1e-3) == pytest.approx(1.0)
+    assert bdca.box_from_lambda(500, 1e-2, cap=4.0) == pytest.approx(0.2)
+    # paper-table regime: clamped to the cap, not ~1e2
+    assert bdca.box_from_lambda(3000, 1e-5) == 4.0
+    assert bdca.box_from_lambda(1000, 1e-5, cap=2.0) == 2.0
+    # validation
+    with pytest.raises(ValueError, match="n="):
+        bdca.box_from_lambda(0, 1e-3)
+    with pytest.raises(ValueError, match="lambda_"):
+        bdca.box_from_lambda(100, 0.0)

@@ -210,4 +210,4 @@ def test_config_validation():
     with pytest.raises(ValueError):
         BSGDConfig(budget=4, maintenance="multi-merge", merge_batch=8)
     assert set(STRATEGIES) == {"merge", "multi-merge", "removal",
-                               "removal-project"}
+                               "removal-project", "quantized"}

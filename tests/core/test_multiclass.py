@@ -53,10 +53,10 @@ def test_vmap_train_step_matches_per_class_loop(strategy, use_cache):
     and the float state within fp32 round-off — tight enough that any real
     divergence (a different merge partner, a dropped event) fails loudly.
     """
-    if strategy == "removal-project" and not use_cache:
-        # not a valid cell: the projection reads cached kernel rows — pin
-        # the config validation instead of skipping
-        with pytest.raises(ValueError, match="removal-project"):
+    if strategy in ("removal-project", "quantized") and not use_cache:
+        # not a valid cell: projection/absorption reads cached kernel rows —
+        # pin the config validation instead of skipping
+        with pytest.raises(ValueError, match=strategy):
             BSGDConfig(budget=12, maintenance=strategy,
                        use_kernel_cache=False)
         return

@@ -1,0 +1,103 @@
+"""Prequential streaming driver (ISSUE 9): test-then-train semantics,
+seeded single-pass determinism under drift, and the regret readout.
+
+The contract DESIGN.md §15 pins:
+
+  * chunks are visited in natural order by default — the drift schedule
+    plays out where it was placed;
+  * the whole pass is deterministic given (source, seed): two runs agree on
+    every mistake count and bitwise on the final model;
+  * each chunk is scored BEFORE it is trained on — a model that has seen a
+    chunk cannot use it for that chunk's mistakes.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import BSGDConfig, MulticlassSVMConfig, prequential_stream
+from repro.data import (ArrayChunks, DriftChunks, label_flip_schedule,
+                        make_blobs, make_blobs_multiclass)
+
+DIM = 6
+
+
+def _binary_source(n=640, chunk=64, seed=0):
+    x, y = make_blobs(jax.random.PRNGKey(seed), n, DIM, sep=2.0)
+    return ArrayChunks(np.asarray(x, np.float32),
+                       np.asarray(y, np.float32), chunk)
+
+
+def _cfg(maint="merge", batch=8):
+    return BSGDConfig(budget=16, lambda_=1e-3, gamma=0.5, method="lookup-wd",
+                      batch_size=batch, use_kernel_cache=True,
+                      maintenance=maint)
+
+
+def test_prequential_learns_and_counts_every_row():
+    src = _binary_source()
+    r = prequential_stream(_cfg(), src)
+    assert r["n_rows"] == src.n_rows
+    assert sum(r["chunk_mistakes"]) == r["mistakes"]
+    assert len(r["chunk_acc"]) == src.n_chunks
+    # cold model scores sign(0)=0 on chunk 0: all mistakes by convention
+    assert r["chunk_acc"][0] == 0.0
+    # ...but it learns: late chunks beat early post-cold chunks comfortably
+    assert np.mean(r["chunk_acc"][-3:]) > 0.8
+    assert r["mistake_rate"] == round(r["mistakes"] / src.n_rows, 4)
+
+
+@pytest.mark.parametrize("maint", ["merge", "quantized"])
+def test_seeded_single_pass_regret_deterministic(maint, watchdog):
+    """The ISSUE 9 gate: same drifted source + same seed => identical
+    mistake sequence and bitwise-identical final model, including through
+    the quantized fixed-codebook path."""
+    watchdog(300)
+    src = _binary_source()
+    flip = label_flip_schedule(src.n_chunks, start=0.5, prob=1.0)
+
+    def run():
+        drift = DriftChunks(src, flip=flip, seed=7)
+        return prequential_stream(_cfg(maint), drift)
+
+    a, b = run(), run()
+    assert a["chunk_mistakes"] == b["chunk_mistakes"]
+    assert a["mistakes"] == b["mistakes"]
+    np.testing.assert_array_equal(np.asarray(a["state"].alpha),
+                                  np.asarray(b["state"].alpha))
+    np.testing.assert_array_equal(np.asarray(a["state"].sv_x),
+                                  np.asarray(b["state"].sv_x))
+    # the drift actually bit: the flip chunk is much worse than its
+    # immediate pre-drift neighbour
+    mid = src.n_chunks // 2
+    assert a["chunk_acc"][mid] < a["chunk_acc"][mid - 1] - 0.3
+
+
+def test_drift_regret_orders_pre_vs_post():
+    """Cumulative mistakes on a clean stream < on the same stream with a
+    mid-pass label flip — the regret readout responds to drift."""
+    src = _binary_source()
+    clean = prequential_stream(_cfg(), src)
+    flip = label_flip_schedule(src.n_chunks, start=0.5, prob=1.0)
+    drifted = prequential_stream(_cfg(), DriftChunks(src, flip=flip, seed=0))
+    assert drifted["mistakes"] > clean["mistakes"]
+
+
+def test_prequential_multiclass_and_remainder_rows():
+    """OVR path works, and remainder rows (chunk not divisible by the batch)
+    are scored but not trained — n_rows still counts them."""
+    n, chunk = 330, 55                       # 55 = 6*8 + 7 remainder rows
+    x, y = make_blobs_multiclass(jax.random.PRNGKey(2), n, DIM, 3, sep=2.5)
+    src = ArrayChunks(np.asarray(x, np.float32), np.asarray(y), chunk)
+    cfg = MulticlassSVMConfig.create(3, budget=16, lambda_=1e-3, gamma=0.5,
+                                     batch_size=8, use_kernel_cache=True)
+    r = prequential_stream(cfg, src)
+    assert r["n_rows"] == n
+    assert np.mean(r["chunk_acc"][-2:]) > 0.7
+    # trained rows are the batch-aligned prefixes only (each trained row can
+    # insert into every one of the 3 OVR binary problems, never more)
+    assert int(r["state"].n_inserts.sum()) <= (chunk // 8) * 8 * src.n_chunks * 3
+
+
+def test_prequential_rejects_non_config():
+    with pytest.raises(TypeError, match="BSGDConfig"):
+        prequential_stream(object(), _binary_source())

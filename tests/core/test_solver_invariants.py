@@ -1,9 +1,9 @@
 """Cross-solver invariant harness: the §14 solver contract, enforced.
 
 One fixture yields a ``(solver, maintenance, engine, C)`` cell — every valid
-combination of {bsgd, bdca} x {merge, multi-merge, removal, removal-project}
-x {xla, pallas} x two box/regularization strengths — trains a real model
-through it, and every invariant test runs against every cell:
+combination of {bsgd, bdca} x {merge, multi-merge, removal, removal-project,
+quantized} x {xla, pallas} x two box/regularization strengths — trains a
+real model through it, and every invariant test runs against every cell:
 
   * kernel-cache I1-I4 hold after training (the carried cache equals a
     from-scratch rebuild on the final SV set, exactly symmetric, unit
@@ -44,7 +44,7 @@ BUDGET, BATCH, DIM, GAMMA = 10, 4, 4, 0.7
 # fused lookup-wd merge engine, so only merge composes with it
 MAINT_ENGINE = [("merge", "xla"), ("merge", "pallas"),
                 ("multi-merge", "xla"), ("removal", "xla"),
-                ("removal-project", "xla")]
+                ("removal-project", "xla"), ("quantized", "xla")]
 CELLS = [(solver, maint, engine, C)
          for solver in ("bsgd", "bdca")
          for maint, engine in MAINT_ENGINE
@@ -144,7 +144,7 @@ def test_maintenance_engines_agree_from_either_solver(cell):
 MC_CELLS = [(solver, maint, engine)
             for solver in ("bsgd", "bdca")
             for maint, engine in (("merge", "xla"), ("merge", "pallas"),
-                                  ("removal", "xla"))]
+                                  ("removal", "xla"), ("quantized", "xla"))]
 
 
 @pytest.fixture(scope="module", params=MC_CELLS,
@@ -173,6 +173,70 @@ def test_mc_integer_state_consistent(mc_cell):
 def test_mc_serve_export_roundtrip(mc_cell):
     cfg, state, x, _ = mc_cell
     inv.assert_serve_roundtrip(state, cfg.binary.gamma, jnp.asarray(x[:32]))
+
+
+# --------------------------------------------------------------------------
+# quantized-specific contract (ISSUE 9 tentpole)
+# --------------------------------------------------------------------------
+
+def test_quantized_codebook_slots_fixed_after_drain(cell):
+    """Quantized maintenance absorbs fresh violators into the codebook: the
+    first ``budget`` sv rows and cache block are bitwise UNTOUCHED by a
+    drain, only alphas move, and count lands exactly at budget."""
+    cfg, state, _, _ = cell
+    if cfg.maintenance != "quantized":
+        return
+    over = _over_budget(cfg, state)
+    drained = drain_budget(cfg, cfg.table(), over)
+    assert int(drained.count) == cfg.budget
+    np.testing.assert_array_equal(np.asarray(drained.sv_x[:cfg.budget]),
+                                  np.asarray(over.sv_x[:cfg.budget]))
+    np.testing.assert_array_equal(
+        np.asarray(drained.kmat[:cfg.budget, :cfg.budget]),
+        np.asarray(over.kmat[:cfg.budget, :cfg.budget]))
+    assert int(drained.n_merges) == int(over.n_merges) + 1
+
+
+def test_quantized_rejections_are_validated():
+    """Quantized x pallas engines and quantized without the cache are
+    structurally invalid configs — rejected at construction with an error
+    naming the constraint, never a silent skip or a runtime surprise."""
+    kw = dict(budget=BUDGET, gamma=GAMMA, batch_size=BATCH,
+              method="lookup-wd", maintenance="quantized")
+    with pytest.raises(ValueError, match="use_kernel_cache"):
+        BSGDConfig(use_kernel_cache=False, **kw)
+    with pytest.raises(ValueError, match="maintenance_engine"):
+        BSGDConfig(use_kernel_cache=True, maintenance_engine="pallas", **kw)
+    with pytest.raises(ValueError, match="step_engine"):
+        BSGDConfig(use_kernel_cache=True, step_engine="pallas", **kw)
+
+
+def test_quantized_kmeans_codebook_seed():
+    """kmeans_codebook + seed_codebook produce a warm-started state that
+    already satisfies the cache invariants, and training from it keeps the
+    seeded centroids frozen."""
+    from repro.core import init_state, kmeans_codebook, seed_codebook
+
+    n = 160
+    cfg = _cell_cfg("bsgd", "quantized", "xla", 1.0, n)
+    x, y = make_blobs(jax.random.PRNGKey(21), n, DIM, sep=1.2)
+    cents = kmeans_codebook(jax.random.PRNGKey(22), x, BUDGET)
+    assert cents.shape == (BUDGET, DIM)
+    st = seed_codebook(init_state(cfg, DIM), cents, cfg.gamma)
+    assert int(st.count) == BUDGET
+    check_cache_invariants(st, cfg.gamma)
+    # training from the warm start keeps the seeded centroids frozen
+    # (snapshot first: prequential_stream's donated step consumes st)
+    codebook = np.array(st.sv_x[:BUDGET])
+    from repro.core import prequential_stream
+    from repro.data import ArrayChunks
+
+    src = ArrayChunks(np.asarray(x, np.float32), np.asarray(y, np.float32),
+                      40)
+    r = prequential_stream(cfg, src, state=st)
+    np.testing.assert_array_equal(np.asarray(r["state"].sv_x[:BUDGET]),
+                                  codebook)
+    assert int(r["state"].n_merges) > 0
 
 
 def test_solvers_land_comparable_accuracy():

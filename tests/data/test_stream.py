@@ -6,9 +6,10 @@ import jax
 import numpy as np
 import pytest
 
-from repro.data import (ArrayChunks, FileChunks, LibsvmChunks, PrefetchChunks,
-                        dump_libsvm, epoch_permutation, iter_epoch,
-                        iter_libsvm_chunks, parse_libsvm, write_npz_chunks)
+from repro.data import (ArrayChunks, DriftChunks, FileChunks, LibsvmChunks,
+                        PrefetchChunks, dump_libsvm, epoch_permutation,
+                        iter_epoch, iter_libsvm_chunks, label_flip_schedule,
+                        mean_shift_schedule, parse_libsvm, write_npz_chunks)
 
 
 def _data(n=53, d=5, seed=0):
@@ -215,3 +216,135 @@ def test_iter_epoch_prefetch_bitwise_matches_sync():
     sync2 = list(iter_epoch(src, key))
     for (_, xa, _), (_, xb, _) in zip(sync2, pre2):
         np.testing.assert_array_equal(xa, xb)
+
+
+# ---------------------------------------------------------------------------
+# Prefetch teardown: no hung worker threads, ever (ISSUE 9 satellite)
+# ---------------------------------------------------------------------------
+
+def _prefetch_threads():
+    import threading
+
+    return [t.name for t in threading.enumerate()
+            if t.name.startswith("prefetch")]
+
+
+def test_prefetch_teardown_no_hung_threads(watchdog):
+    """close() joins the worker; a consumer that raises mid-epoch and a
+    dropped planned source both leave zero prefetch threads behind."""
+    watchdog(120)
+    import gc
+
+    x, y = _data(n=60)
+    assert _prefetch_threads() == []
+    # explicit close() joins
+    pre = PrefetchChunks(ArrayChunks(x, y, 12), depth=2)
+    pre.plan([0, 1, 2, 3, 4])
+    pre.load(0)
+    pre.close()
+    assert _prefetch_threads() == []
+    # consumer raises mid-epoch: iter_epoch's finally must close the plan
+    src = ArrayChunks(x, y, 12)
+    with pytest.raises(RuntimeError, match="consumer bailed"):
+        for pos, xb, yb in iter_epoch(src, jax.random.PRNGKey(0), prefetch=2):
+            raise RuntimeError("consumer bailed")
+    assert _prefetch_threads() == []
+    # dropped mid-plan without close(): __del__ must still tear down
+    pre2 = PrefetchChunks(ArrayChunks(x, y, 12), depth=2)
+    pre2.plan([0, 1, 2, 3, 4])
+    pre2.load(0)
+    del pre2
+    gc.collect()
+    assert _prefetch_threads() == []
+    # close() is idempotent and safe on a never-planned instance
+    pre3 = PrefetchChunks(ArrayChunks(x, y, 12), depth=2)
+    pre3.close()
+    pre3.close()
+
+
+def test_prefetch_del_safe_on_partial_init():
+    """__del__ on an instance whose __init__ raised must not explode."""
+    with pytest.raises(ValueError):
+        PrefetchChunks(ArrayChunks(*_data(n=20), 10), depth=0)
+
+
+# ---------------------------------------------------------------------------
+# DriftChunks: deterministic non-stationarity (ISSUE 9 tentpole data layer)
+# ---------------------------------------------------------------------------
+
+def test_drift_chunks_label_flip_deterministic_and_localized():
+    x, y = _data(n=60)
+    src = ArrayChunks(x, y, 12)
+    flip = label_flip_schedule(src.n_chunks, start=0.6, prob=1.0)
+    drift = DriftChunks(src, flip=flip, seed=3)
+    assert (drift.n_chunks, drift.n_rows, drift.dim) == \
+        (src.n_chunks, src.n_rows, src.dim)
+    for cid in range(src.n_chunks):
+        xc, yc = src.load(cid)
+        xd, yd = drift.load(cid)
+        np.testing.assert_array_equal(xd, xc)       # labels-only drift
+        if flip[cid] == 0.0:
+            np.testing.assert_array_equal(yd, yc)   # pre-drift: clean
+        else:
+            np.testing.assert_array_equal(yd, -yc)  # prob=1: full negation
+        assert yd.dtype == yc.dtype
+        # bitwise repeatable: pure function of (seed, chunk id)
+        xd2, yd2 = drift.load(cid)
+        np.testing.assert_array_equal(yd2, yd)
+        np.testing.assert_array_equal(xd2, xd)
+
+
+def test_drift_chunks_partial_flip_seed_dependence():
+    x, y = _data(n=120)
+    src = ArrayChunks(x, y, 30)
+    flip = label_flip_schedule(src.n_chunks, start=0.0, prob=0.5)
+    _, ya = DriftChunks(src, flip=flip, seed=0).load(0)
+    _, yb = DriftChunks(src, flip=flip, seed=1).load(0)
+    _, ya2 = DriftChunks(src, flip=flip, seed=0).load(0)
+    np.testing.assert_array_equal(ya, ya2)          # same seed: identical
+    assert (ya != yb).any()                         # seeds differ
+    frac = float(np.mean(ya != y[:30]))
+    assert 0.2 < frac < 0.8                         # ~half flipped
+
+
+def test_drift_chunks_multiclass_rotation():
+    x, _ = _data(n=40)
+    y = (np.arange(40) % 5).astype(np.int32)
+    src = ArrayChunks(x, y, 20)
+    flip = np.array([0.0, 1.0], np.float32)
+    drift = DriftChunks(src, flip=flip, n_classes=5, seed=0)
+    _, y0 = drift.load(0)
+    _, y1 = drift.load(1)
+    np.testing.assert_array_equal(y0, y[:20])
+    np.testing.assert_array_equal(y1, (y[20:] + 1) % 5)  # rotate, not negate
+    assert y1.dtype == y.dtype
+
+
+def test_drift_chunks_mean_shift_moves_inputs_only():
+    x, y = _data(n=60)
+    src = ArrayChunks(x, y, 12)
+    shift = mean_shift_schedule(src.n_chunks, src.dim, magnitude=2.0,
+                                start=0.5, kind="step")
+    drift = DriftChunks(src, shift=shift, seed=0)
+    for cid in range(src.n_chunks):
+        xc, yc = src.load(cid)
+        xd, yd = drift.load(cid)
+        np.testing.assert_array_equal(yd, yc)       # inputs-only drift
+        np.testing.assert_allclose(xd, xc + shift[cid], rtol=1e-6)
+
+
+def test_drift_chunks_validation():
+    x, y = _data(n=40)
+    src = ArrayChunks(x, y, 10)
+    with pytest.raises(ValueError, match="flip.*or.*shift|at least one"):
+        DriftChunks(src)
+    with pytest.raises(ValueError):
+        DriftChunks(src, flip=np.zeros(3, np.float32))       # wrong n_chunks
+    with pytest.raises(ValueError):
+        DriftChunks(src, shift=np.zeros((4, 2), np.float32))  # wrong dim
+    with pytest.raises(ValueError):
+        label_flip_schedule(4, prob=1.5)
+    with pytest.raises(ValueError):
+        mean_shift_schedule(4, 5, kind="exp")
+    with pytest.raises(ValueError):
+        mean_shift_schedule(4, 5, direction=np.ones(3))
