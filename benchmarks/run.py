@@ -27,6 +27,7 @@ SMOKE_BENCHES = (
     ("benchmarks.bench_serve", "BENCH_serve.json"),
     ("benchmarks.bench_pipeline", "BENCH_pipeline.json"),
     ("benchmarks.bench_online", "BENCH_online.json"),
+    ("benchmarks.bench_faults", "BENCH_faults.json"),
 )
 
 

@@ -13,6 +13,12 @@ What it shows (DESIGN.md §13):
      histogram spans the run;
   3. once the trainer exits, a final pass through the SAME live queue is
      bitwise one direct ``predict_labels`` call on the bank's last version.
+
+``--faults SEED`` turns the run into a chaos drill (DESIGN.md §16): the
+chunk source is wrapped in ``FaultyChunks`` with a seeded chaos schedule
+(transient IO errors, stalls, one NaN chunk, one fatal chunk) and training
+runs with retries, quarantine, and the non-finite publish guard — the same
+bitwise-parity and finite-snapshot assertions must still hold.
 """
 import argparse
 import threading
@@ -23,7 +29,9 @@ import numpy as np
 
 from repro.core import (AsyncBatchQueue, ModelBank, MulticlassSVMConfig,
                         fit_multiclass_stream, predict_labels)
-from repro.data import ArrayChunks, make_blobs_multiclass, train_test_split
+from repro.data import (ArrayChunks, FaultSchedule, FaultyChunks,
+                        ResilienceReport, RetryPolicy, make_blobs_multiclass,
+                        train_test_split)
 
 
 def main():
@@ -35,6 +43,9 @@ def main():
     ap.add_argument("--epochs", type=int, default=2)
     ap.add_argument("--publish-every", type=int, default=2)
     ap.add_argument("--max-batch", type=int, default=64)
+    ap.add_argument("--faults", type=int, default=None, metavar="SEED",
+                    help="inject FaultSchedule.chaos(SEED) and train with "
+                         "the full recovery stack")
     args = ap.parse_args()
 
     x, y = make_blobs_multiclass(jax.random.PRNGKey(0), args.n, 16,
@@ -45,8 +56,17 @@ def main():
     cfg = MulticlassSVMConfig.create(args.classes, budget=args.budget,
                                      lambda_=1e-3, gamma=0.5, batch_size=64)
     source = ArrayChunks(xtr, ytr, args.chunk_rows)
+    report = ResilienceReport()
+    retry = None
+    if args.faults is not None:
+        source = FaultyChunks(
+            source, FaultSchedule.chaos(args.faults, nan_chunk=2,
+                                        fatal_chunk=5))
+        retry = RetryPolicy()
     print(f"blobs: {source.n_rows} train rows in {source.n_chunks} chunks, "
-          f"C={args.classes}, publish every {args.publish_every} chunks")
+          f"C={args.classes}, publish every {args.publish_every} chunks"
+          + (f", chaos faults seed={args.faults}"
+             if args.faults is not None else ""))
 
     # -- 1. trainer publishes into the bank from a background thread -----
     bank = ModelBank()
@@ -56,7 +76,9 @@ def main():
         try:
             fit_multiclass_stream(cfg, source, epochs=args.epochs, seed=0,
                                   prefetch=2, bank=bank,
-                                  publish_every=args.publish_every)
+                                  publish_every=args.publish_every,
+                                  retry=retry, report=report,
+                                  guard_finite=args.faults is not None)
         except BaseException as e:            # surface on the main thread
             fail.append(e)
 
@@ -102,6 +124,13 @@ def main():
     acc = float(np.mean(direct == np.asarray(yte)))
     print(f"  final version v{final_v}: queue == direct predict (bitwise), "
           f"test acc={acc:.4f}")
+    if args.faults is not None:
+        for name in ("sv_x", "alpha"):
+            leaf = np.asarray(getattr(final_model, name), np.float32)
+            assert np.isfinite(leaf).all(), \
+                f"published ServeModel.{name} went non-finite under faults"
+        print(f"  chaos drill survived: {report!r}; "
+              "published snapshots stayed finite")
 
 
 if __name__ == "__main__":

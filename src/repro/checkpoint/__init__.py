@@ -1,3 +1,4 @@
 """Atomic keep-last-k checkpointing (see ``checkpointer`` for the layout)."""
-from .checkpointer import (all_steps, latest_step, load, load_metadata,
-                           restore_latest, save, save_async)
+from .checkpointer import (all_steps, latest_step, latest_verifiable_step,
+                           load, load_metadata, restore_latest, save,
+                           save_async, verify_step)

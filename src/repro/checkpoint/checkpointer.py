@@ -4,7 +4,14 @@ Layout: ``<dir>/step_<N>/`` holding ``arrays.npz`` (leaf-path -> numpy) and
 ``manifest.json``.  Writes go to ``step_<N>.tmp`` then ``os.replace`` — a
 crash mid-save never corrupts the latest checkpoint, and ``latest_step``
 only ever sees fully-renamed directories (the restart path after a node
-failure).
+failure).  Both files (and the directory entries) are fsynced before the
+rename, so the atomicity holds across power loss, not just process death.
+
+Integrity: the manifest stores a crc32 per leaf (computed over the raw
+row-major bytes).  ``load`` re-hashes every leaf it reads and refuses
+silently-corrupted arrays; ``verify_step`` / ``latest_verifiable_step`` let
+restart paths walk back past a torn or bit-flipped newest step to the most
+recent checkpoint that still verifies (DESIGN.md §16).
 
 Checkpoints are *mesh-free*: leaves are stored as full (unsharded) numpy
 arrays keyed by their tree path, so a job can restart on a different device
@@ -21,12 +28,29 @@ import re
 import shutil
 import threading
 import zipfile
+import zlib
 from typing import Any
 
 import jax
 import numpy as np
 
 _SEP = "/"
+
+
+def _leaf_crc(arr: np.ndarray) -> int:
+    """crc32 of the leaf's row-major bytes (dtype/shape live next to it in
+    the manifest, so bytes alone pin the value)."""
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF
+
+
+def _fsync_path(path: str) -> None:
+    """fsync a file or directory by path (directory fsync commits the
+    rename/creation of its entries on POSIX)."""
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
 
 
 def _flatten(tree) -> dict[str, Any]:
@@ -49,18 +73,29 @@ def save(ckpt_dir: str, step: int, tree, *, keep_last: int = 3,
         shutil.rmtree(tmp)
     os.makedirs(tmp)
     flat = {k: np.asarray(v) for k, v in _flatten(tree).items()}
-    np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+    arrays_path = os.path.join(tmp, "arrays.npz")
+    np.savez(arrays_path, **flat)
     manifest = {
         "step": step,
-        "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+        "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype),
+                       "crc32": _leaf_crc(v)}
                    for k, v in flat.items()},
         "metadata": metadata or {},
     }
-    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+    manifest_path = os.path.join(tmp, "manifest.json")
+    with open(manifest_path, "w") as f:
         json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    # fsync file contents and the tmp dir entries BEFORE the rename, then
+    # the parent dir AFTER — a power cut leaves either the old state or the
+    # complete new one, never a renamed-but-empty directory.
+    _fsync_path(arrays_path)
+    _fsync_path(tmp)
     if os.path.exists(final):
         shutil.rmtree(final)
     os.replace(tmp, final)
+    _fsync_path(ckpt_dir)
     _cleanup(ckpt_dir, keep_last)
     return final
 
@@ -149,6 +184,7 @@ def load(ckpt_dir: str, step: int, target_tree, *, shardings=None):
         raise ValueError(
             f"{ckpt_dir}: step {step} checkpoint is missing leaves "
             f"{missing[:5]} — truncated tree or a different state layout")
+    _check_crcs(ckpt_dir, step, stored)
     leaves, treedef = jax.tree_util.tree_flatten(target_tree)
     flat_shardings = (jax.tree_util.tree_flatten(shardings)[0]
                       if shardings is not None else [None] * len(leaves))
@@ -163,8 +199,102 @@ def load(ckpt_dir: str, step: int, target_tree, *, shardings=None):
     return jax.tree_util.tree_unflatten(treedef, new_leaves)
 
 
+def _check_crcs(ckpt_dir: str, step: int, stored: dict[str, np.ndarray]
+                ) -> None:
+    """Verify stored leaves against the manifest's per-leaf crc32.
+
+    Checkpoints written before checksums existed (no ``crc32`` key) pass
+    unchecked — backward compatible.  A missing or corrupt manifest, or any
+    crc mismatch, raises ``ValueError``.
+    """
+    path = os.path.join(ckpt_dir, f"step_{step:08d}", "manifest.json")
+    try:
+        with open(path) as f:
+            leaves = json.load(f).get("leaves", {})
+    except FileNotFoundError:
+        raise ValueError(
+            f"{ckpt_dir}: step {step} has no manifest ({path} missing) — "
+            "not a checkpoint written by repro.checkpoint") from None
+    except json.JSONDecodeError as e:
+        raise ValueError(
+            f"{ckpt_dir}: step {step} manifest is corrupt ({e})") from None
+    for key, arr in stored.items():
+        spec = leaves.get(key)
+        if spec is None or "crc32" not in spec:
+            continue   # pre-checksum checkpoint, or extra leaf — skip
+        got = _leaf_crc(arr)
+        if got != int(spec["crc32"]):
+            raise ValueError(
+                f"{ckpt_dir}: step {step} leaf {key!r} fails its checksum "
+                f"(crc32 {got:#010x} != manifest {int(spec['crc32']):#010x})"
+                " — silent corruption, refuse to restore")
+
+
+def verify_step(ckpt_dir: str, step: int) -> None:
+    """Full integrity check of one step: readable manifest, readable
+    arrays.npz, every manifest leaf present with the recorded shape/dtype,
+    and (when recorded) a matching crc32.  Raises ``ValueError`` naming the
+    first problem; returns None when the step verifies."""
+    step_dir = os.path.join(ckpt_dir, f"step_{step:08d}")
+    path = os.path.join(step_dir, "manifest.json")
+    try:
+        with open(path) as f:
+            leaves = json.load(f).get("leaves", {})
+    except FileNotFoundError:
+        raise ValueError(
+            f"{ckpt_dir}: step {step} has no manifest — torn write") from None
+    except json.JSONDecodeError as e:
+        raise ValueError(
+            f"{ckpt_dir}: step {step} manifest is corrupt ({e})") from None
+    arrays = os.path.join(step_dir, "arrays.npz")
+    try:
+        with np.load(arrays) as z:
+            stored = {k: z[k] for k in z.files}
+    except FileNotFoundError:
+        raise ValueError(
+            f"{ckpt_dir}: step {step} has no arrays.npz — torn write"
+        ) from None
+    except (ValueError, OSError, EOFError, zipfile.BadZipFile) as e:
+        raise ValueError(
+            f"{ckpt_dir}: step {step} arrays.npz is unreadable ({e})"
+        ) from None
+    for key, spec in leaves.items():
+        if key not in stored:
+            raise ValueError(
+                f"{ckpt_dir}: step {step} is missing leaf {key!r} — "
+                "truncated tree")
+        arr = stored[key]
+        if list(arr.shape) != list(spec["shape"]):
+            raise ValueError(
+                f"{ckpt_dir}: step {step} leaf {key!r} shape "
+                f"{list(arr.shape)} != manifest {spec['shape']}")
+        if str(arr.dtype) != spec["dtype"]:
+            raise ValueError(
+                f"{ckpt_dir}: step {step} leaf {key!r} dtype {arr.dtype} "
+                f"!= manifest {spec['dtype']}")
+    _check_crcs(ckpt_dir, step, stored)
+
+
+def latest_verifiable_step(ckpt_dir: str) -> int | None:
+    """Newest step that passes ``verify_step``, walking back past torn or
+    corrupt steps (a crash mid-save, or bit rot on the newest checkpoint,
+    must not strand the restart path).  None when no step verifies."""
+    for step in reversed(all_steps(ckpt_dir)):
+        try:
+            verify_step(ckpt_dir, step)
+        except ValueError:
+            continue
+        return step
+    return None
+
+
 def restore_latest(ckpt_dir: str, target_tree, *, shardings=None):
-    step = latest_step(ckpt_dir)
-    if step is None:
+    steps = all_steps(ckpt_dir)
+    if not steps:
         return None, None
+    step = latest_verifiable_step(ckpt_dir)
+    if step is None:
+        raise ValueError(
+            f"{ckpt_dir}: checkpoint steps {steps} exist but none verify — "
+            "refusing to restore from corrupt state")
     return step, load(ckpt_dir, step, target_tree, shardings=shardings)

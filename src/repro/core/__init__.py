@@ -5,9 +5,10 @@ from . import budget, kernel_cache, merge_math
 # then restores ``repro.core.predict`` to the binary predict *function*
 # (the public API since PR 0) — import serving symbols from ``repro.core``
 # directly, never via ``repro.core.predict.<name>``
-from .predict import (AsyncBatchQueue, BatchQueue, ModelBank, ServeModel, default_buckets, drive_trace,
-                      export_model, load_serve_model, pad_bucket, predict_labels, predict_proba,
-                      ragged_trace_sizes, serve_requests, serve_scores, top_k_labels)
+from .predict import (AsyncBatchQueue, BatchQueue, ModelBank, QueueFull, ServeDeadline, ServeModel,
+                      ServeTimeout, default_buckets, drive_trace, export_model, load_serve_model,
+                      pad_bucket, predict_labels, predict_proba, ragged_trace_sizes, serve_requests,
+                      serve_scores, top_k_labels)
 from .bsgd import (BSGDConfig, SVMState, accuracy, decision_function, drain_budget, fit, fit_stream,
                    init_state, insert_from_rows, predict, train_chunk, train_epoch, train_epoch_stream,
                    train_step, train_step_from_rows)
@@ -25,7 +26,8 @@ from .merge_math import (EPS_PRECISE, EPS_STANDARD, KAPPA_UNIMODAL, golden_secti
 
 __all__ = [
     "AsyncBatchQueue", "BSGDConfig", "BatchQueue", "SVMState", "MaintenanceInfo", "MergeLookupTable", "METHODS",
-    "ModelBank", "MulticlassSVMConfig", "STRATEGIES", "ServeModel", "accuracy", "accuracy_multiclass",
+    "ModelBank", "MulticlassSVMConfig", "QueueFull", "STRATEGIES",
+    "ServeDeadline", "ServeModel", "ServeTimeout", "accuracy", "accuracy_multiclass",
     "bdca", "bilinear_lookup", "budget", "build_lookup_table",
     "build_merge_tables", "check_labels", "class_kernel_rows", "decision_function",
     "decision_function_multiclass", "default_buckets", "default_table",

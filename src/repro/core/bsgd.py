@@ -448,7 +448,8 @@ def train_chunk(cfg: BSGDConfig, table, state: SVMState, xc, yc, *,
 
 
 def _assemble_chunks(source, key, *, batch_size: int, start_chunk: int,
-                     end: int, carry, stage=None):
+                     end: int, carry, stage=None, retry=None, report=None,
+                     skip_chunks=()):
     """Host-side assembly of one epoch: yield ``(pos, xc, yc, carry)``.
 
     The single definition of the chunk -> minibatch-block transform shared by
@@ -459,13 +460,19 @@ def _assemble_chunks(source, key, *, batch_size: int, start_chunk: int,
     None for a chunk that yields no full batch), and copy the new remainder
     out of the chunk buffer (O(chunk) residency promise).  ``stage`` maps the
     assembled blocks (the ``jax.device_put`` hook of the prefetched path).
+    ``retry``/``report``/``skip_chunks`` pass straight to ``iter_epoch`` —
+    a quarantined (or skipped) chunk contributes no rows, so the carry flows
+    across it and the surviving batch sequence is bitwise the one of a run
+    where the chunk never existed (DESIGN.md §16).
     """
     from ..data import stream as stream_mod
 
     cx, cy = carry if carry is not None else (None, None)
     for pos, x, y in stream_mod.iter_epoch(source, key,
                                            start_chunk=start_chunk,
-                                           end_chunk=end):
+                                           end_chunk=end, retry=retry,
+                                           report=report,
+                                           skip_chunks=skip_chunks):
         x, y = np.asarray(x), np.asarray(y)
         if cx is not None and cx.size:
             x = np.concatenate([cx.astype(x.dtype, copy=False), x])
@@ -535,10 +542,54 @@ def _stage_chunks(gen, depth: int):
         t.join(timeout=5.0)
 
 
+@jax.jit
+def _tree_all_finite(tree):
+    """One fused all-finite reduction over the inexact leaves of a pytree —
+    the O(1)-sync non-finite sentinel of the streaming guard (int counters
+    are always finite and are skipped)."""
+    leaves = [leaf for leaf in jax.tree.leaves(tree)
+              if jnp.issubdtype(leaf.dtype, jnp.inexact)]
+    if not leaves:
+        return jnp.bool_(True)
+    return jnp.all(jnp.stack([jnp.all(jnp.isfinite(leaf)) for leaf in leaves]))
+
+
+@dataclasses.dataclass
+class _StreamGuard:
+    """Per-chunk training guards for the streaming drivers (DESIGN.md §16).
+
+    ``finite=True`` snapshots the state before each chunk program and, after
+    it, runs ONE fused ``isfinite`` all-reduce over the float leaves (a
+    single scalar sync).  On trip the chunk is rolled back and skipped —
+    a poisoned state is never kept, never checkpointed, never published.
+    ``check`` (optional, debug mode) runs a host-side validator — the cache
+    invariant checker — on every accepted state.
+    """
+
+    finite: bool = True
+    report: object = None       # faults.ResilienceReport (rollback tally)
+    check: object = None        # callable(state) -> None, raises on violation
+
+
+def _make_guard(guard_finite: bool, debug_invariants: bool, binary_cfg,
+                report):
+    """Resolve the ``guard_finite``/``debug_invariants`` fit-driver knobs to
+    a ``_StreamGuard`` (or None — the exact pre-resilience chunk loop)."""
+    if not (guard_finite or debug_invariants):
+        return None
+    check = None
+    if debug_invariants and binary_cfg.use_kernel_cache:
+        def check(state):
+            kernel_cache.check_invariants(state.kmat, state.sv_x, state.count,
+                                          binary_cfg.gamma)
+    return _StreamGuard(finite=guard_finite, report=report, check=check)
+
+
 def _stream_epoch(chunk_fn, state, source, *, batch_size: int, key,
                   start_chunk: int = 0, carry=None, on_chunk=None,
                   max_chunks: int | None = None, prefetch: int = 0,
-                  stage=None):
+                  stage=None, retry=None, report=None, skip_chunks=(),
+                  guard=None):
     """Generic one-epoch streaming driver shared by binary and multi-class.
 
     ``chunk_fn(state, xc, yc) -> state`` runs one jitted chunk program.
@@ -561,6 +612,15 @@ def _stream_epoch(chunk_fn, state, source, *, batch_size: int, key,
     overrides the staging transform (``None`` with a custom distributed
     ``chunk_fn`` keeps host arrays — pjit places them per its in_shardings).
 
+    Resilience (all default-off — the zero-fault path is the exact pre-PR
+    loop): ``retry``/``report``/``skip_chunks`` flow into the ingest layer
+    (``iter_epoch`` — transient-failure retries, quarantine-as-skip);
+    ``guard`` (a ``_StreamGuard``) snapshots the state per chunk and rolls
+    back any chunk whose resulting state has a non-finite float leaf, so a
+    NaN/Inf row (or a diverged update) can never persist into checkpoints or
+    published ``ServeModel`` snapshots — the rollback fires BEFORE
+    ``on_chunk``.
+
     Returns ``(state, next_chunk, carry, chunks_run)``; ``next_chunk <
     source.n_chunks`` means the epoch was cut short by ``max_chunks``.
     """
@@ -570,13 +630,28 @@ def _stream_epoch(chunk_fn, state, source, *, batch_size: int, key,
            else min(source.n_chunks, start_chunk + max_chunks))
     gen = _assemble_chunks(source, key, batch_size=batch_size,
                            start_chunk=start_chunk, end=end, carry=carry,
-                           stage=stage if prefetch else None)
+                           stage=stage if prefetch else None, retry=retry,
+                           report=report, skip_chunks=skip_chunks)
     items = _stage_chunks(gen, prefetch) if prefetch else gen
     out_carry = carry
     try:
         for pos, xc, yc, out_carry in items:
             if xc is not None:
-                state = chunk_fn(state, xc, yc)
+                if guard is not None and guard.finite:
+                    # the chunk program donates its input state, so the
+                    # last-good snapshot must be copied out BEFORE the launch
+                    snap = jax.tree.map(jnp.copy, state)
+                    new_state = chunk_fn(state, xc, yc)
+                    if bool(_tree_all_finite(new_state)):
+                        state = new_state
+                    else:
+                        state = snap       # roll back + skip the poisoned
+                        if guard.report is not None:      # chunk wholesale
+                            guard.report.note_rollback(pos)
+                else:
+                    state = chunk_fn(state, xc, yc)
+                if guard is not None and guard.check is not None:
+                    guard.check(state)
             if on_chunk is not None:
                 on_chunk(state, pos, out_carry)
     finally:
@@ -619,10 +694,15 @@ def _device_stage(xc, yc):
 def _fit_stream(batch_size: int, source, chunk_fn, state, *,
                 epochs: int, seed: int, ckpt_dir, ckpt_every: int,
                 max_chunks, keep_last: int, prefetch: int = 0, stage=None,
-                publish=None, publish_every: int = 0):
+                publish=None, publish_every: int = 0, retry=None,
+                report=None, skip_chunks=(), guard=None):
     """Shared multi-epoch streaming driver (see ``fit_stream`` for the
     contract).  ``publish(state)`` fires every ``publish_every`` chunks (and
-    once at the very end) — the ``ModelBank`` snapshot hook."""
+    once at the very end) — the ``ModelBank`` snapshot hook.  Resume walks
+    back past torn/corrupt checkpoint steps to the newest verifiable one
+    (``checkpoint.latest_verifiable_step``); ``retry``/``report``/
+    ``skip_chunks``/``guard`` are the §16 resilience hooks threaded into
+    every epoch."""
     from .. import checkpoint as ckpt
 
     dim = source.dim
@@ -631,6 +711,17 @@ def _fit_stream(batch_size: int, source, chunk_fn, state, *,
     carry, resume_key = None, None
     if ckpt_dir:
         latest = ckpt.latest_step(ckpt_dir)
+        if latest is not None:
+            # a torn/bit-flipped newest step (crash mid-save outside the
+            # atomic-rename path, disk corruption) must not kill the restart:
+            # fall back to the newest step whose checksums verify
+            verified = ckpt.latest_verifiable_step(ckpt_dir)
+            if verified is None:
+                raise ValueError(
+                    f"{ckpt_dir}: checkpoint steps {ckpt.all_steps(ckpt_dir)}"
+                    " exist but none verify (manifest/arrays corrupt) — "
+                    "refusing to silently restart from scratch")
+            latest = verified
         if latest is not None:
             meta = ckpt.load_metadata(ckpt_dir, latest)
             if meta.get("kind") != "stream-epoch":
@@ -688,7 +779,8 @@ def _fit_stream(batch_size: int, source, chunk_fn, state, *,
         state, next_chunk, carry, ran = _stream_epoch(
             chunk_fn, state, source, batch_size=batch_size, key=epoch_key,
             start_chunk=start_chunk, carry=carry, on_chunk=save,
-            max_chunks=budget_left, prefetch=prefetch, stage=stage)
+            max_chunks=budget_left, prefetch=prefetch, stage=stage,
+            retry=retry, report=report, skip_chunks=skip_chunks, guard=guard)
         if budget_left is not None:
             budget_left -= ran
         if next_chunk < n_chunks:             # cut short by max_chunks
@@ -723,7 +815,8 @@ def _make_publish(bank, gamma, bank_dtype):
 def train_epoch_stream(cfg: BSGDConfig, table, state: SVMState, source, *,
                        key=None, impl: str = "auto", start_chunk: int = 0,
                        carry=None, on_chunk=None, max_chunks: int | None = None,
-                       chunk_fn=None, prefetch: int = 0):
+                       chunk_fn=None, prefetch: int = 0, retry=None,
+                       report=None, skip_chunks=()):
     """One streamed pass over a ``repro.data.stream`` chunk source.
 
     The chunked counterpart of ``train_epoch``: chunks are loaded on the
@@ -757,7 +850,8 @@ def train_epoch_stream(cfg: BSGDConfig, table, state: SVMState, source, *,
     state, next_chunk, carry, _ = _stream_epoch(
         chunk_fn, state, source, batch_size=cfg.batch_size, key=key,
         start_chunk=start_chunk, carry=carry, on_chunk=on_chunk,
-        max_chunks=max_chunks, prefetch=prefetch, stage=stage)
+        max_chunks=max_chunks, prefetch=prefetch, stage=stage, retry=retry,
+        report=report, skip_chunks=skip_chunks)
     if next_chunk == source.n_chunks:
         jax.block_until_ready(state.alpha)
     return state, next_chunk, carry
@@ -768,7 +862,9 @@ def fit_stream(cfg: BSGDConfig, source, *, epochs: int = 1, seed: int = 0,
                ckpt_dir: str | None = None, ckpt_every: int = 0,
                max_chunks: int | None = None, keep_last: int = 3,
                chunk_fn=None, prefetch: int = 0, bank=None,
-               publish_every: int = 0, publish_dtype=None) -> SVMState:
+               publish_every: int = 0, publish_dtype=None, retry=None,
+               guard_finite: bool = False, debug_invariants: bool = False,
+               report=None, skip_chunks=()) -> SVMState:
     """Out-of-core ``fit``: shuffled streamed epochs over a chunk source.
 
     Args:
@@ -796,6 +892,21 @@ def fit_stream(cfg: BSGDConfig, source, *, epochs: int = 1, seed: int = 0,
         every ``publish_every`` chunks and once at the end — the
         train-while-serve hot-swap feed.  ``publish_dtype`` quantizes the
         published bank (e.g. ``"bfloat16"``).
+      retry / report / skip_chunks: the §16 ingest-resilience hooks — a
+        ``data.faults.RetryPolicy`` retries transient chunk-load failures
+        with bounded backoff and quarantines (skips + records in ``report``,
+        a ``data.faults.ResilienceReport``) chunks that exhaust it;
+        ``skip_chunks`` excludes chunk ids up front as if they never existed.
+      guard_finite: snapshot the state before each chunk program and run one
+        fused ``isfinite`` all-reduce over its float leaves after — a chunk
+        producing any non-finite value is rolled back and skipped (recorded
+        in ``report``), so NaN/Inf rows can never poison checkpoints or
+        published snapshots.  Costs one state copy + one scalar sync per
+        chunk; off (default) the chunk loop is exactly the pre-resilience
+        program.
+      debug_invariants: additionally verify the kernel-cache invariants
+        I1-I3 on every accepted state (host-side, O(count^2 * dim) — debug
+        only; no-op without ``use_kernel_cache``).
 
     Returns the final ``SVMState``.  The chunk programs run with donated
     state; a caller-provided ``state`` is copied once up front so the
@@ -815,7 +926,10 @@ def fit_stream(cfg: BSGDConfig, source, *, epochs: int = 1, seed: int = 0,
                        ckpt_every=ckpt_every, max_chunks=max_chunks,
                        keep_last=keep_last, prefetch=prefetch, stage=stage,
                        publish=_make_publish(bank, cfg.gamma, publish_dtype),
-                       publish_every=publish_every)
+                       publish_every=publish_every, retry=retry,
+                       report=report, skip_chunks=skip_chunks,
+                       guard=_make_guard(guard_finite, debug_invariants,
+                                         cfg, report))
 
 
 def accuracy(state: SVMState, x, y, gamma, **kw) -> jax.Array:

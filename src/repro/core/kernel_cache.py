@@ -185,3 +185,58 @@ def apply_multi_merge(kmat, a_idx, b_idx, h, write_idx):
 def permute(kmat, perm):
     """Apply a slot permutation to both axes (multi-merge compaction)."""
     return kmat[perm][:, perm]
+
+
+class CacheInvariantError(AssertionError):
+    """A runtime I1-I3 violation detected by ``check_invariants``."""
+
+
+def check_invariants(kmat, sv_x, count, gamma, *, tol: float = 5e-5,
+                     context: str = "") -> None:
+    """Debug-mode runtime check of cache invariants I1-I3 (DESIGN.md §4).
+
+    Host-side and O(count^2 * dim) — strictly a debug tool, wired into the
+    streaming drivers behind ``debug_invariants=True`` (DESIGN.md §16).
+    Verifies, masked by the active watermark:
+
+      I1. ``kmat[:c, :c]`` equals a from-scratch Gram rebuild within ``tol``;
+      I2. the active block is exactly symmetric;
+      I3. the active diagonal is exactly 1.
+
+    Stacked multiclass arrays (3-D ``sv_x``) are checked per class.  Raises
+    ``CacheInvariantError`` naming the violated invariant and the worst
+    entry; I4 (stale entries past the watermark) is by definition
+    uncheckable — consumers mask by ``count``.
+    """
+    import numpy as np
+
+    sv = np.asarray(sv_x)
+    if sv.ndim == 3:
+        for q in range(sv.shape[0]):
+            check_invariants(np.asarray(kmat)[q], sv[q],
+                             np.asarray(count)[q], gamma, tol=tol,
+                             context=f"{context}[class {q}]")
+        return
+    c = int(count)
+    if c == 0:
+        return
+    got = np.asarray(kmat, np.float32)[:c, :c]
+    want = np.asarray(exact_cache(jnp.asarray(sv[:c], jnp.float32), gamma))
+    where = f"{context}: " if context else ""
+    if not np.array_equal(got, got.T):
+        i, j = np.unravel_index(np.argmax(np.abs(got - got.T)), got.shape)
+        raise CacheInvariantError(
+            f"{where}I2 violated: kmat[{i},{j}]={got[i, j]!r} != "
+            f"kmat[{j},{i}]={got[j, i]!r}")
+    diag = np.diag(got)
+    if not np.array_equal(diag, np.ones(c, got.dtype)):
+        i = int(np.argmax(np.abs(diag - 1.0)))
+        raise CacheInvariantError(
+            f"{where}I3 violated: kmat[{i},{i}]={diag[i]!r} != 1")
+    err = np.abs(got - want)
+    if not np.all(err <= tol):
+        i, j = np.unravel_index(np.argmax(err), err.shape)
+        raise CacheInvariantError(
+            f"{where}I1 violated: |kmat[{i},{j}] - k(sv_{i}, sv_{j})| = "
+            f"{err[i, j]:.3e} > tol {tol:g} (cached {got[i, j]!r}, "
+            f"exact {want[i, j]!r})")

@@ -37,8 +37,8 @@ import jax.numpy as jnp
 
 from . import budget as budget_mod
 from .bsgd import (BSGDConfig, SVMState, _device_stage, _fit_stream,
-                   _make_publish, _stream_epoch, init_state, insert_from_rows,
-                   train_step_from_rows)
+                   _make_guard, _make_publish, _stream_epoch, init_state,
+                   insert_from_rows, train_step_from_rows)
 from ..kernels import ops as kops
 
 
@@ -277,7 +277,8 @@ def train_epoch_multiclass_stream(cfg: MulticlassSVMConfig, table,
                                   impl: str = "auto", start_chunk: int = 0,
                                   carry=None, on_chunk=None,
                                   max_chunks: int | None = None,
-                                  chunk_fn=None, prefetch: int = 0):
+                                  chunk_fn=None, prefetch: int = 0,
+                                  retry=None, report=None, skip_chunks=()):
     """One streamed pass of the one-vs-rest engine over a chunk source.
 
     The multi-class counterpart of ``bsgd.train_epoch_stream`` — identical
@@ -293,7 +294,8 @@ def train_epoch_multiclass_stream(cfg: MulticlassSVMConfig, table,
     state, next_chunk, carry, _ = _stream_epoch(
         chunk_fn, state, source, batch_size=cfg.binary.batch_size, key=key,
         start_chunk=start_chunk, carry=carry, on_chunk=on_chunk,
-        max_chunks=max_chunks, prefetch=prefetch, stage=stage)
+        max_chunks=max_chunks, prefetch=prefetch, stage=stage, retry=retry,
+        report=report, skip_chunks=skip_chunks)
     if next_chunk == source.n_chunks:
         jax.block_until_ready(state.alpha)
     return state, next_chunk, carry
@@ -306,12 +308,17 @@ def fit_multiclass_stream(cfg: MulticlassSVMConfig, source, *,
                           max_chunks: int | None = None, keep_last: int = 3,
                           chunk_fn=None, prefetch: int = 0, bank=None,
                           publish_every: int = 0,
-                          publish_dtype=None) -> SVMState:
+                          publish_dtype=None, retry=None,
+                          guard_finite: bool = False,
+                          debug_invariants: bool = False, report=None,
+                          skip_chunks=()) -> SVMState:
     """Out-of-core ``fit_multiclass``: streamed shuffled epochs over a chunk
     source of integer-labelled rows (contract as in ``bsgd.fit_stream`` —
     same checkpointing, cursor, bitwise-resume, copied-caller-state,
-    ``prefetch`` background staging and ``bank``/``publish_every`` snapshot
-    semantics).  Labels are validated per concrete chunk."""
+    ``prefetch`` background staging, ``bank``/``publish_every`` snapshot
+    semantics, and ``retry``/``guard_finite``/``debug_invariants``/
+    ``report``/``skip_chunks`` resilience knobs).  Labels are validated per
+    concrete chunk."""
     table = cfg.table()
     if state is None:
         state = init_multiclass_state(cfg, source.dim)
@@ -328,7 +335,10 @@ def fit_multiclass_stream(cfg: MulticlassSVMConfig, source, *,
                        keep_last=keep_last, prefetch=prefetch, stage=stage,
                        publish=_make_publish(bank, cfg.binary.gamma,
                                              publish_dtype),
-                       publish_every=publish_every)
+                       publish_every=publish_every, retry=retry,
+                       report=report, skip_chunks=skip_chunks,
+                       guard=_make_guard(guard_finite, debug_invariants,
+                                         cfg.binary, report))
 
 
 def fit_multiclass_loop(cfg: MulticlassSVMConfig, x, y, *, epochs: int = 1,

@@ -40,13 +40,17 @@ from ..data.stream import iter_epoch
 
 
 def prequential_stream(cfg, source, *, key=None, impl: str = "auto",
-                       state=None, prefetch: int = 0) -> dict:
+                       state=None, prefetch: int = 0, retry=None,
+                       report=None, skip_chunks=()) -> dict:
     """One prequential pass: score each chunk, then train on it.
 
     ``cfg`` is a binary ``BSGDConfig`` (labels in {-1, +1}) or a
     ``MulticlassSVMConfig`` (integer class ids).  ``state`` continues from
     an existing model (e.g. a ``seed_codebook``-warm-started bank);  None
-    starts cold.  Returns the final state plus the online record::
+    starts cold.  ``retry``/``report``/``skip_chunks`` are the §16
+    resilience knobs forwarded to ``iter_epoch`` (quarantined chunks are
+    neither scored nor trained on).  Returns the final state plus the
+    online record::
 
         {"state", "n_rows", "mistakes", "mistake_rate",   # cumulative
          "chunk_acc",                                     # per-chunk trace
@@ -68,7 +72,8 @@ def prequential_stream(cfg, source, *, key=None, impl: str = "auto",
     mistakes = 0
     n_rows = 0
     chunk_acc, chunk_mist = [], []
-    for _, x, y in iter_epoch(source, key, prefetch=prefetch):
+    for _, x, y in iter_epoch(source, key, prefetch=prefetch, retry=retry,
+                              report=report, skip_chunks=skip_chunks):
         x = np.asarray(x, np.float32)
         y = np.asarray(y)
         # test ...

@@ -180,6 +180,40 @@ def predict_proba(model: ServeModel, x, *, temperature: float = 1.0,
 # Batched request queue
 # ---------------------------------------------------------------------------
 
+class ServeTimeout(TimeoutError):
+    """``take``/``drain`` timed out waiting for resolution.  The message
+    names the ticket and the queue's in-flight depth (DESIGN.md §16);
+    subclassing ``TimeoutError`` keeps pre-§16 handlers working."""
+
+
+class ServeDeadline(TimeoutError):
+    """A request's own ``deadline_s`` expired before its rows were
+    dispatched — the queue shed it instead of serving stale results."""
+
+
+class QueueFull(RuntimeError):
+    """``submit`` refused because ``max_pending`` rows are already queued —
+    bounded-pending load shedding instead of unbounded buffering."""
+
+
+def _validate_request(x: np.ndarray, dim: int | None) -> None:
+    """Shared ``submit`` validation (BatchQueue + AsyncBatchQueue): clear
+    ``ValueError``s for malformed rows instead of a shape blowup (or a
+    silent poisoned score) deep inside a fused microbatch."""
+    if x.ndim != 2:
+        raise ValueError(f"request must be (n, dim), got shape {x.shape}")
+    if x.dtype == np.bool_ or not np.issubdtype(x.dtype, np.number):
+        raise ValueError(
+            f"request rows must be a numeric dtype, got {x.dtype}")
+    if dim is not None and x.shape[1] != dim:
+        raise ValueError(
+            f"request dim {x.shape[1]} != model dim {dim}")
+    if x.size and not np.isfinite(x).all():
+        raise ValueError(
+            "request rows contain non-finite values — refused at submit so "
+            "a poisoned request can never surface as a non-finite score")
+
+
 def default_buckets(max_batch: int, min_bucket: int = 8) -> tuple[int, ...]:
     """Power-of-two pad targets up to (and always including) ``max_batch``."""
     if min_bucket < 1:
@@ -258,8 +292,7 @@ class BatchQueue:
     def submit(self, x) -> int:
         """Enqueue one request of rows; returns its ticket."""
         x = np.asarray(x)
-        if x.ndim != 2:
-            raise ValueError(f"request must be (n, dim), got {x.shape}")
+        _validate_request(x, self.model.sv_x.shape[-1])
         ticket = self._next_ticket
         self._next_ticket += 1
         self._need[ticket] = x.shape[0]
@@ -438,28 +471,44 @@ class AsyncBatchQueue:
     dispatcher failure re-raises on the caller's thread, never hangs.  Use
     as a context manager or call ``close()`` — pending work is flushed, the
     thread joins.
+
+    Overload protection (DESIGN.md §16): ``max_pending`` bounds the pending
+    row buffer — ``submit`` beyond it raises ``QueueFull`` immediately
+    (load shedding) instead of buffering without bound.  A per-request
+    ``submit(..., deadline_s=...)`` sheds the request if its rows are still
+    undispatched when the deadline passes: ``take`` then raises
+    ``ServeDeadline``.  ``take``/``drain`` timeouts raise ``ServeTimeout``
+    naming the ticket and the in-flight depth.  All three are typed results,
+    never hangs — a supervisor can catch and retry/degrade.
     """
 
     def __init__(self, model: ServeModel | ModelBank, *, max_batch: int = 256,
-                 min_bucket: int = 8, impl: str = "auto", predict_fn=None):
+                 min_bucket: int = 8, impl: str = "auto", predict_fn=None,
+                 max_pending: int | None = None):
         if max_batch < 1:
             raise ValueError(f"max_batch={max_batch} < 1")
+        if max_pending is not None and max_pending < max_batch:
+            raise ValueError(f"max_pending={max_pending} < "
+                             f"max_batch={max_batch} could never fill "
+                             "a full microbatch")
         self._bank = model if isinstance(model, ModelBank) else None
         self.model = None if self._bank is not None else model
         if self._bank is not None and predict_fn is not None:
             raise ValueError("predict_fn requires a fixed ServeModel — a "
                              "ModelBank swaps models per microbatch")
         self.max_batch = max_batch
+        self.max_pending = max_pending
         self.buckets = default_buckets(max_batch, min_bucket)
         self._impl = impl
         self._predict_fn = predict_fn
         self._compiled: dict = {}     # (bucket, bank signature) -> executable
         self._cv = threading.Condition()
-        self._pending: deque = deque()   # (ticket, rows ndarray, row_offset)
+        self._pending: deque = deque()  # (ticket, rows, row_offset, deadline)
         self._pending_rows = 0
         self._need: dict[int, int] = {}
         self._parts: dict[int, list] = {}
         self._done: dict[int, np.ndarray] = {}
+        self._dead: dict[int, str] = {}   # ticket -> shed reason
         self._next_ticket = 0
         self._unresolved = 0
         self._waiters = 0
@@ -475,15 +524,32 @@ class AsyncBatchQueue:
 
     # -- submitter side ------------------------------------------------------
 
-    def submit(self, x) -> int:
-        """Enqueue one request of rows; returns its ticket immediately."""
+    def submit(self, x, *, deadline_s: float | None = None) -> int:
+        """Enqueue one request of rows; returns its ticket immediately.
+
+        ``deadline_s``: optional per-request budget (seconds from now).  If
+        the rows are still undispatched when it expires, the request is shed
+        and ``take`` raises ``ServeDeadline`` instead of returning stale
+        labels.  Raises ``QueueFull`` when ``max_pending`` rows are already
+        buffered (bounded-pending load shedding).
+        """
         x = np.asarray(x)
-        if x.ndim != 2:
-            raise ValueError(f"request must be (n, dim), got {x.shape}")
+        try:
+            dim = self._current()[1].sv_x.shape[-1]
+        except LookupError:
+            dim = None                     # empty bank — no dim to pin yet
+        _validate_request(x, dim)
+        dl = (None if deadline_s is None
+              else time.monotonic() + float(deadline_s))
         with self._cv:
             self._check_error()
             if self._stop:
                 raise RuntimeError("AsyncBatchQueue is closed")
+            if (self.max_pending is not None and x.shape[0]
+                    and self._pending_rows + x.shape[0] > self.max_pending):
+                raise QueueFull(
+                    f"{self._pending_rows} rows pending + {x.shape[0]} new "
+                    f"> max_pending={self.max_pending} — request shed")
             ticket = self._next_ticket
             self._next_ticket += 1
             self._need[ticket] = x.shape[0]
@@ -494,7 +560,7 @@ class AsyncBatchQueue:
                 self._parts.pop(ticket)
             else:
                 self._unresolved += 1
-                self._pending.append((ticket, x, 0))
+                self._pending.append((ticket, x, 0, dl))
                 self._pending_rows += x.shape[0]
                 # only wake the dispatcher when the gate is actually open
                 # (full batch, or a waiter already blocked) — an
@@ -505,35 +571,63 @@ class AsyncBatchQueue:
             return ticket
 
     def take(self, ticket: int, timeout: float | None = None) -> np.ndarray:
-        """Labels for a ticket; blocks until its last microbatch resolves."""
+        """Labels for a ticket; blocks until its last microbatch resolves.
+
+        Raises ``ServeDeadline`` if the ticket was shed (its ``deadline_s``
+        expired undispatched), ``ServeTimeout`` on ``timeout``.
+        """
+        def ready():
+            return ticket in self._done or ticket in self._dead
+
+        def timed_out():
+            raise ServeTimeout(
+                f"ticket {ticket} unresolved after {timeout}s "
+                f"({self._unresolved} requests in flight, "
+                f"{self._pending_rows} rows pending)")
+
+        self._await(ready, timeout, timed_out)
         with self._cv:
-            self._waiters += 1          # un-gate dispatch of partial batches
-            self._cv.notify_all()
-            try:
-                if not self._cv.wait_for(
-                        lambda: ticket in self._done
-                        or self._error is not None, timeout):
-                    raise TimeoutError(f"ticket {ticket} unresolved after "
-                                       f"{timeout}s")
-            finally:
-                self._waiters -= 1
-            self._check_error()
+            if ticket in self._dead:
+                raise ServeDeadline(
+                    f"ticket {ticket} shed: {self._dead.pop(ticket)}")
             return self._done.pop(ticket)
 
     def drain(self, timeout: float | None = None) -> None:
-        """Block until every submitted row is scored and resolved."""
+        """Block until every submitted row is scored, resolved or shed."""
+        def ready():
+            return self._unresolved == 0
+
+        def timed_out():
+            raise ServeTimeout(
+                f"{self._unresolved} requests unresolved after {timeout}s "
+                f"({self._pending_rows} rows pending)")
+
+        self._await(ready, timeout, timed_out)
+
+    def _await(self, ready, timeout, timed_out) -> None:
+        """Wait (as a gate-opening waiter) until ``ready()`` under the lock,
+        re-checking at request deadlines so shed tickets surface without a
+        dispatcher wakeup; calls ``timed_out()`` past ``timeout``."""
+        deadline_t = None if timeout is None else time.monotonic() + timeout
         with self._cv:
             self._waiters += 1          # un-gate dispatch of partial batches
             self._cv.notify_all()
             try:
-                if not self._cv.wait_for(
-                        lambda: self._unresolved == 0
-                        or self._error is not None, timeout):
-                    raise TimeoutError(f"{self._unresolved} requests "
-                                       f"unresolved after {timeout}s")
+                while True:
+                    self._purge_expired_locked()
+                    self._check_error()
+                    if ready():
+                        return
+                    now = time.monotonic()
+                    if deadline_t is not None and now >= deadline_t:
+                        timed_out()
+                    bounds = [t for t in (deadline_t,
+                                          self._earliest_deadline_locked())
+                              if t is not None]
+                    self._cv.wait(max(min(bounds) - now, 0.0) + 1e-3
+                                  if bounds else None)
             finally:
                 self._waiters -= 1
-            self._check_error()
 
     def close(self, timeout: float | None = 30.0) -> None:
         """Flush pending work, stop and join the dispatcher (idempotent)."""
@@ -592,17 +686,48 @@ class AsyncBatchQueue:
             self._compiled[sig] = fn
         return fn(model, xb)
 
+    def _earliest_deadline_locked(self) -> float | None:
+        dls = [e[3] for e in self._pending if e[3] is not None]
+        return min(dls) if dls else None
+
+    def _purge_expired_locked(self) -> None:
+        """Shed pending requests whose deadline passed (caller holds the
+        lock): the ticket is marked dead, its undispatched rows dropped, and
+        ``take`` raises ``ServeDeadline`` for it.  In-flight slices of a
+        shed ticket resolve into the void (``_resolve`` skips dead)."""
+        if self._earliest_deadline_locked() is None:
+            return
+        now = time.monotonic()
+        kept: deque = deque()
+        shed = False
+        for ticket, x, off, dl in self._pending:
+            if dl is None or now < dl:
+                kept.append((ticket, x, off, dl))
+                continue
+            shed = True
+            self._pending_rows -= x.shape[0]
+            self._dead[ticket] = (
+                f"deadline expired with {x.shape[0]} rows undispatched")
+            self._need.pop(ticket, None)
+            self._parts.pop(ticket, None)
+            self._unresolved -= 1
+        if shed:
+            self._pending = kept
+            self._cv.notify_all()
+
     def _pop_rows_locked(self):
-        """Take up to ``max_batch`` pending rows (caller holds the lock)."""
+        """Take up to ``max_batch`` live pending rows (caller holds the
+        lock); expired requests are shed first, never launched."""
+        self._purge_expired_locked()
         n_real = min(self._pending_rows, self.max_batch)
         rows, slices, need = [], [], n_real
         while need:
-            ticket, x, off = self._pending.popleft()
+            ticket, x, off, dl = self._pending.popleft()
             take = min(need, x.shape[0])
             rows.append(x[:take])
             slices.append((ticket, off, take))
             if take < x.shape[0]:
-                self._pending.appendleft((ticket, x[take:], off + take))
+                self._pending.appendleft((ticket, x[take:], off + take, dl))
             need -= take
         self._pending_rows -= n_real
         return rows, slices, n_real
@@ -645,6 +770,8 @@ class AsyncBatchQueue:
             if version is not None:
                 st["versions"][version] = st["versions"].get(version, 0) + 1
             for (ticket, off, take), part in zip(slices, parts_by_slice):
+                if ticket in self._dead:
+                    continue   # shed mid-flight — drop its labels
                 need = self._need[ticket]
                 if off == 0 and take == need:     # single-part fast path
                     self._done[ticket] = part
@@ -685,7 +812,10 @@ class AsyncBatchQueue:
                         batch = self._pop_rows_locked()
                 # dispatch the NEXT microbatch before syncing the previous:
                 # the device is never idle while the host scatters labels
-                launched = self._launch(*batch) if batch is not None else None
+                # (a purge can shed every pending row — then there is
+                # nothing to launch)
+                launched = (self._launch(*batch)
+                            if batch is not None and batch[2] else None)
                 if inflight is not None:
                     self._resolve(inflight)
                 inflight = launched

@@ -1,15 +1,21 @@
 """Data pipelines: synthetic classification sets, LIBSVM parsing, chunked
-streaming sources for out-of-core training, LM tokens."""
+streaming sources for out-of-core training, fault injection, LM tokens."""
+from .faults import (ChunkQuarantined, CorruptChunkError, FaultSchedule, FaultyChunks, ResilienceReport,
+                     RetryPolicy, TrainerCrash, TransientIOError, TruncatedChunkError, load_chunk_with_retry)
 from .libsvm import dump_libsvm, iter_libsvm_chunks, parse_libsvm
 from .stream import (ArrayChunks, ChunkSource, DriftChunks, FileChunks, LibsvmChunks, PrefetchChunks,
                      chunk_order, epoch_permutation, intra_perm, iter_epoch, write_npz_chunks)
 from .synthetic import (label_flip_schedule, make_blobs, make_blobs_multiclass, make_susy_like,
                         make_two_moons, mean_shift_schedule, train_test_split)
 
-__all__ = ["ArrayChunks", "ChunkSource", "DriftChunks", "FileChunks",
-           "LibsvmChunks", "PrefetchChunks",
+__all__ = ["ArrayChunks", "ChunkQuarantined", "ChunkSource",
+           "CorruptChunkError", "DriftChunks", "FaultSchedule",
+           "FaultyChunks", "FileChunks", "LibsvmChunks", "PrefetchChunks",
+           "ResilienceReport", "RetryPolicy", "TrainerCrash",
+           "TransientIOError", "TruncatedChunkError",
            "chunk_order", "dump_libsvm", "epoch_permutation", "intra_perm",
            "iter_epoch", "iter_libsvm_chunks", "label_flip_schedule",
+           "load_chunk_with_retry",
            "make_blobs", "make_blobs_multiclass", "make_susy_like",
            "make_two_moons", "mean_shift_schedule", "parse_libsvm",
            "train_test_split", "write_npz_chunks"]

@@ -300,14 +300,17 @@ class PrefetchChunks(ChunkSource):
     strand the worker (the no-hung-threads gate in tests/data/test_stream.py).
     """
 
-    def __init__(self, source: ChunkSource, depth: int = 2):
+    def __init__(self, source: ChunkSource, depth: int = 2, *, retry=None,
+                 report=None):
         self._pool = None                    # first: __del__ may run on a
         if depth < 1:                        # partially-initialized instance
             raise ValueError(f"depth={depth} < 1")
         self.source = source
         self.depth = depth
-        self.chunk_lens = source.chunk_lens
-        self.dim = source.dim
+        self.retry = retry                   # faults.RetryPolicy: loads (on
+        self.report = report                 # the worker AND off-plan) retry
+        self.chunk_lens = source.chunk_lens  # with backoff, quarantining on
+        self.dim = source.dim                # exhaustion (DESIGN.md §16)
         self._futs: dict[int, object] = {}   # chunk id -> Future
         self._plan: list[int] = []           # upcoming ids, front first
 
@@ -341,12 +344,25 @@ class PrefetchChunks(ChunkSource):
     def _fill(self) -> None:
         while self._plan and len(self._futs) < self.depth:
             cid = self._plan.pop(0)
-            self._futs[cid] = self._pool.submit(self.source.load, cid)
+            self._futs[cid] = self._pool.submit(self._load_one, cid)
+
+    def _load_one(self, cid: int):
+        """One (possibly retried) source load — the worker's task body and
+        the off-plan synchronous fallback share it, so retry/backoff runs on
+        whichever thread performs the load."""
+        if self.retry is None:
+            return self.source.load(cid)
+        from .faults import load_chunk_with_retry
+
+        return load_chunk_with_retry(self.source, cid, self.retry,
+                                     report=self.report,
+                                     expected_rows=self.chunk_lens[cid],
+                                     dim=self.dim)
 
     def load(self, i: int):
         fut = self._futs.pop(int(i), None)
         if fut is None:                      # off-plan: synchronous fallback
-            return self.source.load(i)
+            return self._load_one(int(i))
         self._fill()                         # keep the window full
         return fut.result()                  # re-raises worker exceptions here
 
@@ -403,7 +419,8 @@ def epoch_permutation(source: ChunkSource, key) -> np.ndarray:
 
 
 def iter_epoch(source: ChunkSource, key=None, *, start_chunk: int = 0,
-               end_chunk: int | None = None, prefetch: int = 0):
+               end_chunk: int | None = None, prefetch: int = 0,
+               retry=None, report=None, skip_chunks=()):
     """Yield ``(position, x, y)`` chunks for one epoch in shuffled order.
 
     ``key`` derives both permutations of the shuffle contract (None = natural
@@ -416,21 +433,52 @@ def iter_epoch(source: ChunkSource, key=None, *, start_chunk: int = 0,
     synchronous path, chunk ``i+1``'s load just overlaps the consumer's work
     on chunk ``i``.  A source that is already a ``PrefetchChunks`` is planned
     directly (no double wrap).
+
+    Resilience (DESIGN.md §16): ``retry`` (a ``faults.RetryPolicy``) retries
+    transient load failures with bounded backoff — on the prefetch worker
+    when one is planned, else inline — and QUARANTINES a chunk that exhausts
+    its budget: the chunk is skipped (its position yields nothing), recorded
+    in ``report`` (a ``faults.ResilienceReport``), and the epoch continues.
+    ``skip_chunks`` (chunk *ids*) are excluded up front as if they never
+    existed — the construction used to prove that quarantine leaves the
+    surviving sequence bitwise identical.  With ``retry=None`` (default) the
+    path is exactly the pre-resilience one: any load failure propagates.
     """
+    skip = frozenset(int(c) for c in skip_chunks)
     order = (chunk_order(key, source.n_chunks) if key is not None
              else np.arange(source.n_chunks))
     end = source.n_chunks if end_chunk is None else min(end_chunk,
                                                         source.n_chunks)
     planned = None
     if prefetch and not isinstance(source, PrefetchChunks):
-        source = PrefetchChunks(source, depth=prefetch)
+        source = PrefetchChunks(source, depth=prefetch, retry=retry,
+                                report=report)
     if isinstance(source, PrefetchChunks):
-        source.plan(order[start_chunk:end])
+        source.plan([c for c in order[start_chunk:end] if int(c) not in skip])
         planned = source
+    # retried loads: on the planned worker (its own retry/report), or inline
+    worker_retries = planned is not None and source.retry is not None
+    resilient = retry is not None or worker_retries
+    if resilient:
+        from .faults import ChunkQuarantined, load_chunk_with_retry
     try:
         for pos in range(start_chunk, end):
             cid = int(order[pos])
-            x, y = source.load(cid)
+            if cid in skip:
+                continue
+            try:
+                if retry is not None and not worker_retries:
+                    x, y = load_chunk_with_retry(
+                        source, cid, retry, report=report,
+                        expected_rows=source.chunk_lens[cid], dim=source.dim)
+                else:
+                    x, y = source.load(cid)
+            except Exception as e:  # noqa: BLE001 — quarantine-only filter
+                if not (resilient and isinstance(e, ChunkQuarantined)):
+                    raise
+                if report is not None:
+                    report.note_quarantine(e)
+                continue                 # skip: surviving sequence unchanged
             if key is not None:
                 p = intra_perm(key, cid, x.shape[0])
                 x, y = x[p], y[p]

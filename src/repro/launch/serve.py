@@ -174,7 +174,9 @@ def serve_svm_live(*, gamma: float = 0.5, bank_dtype: str | None = None,
                    epochs: int = 2, publish_every: int = 2,
                    rows: int = 4096, max_batch: int = 64,
                    min_bucket: int = 8, seed: int = 0,
-                   verbose: bool = True) -> dict:
+                   verbose: bool = True, faults=None, retry=None,
+                   ckpt_dir: str | None = None, ckpt_every: int = 0,
+                   max_restarts: int = 2, report=None) -> dict:
     """Train-while-serve: a background trainer hot-swaps the model mid-trace.
 
     The ``--live`` arm — the pipeline PR's end-to-end artifact as one driver:
@@ -188,12 +190,25 @@ def serve_svm_live(*, gamma: float = 0.5, bank_dtype: str | None = None,
     (``versions: {version: microbatches}``) proving the hot-swap happened
     mid-trace, and re-runs the trace against the FINAL snapshot for the
     usual bitwise parity gate.
+
+    Resilience (DESIGN.md §16): ``faults`` (a ``data.FaultSchedule``) wraps
+    the chunk source in ``FaultyChunks`` and arms the full recovery stack —
+    retries (``retry`` defaults to ``RetryPolicy()``), the non-finite
+    publish guard, and checkpointing (``ckpt_dir`` defaults to a tempdir,
+    ``ckpt_every`` to ``publish_every``).  A SUPERVISOR wraps the trainer:
+    a crash leaves serving up on the last published bank version and
+    restarts the trainer (up to ``max_restarts``), which resumes from the
+    latest *verifiable* checkpoint.  The final snapshot is asserted finite.
+    The result dict then also carries ``restarts``/``retries``/
+    ``quarantined``/``rollbacks`` from the shared ``ResilienceReport``.
     """
+    import tempfile
     import threading
 
     from ..core import (MulticlassSVMConfig, ModelBank, drive_trace,
                         ragged_trace_sizes)
-    from ..data import ArrayChunks, make_blobs_multiclass
+    from ..data import (ArrayChunks, FaultyChunks, ResilienceReport,
+                        RetryPolicy, make_blobs_multiclass)
 
     cfg = MulticlassSVMConfig.create(
         n_classes, budget=budget, lambda_=1e-3, gamma=gamma,
@@ -202,32 +217,76 @@ def serve_svm_live(*, gamma: float = 0.5, bank_dtype: str | None = None,
                                  n_classes=n_classes, sep=2.5)
     source = ArrayChunks(np.asarray(x, np.float32),
                          np.asarray(y, np.int32), chunk_rows=chunk_rows)
+    report = report if report is not None else ResilienceReport()
+    tmp_ckpt = None
+    if faults is not None:
+        source = FaultyChunks(source, faults)
+        retry = retry if retry is not None else RetryPolicy()
+        if ckpt_dir is None:
+            tmp_ckpt = tempfile.TemporaryDirectory(prefix="serve_live_ckpt_")
+            ckpt_dir = tmp_ckpt.name
+        if not ckpt_every:
+            ckpt_every = publish_every
     bank = ModelBank()
     fail: list[BaseException] = []
 
     def trainer() -> None:
         from ..core import fit_multiclass_stream
-        try:
-            fit_multiclass_stream(cfg, source, epochs=epochs, seed=seed,
-                                  prefetch=2, bank=bank,
-                                  publish_every=publish_every,
-                                  publish_dtype=bank_dtype)
-        except BaseException as e:  # noqa: BLE001 — re-raised on main thread
-            fail.append(e)
+        attempts = 0
+        while True:
+            try:
+                fit_multiclass_stream(cfg, source, epochs=epochs, seed=seed,
+                                      prefetch=2, bank=bank,
+                                      publish_every=publish_every,
+                                      publish_dtype=bank_dtype,
+                                      ckpt_dir=ckpt_dir,
+                                      ckpt_every=ckpt_every, retry=retry,
+                                      report=report,
+                                      guard_finite=faults is not None)
+                return
+            except BaseException as e:  # noqa: BLE001 — supervised
+                attempts += 1
+                if attempts > max_restarts:
+                    fail.append(e)   # re-raised on the main thread
+                    return
+                # serving stays up on the last published version; the next
+                # attempt resumes from the latest verifiable checkpoint
+                report.note_restart()
+                if verbose:
+                    print(f"[serve --live] trainer crashed ({e!r}); "
+                          f"restart {attempts}/{max_restarts} from "
+                          f"checkpoint")
 
     t = threading.Thread(target=trainer, daemon=True, name="live-trainer")
     t.start()
-    bank.wait(1, timeout=120.0)               # first snapshot before serving
-    rng = np.random.default_rng(seed)
-    req_x = rng.standard_normal((rows, dim)).astype(np.float32)
-    result = drive_trace(bank, req_x, ragged_trace_sizes(rows, max_batch, rng),
-                         max_batch=max_batch, min_bucket=min_bucket,
-                         queue="async")
-    t.join(timeout=300.0)
-    if fail:
-        raise RuntimeError("background trainer failed") from fail[0]
+    try:
+        bank.wait(1, timeout=120.0)           # first snapshot before serving
+        rng = np.random.default_rng(seed)
+        req_x = rng.standard_normal((rows, dim)).astype(np.float32)
+        result = drive_trace(bank, req_x,
+                             ragged_trace_sizes(rows, max_batch, rng),
+                             max_batch=max_batch, min_bucket=min_bucket,
+                             queue="async")
+        t.join(timeout=300.0)
+        if fail:
+            raise RuntimeError("background trainer failed past "
+                               f"{max_restarts} restarts") from fail[0]
+        _, final_model = bank.current()
+        for name in ("sv_x", "alpha"):
+            leaf = jnp.asarray(getattr(final_model, name), jnp.float32)
+            if not bool(jnp.all(jnp.isfinite(leaf))):
+                raise AssertionError(
+                    f"published ServeModel.{name} contains non-finite "
+                    "values — the publish guard failed")
+    finally:
+        if tmp_ckpt is not None:
+            tmp_ckpt.cleanup()
     result.update(dim=dim, n_classes=n_classes,
-                  final_version=bank.version)
+                  final_version=bank.version,
+                  restarts=report.restarts,
+                  retries=report.retries,
+                  quarantined=report.quarantined_chunks(),
+                  rollbacks=len(report.rollbacks))
     if verbose:
         print(f"[serve --live] {result['rows']} rows while training "
               f"({result['microbatches']} microbatches); versions served: "
@@ -235,6 +294,9 @@ def serve_svm_live(*, gamma: float = 0.5, bank_dtype: str | None = None,
         print(f"[serve --live] {result['rows_per_s']} rows/s; "
               f"p50={result['p50_ms']} ms p99={result['p99_ms']} ms; "
               f"pad waste {result['pad_waste_frac']}")
+        if faults is not None:
+            print(f"[serve --live] resilience: {report!r}; final snapshot "
+                  "finite (guarded publish)")
     return result
 
 
@@ -277,13 +339,26 @@ def main() -> None:
                          "serves the trace, hot-swapping mid-flight")
     ap.add_argument("--publish-every", type=int, default=2, metavar="K",
                     help="svm_bsgd --live: chunks between snapshots")
+    ap.add_argument("--faults", type=int, default=None, metavar="SEED",
+                    help="svm_bsgd --live: chaos drill — inject the seeded "
+                         "FaultSchedule.chaos(SEED) (transient IO errors, "
+                         "stalls, a NaN chunk, a fatal chunk, a trainer "
+                         "crash) and run the full recovery stack: retries, "
+                         "quarantine, guarded publish, checkpointed "
+                         "supervisor restart")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.arch == "svm_bsgd" and args.live:
+        faults = None
+        if args.faults is not None:
+            from ..data import FaultSchedule
+            faults = FaultSchedule.chaos(args.faults, nan_chunk=2,
+                                         crash_chunk=3, fatal_chunk=5)
         kw = dict(rows=1024, train_rows=2048, chunk_rows=256,
                   epochs=1) if args.smoke else {}
         serve_svm_live(gamma=args.gamma, bank_dtype=args.bank_dtype,
-                       publish_every=args.publish_every, seed=args.seed, **kw)
+                       publish_every=args.publish_every, seed=args.seed,
+                       faults=faults, **kw)
         return
     if args.arch == "svm_bsgd":
         kw = {}

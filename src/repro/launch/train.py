@@ -136,7 +136,9 @@ def svm_stream_loop(source, *, layout: str = "replicated", n_classes: int = 8,
                     lambda_: float = 1e-4, epochs: int = 1, seed: int = 0,
                     mesh=None, ckpt_dir: str | None = None,
                     ckpt_every: int = 0, max_chunks: int | None = None,
-                    prefetch: int = 0, verbose: bool = True):
+                    prefetch: int = 0, verbose: bool = True, retry=None,
+                    guard_finite: bool = False, report=None,
+                    skip_chunks=()):
     """Streamed SVM training on the production mesh: the distributed path
     consuming the same chunk stream as the single-device trainers.
 
@@ -152,6 +154,8 @@ def svm_stream_loop(source, *, layout: str = "replicated", n_classes: int = 8,
     stager while the current pjit program runs (host-side overlap only here —
     device placement stays with pjit's ``in_shardings``, since the chunk
     batch axis is sharded across the mesh, not single-device).
+    ``retry``/``guard_finite``/``report``/``skip_chunks`` are the §16
+    resilience knobs, forwarded verbatim to the shared streaming driver.
 
     Returns ``(state, cfg)``.
     """
@@ -193,13 +197,17 @@ def svm_stream_loop(source, *, layout: str = "replicated", n_classes: int = 8,
                                       state=state, ckpt_dir=ckpt_dir,
                                       ckpt_every=ckpt_every,
                                       max_chunks=max_chunks,
-                                      chunk_fn=chunk_fn, prefetch=prefetch)
+                                      chunk_fn=chunk_fn, prefetch=prefetch,
+                                      retry=retry, guard_finite=guard_finite,
+                                      report=report, skip_chunks=skip_chunks)
     else:
         state = init_state(cfg, source.dim)
         state = fit_stream(cfg, source, epochs=epochs, seed=seed, state=state,
                            ckpt_dir=ckpt_dir, ckpt_every=ckpt_every,
                            max_chunks=max_chunks, chunk_fn=chunk_fn,
-                           prefetch=prefetch)
+                           prefetch=prefetch, retry=retry,
+                           guard_finite=guard_finite, report=report,
+                           skip_chunks=skip_chunks)
     if verbose:
         counts = np.asarray(state.count).tolist()
         print(f"[train] svm stream done: layout={layout} "
@@ -251,6 +259,15 @@ def main() -> None:
                     help="svm_bsgd only: stage the next DEPTH chunks "
                          "(parse/shuffle/assemble) on a background thread "
                          "while the device runs the current chunk")
+    ap.add_argument("--retry", type=int, default=0, metavar="ATTEMPTS",
+                    help="svm_bsgd only: retry transient chunk-load "
+                         "failures up to ATTEMPTS times (bounded backoff); "
+                         "chunks that exhaust retries are quarantined and "
+                         "skipped, not fatal (DESIGN.md §16)")
+    ap.add_argument("--guard-finite", action="store_true",
+                    help="svm_bsgd only: per-chunk non-finite sentinel — "
+                         "roll back to the last good state and skip the "
+                         "offending chunk instead of training on NaN/Inf")
     args = ap.parse_args()
     if args.arch == "svm_bsgd":
         if not args.stream:
@@ -258,11 +275,22 @@ def main() -> None:
         source = _open_stream(args.stream, chunk_rows=args.chunk_rows,
                               n_features=args.n_features,
                               binary=args.svm_layout != "class")
+        retry = None
+        report = None
+        if args.retry or args.guard_finite:
+            from ..data import ResilienceReport, RetryPolicy
+            report = ResilienceReport()
+            if args.retry:
+                retry = RetryPolicy(max_attempts=args.retry)
         svm_stream_loop(source, layout=args.svm_layout,
                         n_classes=args.svm_classes, budget=args.svm_budget,
                         batch_size=args.batch_size, epochs=args.epochs,
                         seed=args.seed, ckpt_dir=args.ckpt_dir,
-                        ckpt_every=args.ckpt_every, prefetch=args.prefetch)
+                        ckpt_every=args.ckpt_every, prefetch=args.prefetch,
+                        retry=retry, guard_finite=args.guard_finite,
+                        report=report)
+        if report is not None:
+            print(f"[train] resilience: {report!r}")
         return
     cfg = get_smoke(args.arch) if args.smoke else get(args.arch)
     metrics = train_loop(cfg, steps=args.steps, batch_size=args.batch_size,

@@ -224,3 +224,102 @@ def test_async_queue_edge_requests(watchdog):
         q.submit(X[:1])                       # after close()
     with pytest.raises(ValueError):
         AsyncBatchQueue(MODEL, max_batch=0)
+
+
+# ---- overload protection: typed shedding, never hangs (DESIGN.md §16) ----
+
+
+def test_submit_validates_rows(watchdog):
+    """Malformed requests fail AT SUBMIT with a clear ValueError — never a
+    shape blowup (or a silently poisoned score) inside a fused microbatch."""
+    watchdog(120)
+    with AsyncBatchQueue(MODEL, max_batch=64) as q:
+        with pytest.raises(ValueError, match=r"\(n, dim\)"):
+            q.submit(X[0])                          # 1-D
+        with pytest.raises(ValueError, match="numeric"):
+            q.submit(np.zeros((3, DIM), np.bool_))
+        with pytest.raises(ValueError, match="numeric"):
+            q.submit(np.array([["a"] * DIM]))
+        with pytest.raises(ValueError, match="request dim"):
+            q.submit(np.zeros((3, DIM + 1), np.float32))
+        bad = X[:3].copy()
+        bad[1, 2] = np.nan
+        with pytest.raises(ValueError, match="non-finite"):
+            q.submit(bad)
+        bad[1, 2] = np.inf
+        with pytest.raises(ValueError, match="non-finite"):
+            q.submit(bad)
+        t = q.submit(X[:3])                         # queue still healthy
+        assert (q.take(t, timeout=30.0) ==
+                np.asarray(predict_labels(MODEL, X[:3]))).all()
+    from repro.core import BatchQueue
+    bq = BatchQueue(MODEL, max_batch=64)
+    with pytest.raises(ValueError, match="non-finite"):
+        bq.submit(np.full((2, DIM), np.nan, np.float32))
+
+
+def test_serve_timeout_is_typed_and_names_the_ticket(watchdog):
+    watchdog(120)
+    from repro.core import ServeTimeout
+    with AsyncBatchQueue(MODEL, max_batch=64) as q:
+        with pytest.raises(ServeTimeout, match="ticket 999") as ei:
+            q.take(999, timeout=0.05)
+        assert isinstance(ei.value, TimeoutError)   # old handlers still work
+        assert "in flight" in str(ei.value)
+        t = q.submit(X[:4])
+        q.take(t, timeout=30.0)
+
+    def slow(xb):
+        import time as _t
+        _t.sleep(0.5)
+        return np.asarray(predict_labels(MODEL, xb))
+
+    with AsyncBatchQueue(MODEL, max_batch=64, predict_fn=slow) as q:
+        q.submit(X[:4])
+        with pytest.raises(ServeTimeout, match="unresolved"):
+            q.drain(timeout=0.05)
+        q.drain(timeout=30.0)                       # still completes after
+
+
+def test_queue_full_sheds_at_submit(watchdog):
+    """max_pending bounds the buffer: the overflowing submit raises
+    QueueFull IMMEDIATELY and leaves earlier tickets untouched."""
+    watchdog(120)
+    from repro.core import QueueFull
+    with AsyncBatchQueue(MODEL, max_batch=64, max_pending=64) as q:
+        t1 = q.submit(X[:40])                       # gate closed: stays pending
+        with pytest.raises(QueueFull, match="max_pending=64"):
+            q.submit(X[40:75])                      # 40 + 35 > 64
+        t2 = q.submit(X[40:60])                     # 40 + 20 fits
+        got1, got2 = q.take(t1, timeout=30.0), q.take(t2, timeout=30.0)
+        direct = np.asarray(predict_labels(MODEL, X[:60]))
+        assert (np.concatenate([got1, got2]) == direct).all()
+        t3 = q.submit(X[:30])                       # buffer drained: open again
+        q.take(t3, timeout=30.0)
+    with pytest.raises(ValueError, match="max_pending"):
+        AsyncBatchQueue(MODEL, max_batch=64, max_pending=8)
+
+
+def test_deadline_sheds_undispatched_request(watchdog):
+    """A request whose deadline expires before dispatch is shed: take raises
+    ServeDeadline (typed, names the ticket), drain still completes, and
+    surviving tickets resolve bitwise."""
+    watchdog(120)
+    import time as _t
+
+    from repro.core import ServeDeadline
+    with AsyncBatchQueue(MODEL, max_batch=64) as q:
+        q.warmup()
+        t_live = q.submit(X[:8])                    # no deadline
+        t_dead = q.submit(X[8:16], deadline_s=0.01)
+        _t.sleep(0.05)                              # expires while gated
+        with pytest.raises(ServeDeadline, match=f"ticket {t_dead}") as ei:
+            q.take(t_dead, timeout=30.0)
+        assert isinstance(ei.value, TimeoutError)
+        got = q.take(t_live, timeout=30.0)
+        assert (got == np.asarray(predict_labels(MODEL, X[:8]))).all()
+        q.drain(timeout=30.0)                       # shed rows never wedge it
+        # a generous deadline is a no-op: the request resolves normally
+        t_ok = q.submit(X[:16], deadline_s=60.0)
+        assert (q.take(t_ok, timeout=30.0) ==
+                np.asarray(predict_labels(MODEL, X[:16]))).all()

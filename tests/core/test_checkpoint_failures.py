@@ -139,3 +139,112 @@ def test_train_chunk_double_donation_safe():
     st = train_chunk(cfg, cfg.table(), st, xc, yc)
     st = train_chunk(cfg, cfg.table(), st, xc, yc)
     assert int(st.count) > 0
+
+
+# ---- integrity: per-leaf crc32, torn-write walk-back (DESIGN.md §16) ----
+
+
+def test_crc_detects_silently_modified_leaf(tmp_path):
+    """A bit flip inside arrays.npz that keeps shape/dtype intact fails the
+    per-leaf checksum on load — silent corruption never restores."""
+    d = _saved(tmp_path)
+    step_dir = os.path.join(d, "step_00000003")
+    with np.load(os.path.join(step_dir, "arrays.npz")) as z:
+        arrs = {k: z[k].copy() for k in z.files}
+    (key,) = arrs.keys()
+    arrs[key].flat[0] += 1.0                      # same shape, same dtype
+    np.savez(os.path.join(step_dir, "arrays.npz"), **arrs)
+    with pytest.raises(ValueError, match="checksum"):
+        ckpt.load(d, 3, {"w": jnp.zeros((2, 3))})
+    with pytest.raises(ValueError, match="checksum"):
+        ckpt.verify_step(d, 3)
+
+
+def test_verify_step_passes_clean_and_names_torn_files(tmp_path):
+    d = _saved(tmp_path)
+    ckpt.verify_step(d, 3)                        # clean: no raise
+    step_dir = os.path.join(d, "step_00000003")
+    os.remove(os.path.join(step_dir, "arrays.npz"))
+    with pytest.raises(ValueError, match="torn write"):
+        ckpt.verify_step(d, 3)
+    os.remove(os.path.join(step_dir, "manifest.json"))
+    with pytest.raises(ValueError, match="torn write"):
+        ckpt.verify_step(d, 3)
+
+
+def test_restore_latest_walks_back_past_torn_step(tmp_path):
+    """The newest step is torn (crash mid-save): restore_latest silently
+    falls back to the newest step that verifies."""
+    d = str(tmp_path / "ck")
+    for step in (1, 2, 3):
+        ckpt.save(d, step, {"w": jnp.full((2, 3), float(step))})
+    os.remove(os.path.join(d, "step_00000003", "arrays.npz"))     # torn
+    assert ckpt.latest_step(d) == 3
+    assert ckpt.latest_verifiable_step(d) == 2
+    step, tree = ckpt.restore_latest(d, {"w": jnp.zeros((2, 3))})
+    assert step == 2
+    np.testing.assert_array_equal(np.asarray(tree["w"]),
+                                  np.full((2, 3), 2.0))
+
+
+def test_restore_latest_refuses_when_nothing_verifies(tmp_path):
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 1, {"w": jnp.zeros((2, 3))})
+    os.remove(os.path.join(d, "step_00000001", "manifest.json"))
+    with pytest.raises(ValueError, match="none verify"):
+        ckpt.restore_latest(d, {"w": jnp.zeros((2, 3))})
+    assert ckpt.restore_latest(str(tmp_path / "empty"),
+                               {"w": jnp.zeros((2, 3))}) == (None, None)
+
+
+def test_stream_resume_skips_torn_newest_checkpoint(tmp_path):
+    """fit_stream resume walks back past a torn newest step and still
+    finishes bitwise identical to the uninterrupted run (the since-then
+    chunks replay deterministically)."""
+    cfg = BSGDConfig(budget=12, lambda_=1e-3, gamma=0.5, batch_size=4)
+    x, y = make_blobs(jax.random.PRNGKey(0), 256, 5, sep=1.5)
+    source = ArrayChunks(np.asarray(x), np.asarray(y), chunk_rows=64)
+    ref = fit_stream(cfg, source, epochs=1, seed=0)
+    d = str(tmp_path / "ck")
+    fit_stream(cfg, source, epochs=1, seed=0, ckpt_dir=d, ckpt_every=1,
+               max_chunks=3)                      # steps 1..3, hard kill
+    newest = os.path.join(d, f"step_{ckpt.latest_step(d):08d}")
+    with open(os.path.join(newest, "arrays.npz"), "r+b") as f:
+        f.truncate(17)                            # torn mid-write
+    resumed = fit_stream(cfg, source, epochs=1, seed=0, ckpt_dir=d,
+                         ckpt_every=1)
+    for name, a, b in zip(ref._fields, ref, resumed):
+        if a is not None:
+            assert np.array_equal(np.asarray(a), np.asarray(b)), name
+
+
+def test_save_is_atomic_under_simulated_crash(tmp_path, monkeypatch):
+    """Kill the writer at every fsync point: the step directory either does
+    not exist (crash before os.replace) or verifies completely — no torn
+    state is ever left under the final name."""
+    d = str(tmp_path / "ck")
+    tree = {"w": jnp.arange(6.0).reshape(2, 3)}
+
+    class _Crash(RuntimeError):
+        pass
+
+    from repro.checkpoint import checkpointer as cp
+
+    real_fsync = os.fsync
+    for crash_at in (1, 2, 3):
+        calls = {"n": 0}
+
+        def fsync(fd, _crash_at=crash_at, _calls=calls):
+            _calls["n"] += 1
+            if _calls["n"] == _crash_at:
+                raise _Crash(f"crash at fsync #{_crash_at}")
+            return real_fsync(fd)
+
+        monkeypatch.setattr(cp.os, "fsync", fsync)
+        with pytest.raises(_Crash):
+            cp.save(d, 7, tree)
+        monkeypatch.setattr(cp.os, "fsync", real_fsync)
+        assert ckpt.all_steps(d) == []            # nothing under final name
+        assert not os.path.exists(os.path.join(d, "step_00000007"))
+    cp.save(d, 7, tree)                           # and the real save works
+    ckpt.verify_step(d, 7)

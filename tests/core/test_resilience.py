@@ -1,0 +1,225 @@
+"""End-to-end resilience gates for the training layer (ISSUE 10 tentpole):
+
+  * the non-finite guard snapshots per chunk and ROLLS BACK a chunk program
+    that poisons the state — a rolled-back chunk is bitwise an identity
+    chunk, and the poison never persists;
+  * the zero-fault path is bitwise the pre-resilience program: wrapping the
+    source in a no-op ``FaultyChunks`` and turning on retry + guard changes
+    nothing (ints bitwise, floats exact);
+  * the ServeModel-finiteness property: with NaN/Inf rows injected at any
+    chunk, every snapshot a guarded streaming trainer publishes is finite —
+    across solver x maintenance cells;
+  * quarantine composes with kill-and-resume: a faulty run killed mid-epoch
+    resumes bitwise the uninterrupted faulty run;
+  * ``debug_invariants`` runs the I1-I3 cache validator on every accepted
+    state, and the validator actually catches a corrupted cache.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from helpers.invariants import assert_state_parity
+
+from repro import checkpoint as ckpt
+from repro.core import (BSGDConfig, ModelBank, MulticlassSVMConfig,
+                        fit_multiclass_stream, fit_stream, train_chunk)
+from repro.core.kernel_cache import CacheInvariantError, check_invariants
+from repro.data import (ArrayChunks, FaultSchedule, FaultyChunks,
+                        ResilienceReport, RetryPolicy, make_blobs,
+                        make_blobs_multiclass)
+
+CFG = BSGDConfig(budget=16, lambda_=1e-4, gamma=0.5, batch_size=4)
+MCFG = MulticlassSVMConfig(n_classes=3, binary=CFG)
+DIM = 6
+_POLICY = RetryPolicy(max_attempts=3, base_delay_s=0.0, max_delay_s=0.0)
+
+
+def _binary(n=200, seed=0):
+    x, y = make_blobs(jax.random.PRNGKey(seed), n, DIM)
+    return np.asarray(x), np.asarray(y)
+
+
+def _multi(n=180, seed=1, classes=3):
+    x, y = make_blobs_multiclass(jax.random.PRNGKey(seed), n, DIM, classes)
+    return np.asarray(x), np.asarray(y)
+
+
+def _poison(st):
+    return jax.tree.map(
+        lambda l: l * jnp.nan if jnp.issubdtype(l.dtype, jnp.inexact) else l,
+        st)
+
+
+def test_guard_rolls_back_poisoned_chunk():
+    """A chunk program that poisons the state is rolled back wholesale: the
+    guarded run equals a run where that chunk program was the identity, and
+    the rollback is tallied at the chunk's stream position."""
+    x, y = _binary()
+    table = CFG.table()
+
+    def make_fn(poison_at):
+        calls = {"n": 0}
+
+        def fn(st, xc, yc):
+            calls["n"] += 1
+            new = train_chunk(CFG, table, st, xc, yc)
+            if calls["n"] == poison_at:
+                new = _poison(new)
+            return new
+        return fn
+
+    def make_skip_fn(skip_at):
+        calls = {"n": 0}
+
+        def fn(st, xc, yc):
+            calls["n"] += 1
+            if calls["n"] == skip_at:
+                return st                     # identity: chunk skipped
+            return train_chunk(CFG, table, st, xc, yc)
+        return fn
+
+    src = ArrayChunks(x, y, 40)
+    rep = ResilienceReport()
+    guarded = fit_stream(CFG, src, epochs=1, seed=7, chunk_fn=make_fn(3),
+                         guard_finite=True, report=rep)
+    want = fit_stream(CFG, src, epochs=1, seed=7, chunk_fn=make_skip_fn(3))
+    assert len(rep.rollbacks) == 1            # exactly the poisoned chunk
+    assert_state_parity(want, guarded, bitwise=True, context="rollback")
+    finite = [bool(np.isfinite(np.asarray(l)).all()) for l in guarded
+              if l is not None and np.issubdtype(np.asarray(l).dtype,
+                                                 np.floating)]
+    assert all(finite)
+
+
+def test_unguarded_poison_persists():
+    """The counterfactual: without the guard the same poisoned program DOES
+    leave NaN in the state — the guard is doing the work."""
+    x, y = _binary()
+    table = CFG.table()
+    calls = {"n": 0}
+
+    def fn(st, xc, yc):
+        calls["n"] += 1
+        new = train_chunk(CFG, table, st, xc, yc)
+        return _poison(new) if calls["n"] == 3 else new
+
+    st = fit_stream(CFG, ArrayChunks(x, y, 40), epochs=1, seed=7, chunk_fn=fn)
+    assert not np.isfinite(np.asarray(st.alpha)).all()
+
+
+def test_zero_fault_path_is_bitwise_pre_resilience():
+    """The full resilience stack on a clean source (empty schedule, retry,
+    guard, report) is bitwise the plain run, and the report stays empty —
+    the zero-fault acceptance gate of ISSUE 10."""
+    x, y = _binary(n=230)
+    plain = fit_stream(CFG, ArrayChunks(x, y, 37), epochs=2, seed=5)
+    rep = ResilienceReport()
+    armed = fit_stream(
+        CFG, FaultyChunks(ArrayChunks(x, y, 37), FaultSchedule()),
+        epochs=2, seed=5, retry=_POLICY, guard_finite=True, report=rep)
+    assert_state_parity(plain, armed, bitwise=True, context="zero-fault")
+    assert rep.as_dict() == {"retries": 0, "recovered": [], "quarantined": [],
+                             "rollbacks": [], "restarts": 0}
+
+
+def test_faulty_run_recovers_and_quarantines_bitwise_vs_skip():
+    """Transient faults recover bitwise; a fatal chunk quarantines and the
+    run equals the clean run over the surviving chunks (skip_chunks)."""
+    x, y = _binary(n=230)
+    faulty = FaultyChunks(
+        ArrayChunks(x, y, 37),
+        FaultSchedule(io_chunks=(1,), io_attempts=2, fatal_chunks=(4,)))
+    rep = ResilienceReport()
+    got = fit_stream(CFG, faulty, epochs=1, seed=9, retry=_POLICY, report=rep)
+    want = fit_stream(CFG, ArrayChunks(x, y, 37), epochs=1, seed=9,
+                      skip_chunks=(4,))
+    assert rep.quarantined_chunks() == [4]
+    assert rep.recovered == [(1, 2)]
+    assert_state_parity(want, got, bitwise=True, context="quarantine")
+
+
+def test_quarantine_composes_with_kill_and_resume(tmp_path):
+    """A faulty run killed mid-epoch and resumed from its checkpoint is
+    bitwise the uninterrupted faulty run — faults replay deterministically
+    because the schedule is pure in (seed, chunk_id)."""
+    x, y = _binary(n=230)
+
+    def src():
+        # fresh wrapper per run: attempt counters are in-process state
+        return FaultyChunks(
+            ArrayChunks(x, y, 37),
+            FaultSchedule(io_chunks=(0, 3), io_attempts=1, fatal_chunks=(5,)))
+
+    ref = fit_stream(CFG, src(), epochs=2, seed=5, retry=_POLICY)
+    ck = os.path.join(tmp_path, "ck")
+    fit_stream(CFG, src(), epochs=2, seed=5, retry=_POLICY, ckpt_dir=ck,
+               ckpt_every=2, max_chunks=9)       # hard kill mid-epoch-2
+    resumed = fit_stream(CFG, src(), epochs=2, seed=5, retry=_POLICY,
+                         ckpt_dir=ck, ckpt_every=2)
+    assert_state_parity(ref, resumed, bitwise=True, context="kill-resume")
+
+
+class _RecordingBank(ModelBank):
+    """Keep every published snapshot, not just the newest."""
+
+    def __init__(self):
+        super().__init__()
+        self.history = []
+
+    def publish(self, model):
+        self.history.append(model)
+        return super().publish(model)
+
+
+_CELLS = [
+    pytest.param(dict(solver="bsgd", maintenance="merge"), id="bsgd-merge"),
+    pytest.param(dict(solver="bsgd", maintenance="removal",
+                      use_kernel_cache=True), id="bsgd-removal-cache"),
+    pytest.param(dict(solver="bdca", maintenance="merge",
+                      use_kernel_cache=True), id="bdca-merge"),
+]
+
+
+@pytest.mark.parametrize("kw", _CELLS)
+def test_nan_rows_never_reach_servemodel(kw):
+    """The §16 serving property: NaN/Inf rows injected into ANY chunk — and
+    a chunk program forced through them — never surface in a published
+    ServeModel: every snapshot's exported leaves are finite, across
+    solver x maintenance cells."""
+    x, y = _multi()
+    cfg = MulticlassSVMConfig.create(3, budget=16, lambda_=1e-4, gamma=0.5,
+                                     batch_size=4, **kw)
+    for nan_chunk in (0, 2, 4):
+        bank = _RecordingBank()
+        rep = ResilienceReport()
+        faulty = FaultyChunks(
+            ArrayChunks(x, y, 36),
+            FaultSchedule(nan_chunks=(nan_chunk,), nan_rows=6))
+        st = fit_multiclass_stream(cfg, faulty, epochs=1, seed=3,
+                                   retry=_POLICY, guard_finite=True,
+                                   bank=bank, publish_every=1, report=rep)
+        assert len(bank.history) >= 5             # every chunk + final
+        for m in bank.history:
+            for name in ("sv_x", "alpha"):
+                leaf = np.asarray(getattr(m, name), np.float32)
+                assert np.isfinite(leaf).all(), \
+                    f"{name} non-finite with nan_chunk={nan_chunk}"
+        for leaf in (st.sv_x, st.alpha):
+            assert np.isfinite(np.asarray(leaf, np.float32)).all()
+
+
+def test_debug_invariants_validates_every_accepted_state():
+    """debug_invariants runs the I1-I3 checker per chunk (smoke: a clean run
+    passes), and the checker itself catches a corrupted cache."""
+    x, y = _binary()
+    cfg = BSGDConfig(budget=16, lambda_=1e-4, gamma=0.5, batch_size=4,
+                     use_kernel_cache=True)
+    st = fit_stream(cfg, ArrayChunks(x, y, 40), epochs=1, seed=2,
+                    guard_finite=True, debug_invariants=True)
+    check_invariants(st.kmat, st.sv_x, st.count, cfg.gamma)
+    bad = np.asarray(st.kmat).copy()
+    bad[0, 1] += 0.25                            # break I1 and I2
+    with pytest.raises(CacheInvariantError):
+        check_invariants(jnp.asarray(bad), st.sv_x, st.count, cfg.gamma)

@@ -1,0 +1,247 @@
+"""Fault injection + retry/quarantine (ISSUE 10 tentpole, ingest layer):
+
+  * ``FaultSchedule`` decisions are pure in ``(seed, chunk_id)`` — bitwise
+    repeatable under repeated, out-of-order and prefetched loads;
+  * ``load_chunk_with_retry`` recovers transient IO errors, stalls and
+    truncated reads with bounded backoff, quarantines on exhaustion or
+    persistent corruption, and propagates genuine bugs unchanged;
+  * quarantine is a SKIP: the surviving chunk sequence of an epoch with a
+    quarantined chunk is bitwise the sequence of an epoch where that chunk
+    never existed (``skip_chunks`` constructs the comparison run).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.data import (ArrayChunks, ChunkQuarantined, CorruptChunkError,
+                        FaultSchedule, FaultyChunks, PrefetchChunks,
+                        ResilienceReport, RetryPolicy, TrainerCrash,
+                        TransientIOError, TruncatedChunkError, iter_epoch,
+                        load_chunk_with_retry)
+
+_NO_SLEEP = lambda s: None   # noqa: E731 — tests never pay real backoff
+
+
+def _data(n=96, d=6, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    y = np.where(rng.random(n) < 0.5, 1.0, -1.0).astype(np.float32)
+    return x, y
+
+
+def _fast_policy(max_attempts=3):
+    return RetryPolicy(max_attempts=max_attempts, base_delay_s=0.0,
+                       max_delay_s=0.0)
+
+
+def test_fault_schedule_pure_in_seed_and_chunk():
+    sched = FaultSchedule(seed=7, p_io=0.5, p_stall=0.3, p_truncate=0.3,
+                          p_nan=0.3)
+    for cid in range(20):
+        a = sched.for_chunk(cid)
+        b = FaultSchedule(seed=7, p_io=0.5, p_stall=0.3, p_truncate=0.3,
+                          p_nan=0.3).for_chunk(cid)
+        assert a == b                       # pure: no instance state involved
+    plans = [sched.for_chunk(c) for c in range(64)]
+    other = [FaultSchedule(seed=8, p_io=0.5, p_stall=0.3, p_truncate=0.3,
+                           p_nan=0.3).for_chunk(c) for c in range(64)]
+    assert plans != other                   # the seed matters
+    assert any(p.any for p in plans) and not all(p.any for p in plans)
+
+
+def test_fault_schedule_explicit_chunks_force_faults():
+    sched = FaultSchedule(seed=0, io_chunks=(3,), io_attempts=2,
+                          stall_chunks=(4,), truncate_chunks=(5,),
+                          nan_chunks=(6,), fatal_chunks=(7,),
+                          crash_chunks=(8,))
+    assert sched.for_chunk(3).io_attempts == 2
+    assert sched.for_chunk(4).stall_s > 0
+    assert sched.for_chunk(5).truncate
+    assert sched.for_chunk(6).nan
+    assert sched.for_chunk(7).fatal
+    assert sched.for_chunk(8).crash
+    assert not sched.for_chunk(0).any       # all p_* are 0: clean elsewhere
+
+
+def test_transient_io_recovers_bitwise():
+    x, y = _data()
+    clean = ArrayChunks(x, y, 32)
+    src = FaultyChunks(ArrayChunks(x, y, 32),
+                       FaultSchedule(io_chunks=(1,), io_attempts=2))
+    rep = ResilienceReport()
+    xb, yb = load_chunk_with_retry(src, 1, _fast_policy(3), report=rep,
+                                   expected_rows=32, dim=6, sleep=_NO_SLEEP)
+    xa, ya = clean.load(1)
+    np.testing.assert_array_equal(xb, xa)   # recovery is bitwise
+    np.testing.assert_array_equal(yb, ya)
+    assert rep.retries == 2
+    assert rep.recovered == [(1, 2)]
+    assert src.attempts(1) == 3
+
+
+def test_nan_poisoning_is_deterministic():
+    x, y = _data()
+    sched = FaultSchedule(seed=3, nan_chunks=(2,), nan_rows=6)
+    src = FaultyChunks(ArrayChunks(x, y, 32), sched)
+    xa, _ = src.load(2)
+    xb, _ = src.load(2)
+    np.testing.assert_array_equal(xa, xb)   # pure in (seed, chunk_id)
+    bad = ~np.isfinite(xa).all(axis=1)
+    assert bad.sum() == 6
+    assert np.isnan(xa).any() and np.isinf(xa).any()
+    xc, _ = src.load(0)                     # other chunks untouched
+    np.testing.assert_array_equal(xc, x[:32])
+
+
+def test_truncated_read_detected_and_recovered():
+    x, y = _data()
+    src = FaultyChunks(ArrayChunks(x, y, 32),
+                       FaultSchedule(truncate_chunks=(0,)))
+    xs, ys = src.load(0)                    # raw wrapper: short first read
+    assert xs.shape[0] == 16 and ys.shape[0] == 16
+    src2 = FaultyChunks(ArrayChunks(x, y, 32),
+                        FaultSchedule(truncate_chunks=(0,)))
+    rep = ResilienceReport()
+    xr, _ = load_chunk_with_retry(src2, 0, _fast_policy(3), report=rep,
+                                  expected_rows=32, dim=6, sleep=_NO_SLEEP)
+    np.testing.assert_array_equal(xr, x[:32])
+    assert rep.retries == 1 and rep.recovered == [(0, 1)]
+
+
+def test_io_plus_truncate_compose():
+    """Truncation fires on the first OTHERWISE-successful read, so it still
+    bites after the transient IO attempts clear."""
+    x, y = _data()
+    src = FaultyChunks(ArrayChunks(x, y, 32),
+                       FaultSchedule(io_chunks=(0,), io_attempts=1,
+                                     truncate_chunks=(0,)))
+    xr, _ = load_chunk_with_retry(src, 0, _fast_policy(4), expected_rows=32,
+                                  dim=6, sleep=_NO_SLEEP)
+    np.testing.assert_array_equal(xr, x[:32])
+    assert src.attempts(0) == 3             # io fail, short read, full read
+
+
+def test_retry_exhaustion_quarantines():
+    x, y = _data()
+    src = FaultyChunks(ArrayChunks(x, y, 32),
+                       FaultSchedule(io_chunks=(1,), io_attempts=99))
+    rep = ResilienceReport()
+    with pytest.raises(ChunkQuarantined) as ei:
+        load_chunk_with_retry(src, 1, _fast_policy(2), report=rep,
+                              sleep=_NO_SLEEP)
+    assert ei.value.chunk_id == 1 and ei.value.attempts == 2
+    assert isinstance(ei.value.cause, TransientIOError)
+    assert rep.retries == 2                 # both attempts tallied
+    assert rep.quarantined == []            # tallied by the skipping caller
+
+
+def test_fatal_chunk_quarantines_immediately():
+    x, y = _data()
+    src = FaultyChunks(ArrayChunks(x, y, 32),
+                       FaultSchedule(fatal_chunks=(2,)))
+    with pytest.raises(ChunkQuarantined) as ei:
+        load_chunk_with_retry(src, 2, _fast_policy(5), sleep=_NO_SLEEP)
+    assert ei.value.attempts == 1           # no retry budget burned
+    assert isinstance(ei.value.cause, CorruptChunkError)
+    assert src.attempts(2) == 1
+
+
+def test_unknown_exception_propagates_unchanged():
+    class Bug(ArrayChunks):
+        def load(self, i):
+            raise KeyError("a genuine bug, not an IO fault")
+
+    x, y = _data()
+    with pytest.raises(KeyError):
+        load_chunk_with_retry(Bug(x, y, 32), 0, _fast_policy(5),
+                              sleep=_NO_SLEEP)
+
+
+def test_trainer_crash_propagates_and_clears_on_restart():
+    x, y = _data()
+    src = FaultyChunks(ArrayChunks(x, y, 32),
+                       FaultSchedule(crash_chunks=(1,)))
+    with pytest.raises(TrainerCrash):
+        load_chunk_with_retry(src, 1, _fast_policy(3), sleep=_NO_SLEEP)
+    # the restarted trainer (same process, same wrapper) gets past it
+    xr, _ = load_chunk_with_retry(src, 1, _fast_policy(3), expected_rows=32,
+                                  dim=6, sleep=_NO_SLEEP)
+    np.testing.assert_array_equal(xr, x[32:64])
+
+
+def test_backoff_is_exponential_and_clipped():
+    pol = RetryPolicy(max_attempts=6, base_delay_s=0.01, max_delay_s=0.05)
+    assert [pol.delay_s(a) for a in range(5)] == \
+        [0.01, 0.02, 0.04, 0.05, 0.05]
+    slept = []
+    src = FaultyChunks(ArrayChunks(*_data(), 32),
+                       FaultSchedule(io_chunks=(0,), io_attempts=3))
+    load_chunk_with_retry(src, 0, RetryPolicy(max_attempts=4,
+                                              base_delay_s=0.01,
+                                              max_delay_s=0.02),
+                          expected_rows=32, sleep=slept.append)
+    assert slept == [0.01, 0.02, 0.02]      # one backoff per failed attempt
+    with pytest.raises(ValueError):
+        RetryPolicy(max_attempts=0)
+
+
+@pytest.mark.parametrize("prefetch", [0, 2])
+def test_quarantine_equals_skip_chunks_bitwise(prefetch, watchdog):
+    """The tentpole equivalence: an epoch that QUARANTINES chunk q yields a
+    surviving (position, x, y) sequence bitwise identical to an epoch where
+    q is skipped up front — with and without the prefetch worker."""
+    watchdog(120)
+    x, y = _data(n=160)
+    key = jax.random.PRNGKey(5)
+    clean = ArrayChunks(x, y, 32)
+    faulty = FaultyChunks(ArrayChunks(x, y, 32),
+                          FaultSchedule(fatal_chunks=(3,), io_chunks=(1,),
+                                        io_attempts=1))
+    rep = ResilienceReport()
+    got = list(iter_epoch(faulty, key, retry=_fast_policy(3), report=rep,
+                          prefetch=prefetch))
+    want = list(iter_epoch(clean, key, skip_chunks=(3,)))
+    assert [p for p, _, _ in got] == [p for p, _, _ in want]
+    for (_, xa, ya), (_, xb, yb) in zip(got, want):
+        np.testing.assert_array_equal(xa, xb)
+        np.testing.assert_array_equal(ya, yb)
+    assert rep.quarantined_chunks() == [3]  # counted exactly once
+    assert rep.recovered == [(1, 1)]        # the io fault recovered
+
+
+def test_iter_epoch_without_retry_is_the_old_path():
+    """retry=None (the default): any load failure propagates — the clean
+    path has no quarantine semantics bolted on."""
+    x, y = _data()
+    faulty = FaultyChunks(ArrayChunks(x, y, 32),
+                          FaultSchedule(fatal_chunks=(0,)))
+    with pytest.raises(CorruptChunkError):
+        list(iter_epoch(faulty, jax.random.PRNGKey(0)))
+
+
+def test_iter_epoch_retry_on_prefetch_worker(watchdog):
+    """With a plan, retries run on the worker (the consumer never sees the
+    transient error) and the stream is bitwise the clean sync epoch."""
+    watchdog(120)
+    x, y = _data(n=160)
+    key = jax.random.PRNGKey(1)
+    faulty = FaultyChunks(ArrayChunks(x, y, 32),
+                          FaultSchedule(io_chunks=(0, 2), io_attempts=2,
+                                        stall_chunks=(1,), stall_s=0.001))
+    rep = ResilienceReport()
+    got = list(iter_epoch(faulty, key, retry=_fast_policy(3), report=rep,
+                          prefetch=2))
+    want = list(iter_epoch(ArrayChunks(x, y, 32), key))
+    assert [p for p, _, _ in got] == [p for p, _, _ in want]
+    for (_, xa, _), (_, xb, _) in zip(got, want):
+        np.testing.assert_array_equal(xa, xb)
+    assert sorted(rep.recovered) == [(0, 2), (2, 2)]
+
+
+def test_prefetch_wrapper_mirrors_geometry():
+    x, y = _data()
+    src = FaultyChunks(ArrayChunks(x, y, 32), FaultSchedule())
+    assert src.chunk_lens == [32, 32, 32]
+    assert src.dim == 6 and src.n_chunks == 3 and src.n_rows == 96
+    pre = PrefetchChunks(src, depth=2, retry=_fast_policy(3))
+    assert pre.chunk_lens == src.chunk_lens and pre.dim == src.dim

@@ -348,3 +348,54 @@ def test_drift_chunks_validation():
         mean_shift_schedule(4, 5, kind="exp")
     with pytest.raises(ValueError):
         mean_shift_schedule(4, 5, direction=np.ones(3))
+
+
+def test_prefetch_cancel_then_plan_reuses_cleanly(watchdog):
+    """cancel(wait=True) then plan() on the SAME wrapper: the second epoch
+    streams bitwise-correct blocks and leaves no stray worker (§16 pin)."""
+    watchdog(120)
+    x, y = _data(n=60)
+    src = ArrayChunks(x, y, 12)
+    pre = PrefetchChunks(src, depth=2)
+    try:
+        pre.plan([0, 1, 2, 3, 4])
+        pre.load(0)                      # consume partially, then abandon
+        pre.cancel(wait=True)
+        assert _prefetch_threads() == []
+        pre.plan([4, 2, 0])              # reuse: fresh plan, fresh worker
+        for cid in (4, 2, 0):
+            xp, yp = pre.load(cid)
+            xs, ys = src.load(cid)
+            np.testing.assert_array_equal(xp, xs)
+            np.testing.assert_array_equal(yp, ys)
+    finally:
+        pre.close()
+    assert _prefetch_threads() == []
+    # cancel() on a never-planned / already-cancelled wrapper is a no-op
+    pre.cancel(wait=True)
+    pre.cancel()
+
+
+def test_prefetch_worker_death_retries_and_resumes_bitwise(watchdog):
+    """A load that dies on the prefetch worker mid-epoch is retried THERE,
+    and the consumer-visible stream is bitwise the clean synchronous epoch
+    (worker-death -> retry -> bitwise-resume, DESIGN.md §16)."""
+    watchdog(120)
+    from repro.data import (FaultSchedule, FaultyChunks, ResilienceReport,
+                            RetryPolicy)
+
+    x, y = _data(n=96)
+    key = jax.random.PRNGKey(3)
+    clean = list(iter_epoch(ArrayChunks(x, y, 16), key))
+    faulty = FaultyChunks(ArrayChunks(x, y, 16),
+                          FaultSchedule(io_chunks=(1, 4), io_attempts=2))
+    rep = ResilienceReport()
+    pol = RetryPolicy(max_attempts=3, base_delay_s=0.0, max_delay_s=0.0)
+    got = list(iter_epoch(faulty, key, prefetch=2, retry=pol, report=rep))
+    assert [p for p, _, _ in got] == [p for p, _, _ in clean]
+    for (_, xa, ya), (_, xb, yb) in zip(got, clean):
+        np.testing.assert_array_equal(xa, xb)
+        np.testing.assert_array_equal(ya, yb)
+    assert sorted(rep.recovered) == [(1, 2), (4, 2)]   # recovered on worker
+    assert faulty.attempts(1) == 3 and faulty.attempts(4) == 3
+    assert _prefetch_threads() == []

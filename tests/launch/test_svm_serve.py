@@ -177,3 +177,40 @@ def test_serve_cli_from_stream_checkpoint(subprocess_env, tmp_path):
     assert serve.returncode == 0, f"{serve.stdout}\n{serve.stderr}"
     assert "queue == direct predict (bitwise)" in serve.stdout
     assert "loaded" in serve.stdout and "C=4" in serve.stdout
+
+
+def test_live_supervisor_restarts_crashed_trainer(watchdog):
+    """The §16 supervisor drill, in process: a crash-once chunk kills the
+    trainer mid-run — serving stays up on the last published bank version,
+    the supervisor restarts the trainer from the latest verifiable
+    checkpoint, a fatal shard quarantines, and the run still finishes with
+    a finite final snapshot and the usual serve stats."""
+    watchdog(600)
+    from repro.data import FaultSchedule
+    from repro.launch.serve import serve_svm_live
+
+    faults = FaultSchedule(seed=0, io_chunks=(1,), io_attempts=1,
+                           crash_chunks=(5,), fatal_chunks=(6,))
+    result = serve_svm_live(train_rows=1024, chunk_rows=128, epochs=2,
+                            publish_every=2, budget=16, rows=512,
+                            max_batch=64, verbose=False, faults=faults,
+                            max_restarts=2)
+    assert result["restarts"] >= 1                # the crash was supervised
+    assert 6 in result["quarantined"]             # the fatal shard skipped
+    assert result["retries"] >= 1                 # the io fault retried
+    assert result["final_version"] >= 2           # mid-run publishes happened
+    assert result["rows"] == 512                  # every request served
+
+
+def test_serve_cli_live_chaos_smoke(subprocess_env):
+    """``serve --arch svm_bsgd --smoke --live --faults 0``: the chaos drill
+    through the CLI — the run must survive injected faults and report the
+    resilience tally with a finite final snapshot."""
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--arch", "svm_bsgd",
+         "--smoke", "--live", "--faults", "0"],
+        capture_output=True, text=True, timeout=900,
+        env=subprocess_env(n_devices=1))
+    assert proc.returncode == 0, f"{proc.stdout}\n{proc.stderr}"
+    assert "resilience:" in proc.stdout
+    assert "final snapshot finite" in proc.stdout
